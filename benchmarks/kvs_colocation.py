@@ -1,0 +1,85 @@
+"""Paper Fig. 5/6/7 + Table 1 — FlexKVS (LS) colocated with BE apps.
+
+Workloads (paper Table 1, scaled 4 pages ~ 1 GB):
+  FlexKVS  320 GB ws, 23% hot keys, 16 KB values, t_miss=0.1  (LS)
+  GUPS     256 GB uniform random update                        (BE)
+  GapBS    128 GB betweenness centrality (skewed)              (BE)
+  NPB BT   180 GB block tri-diagonal solver (streaming, heavy) (BE)
+
+Systems: MaxMem (dynamic QoS) / HeMem (static partition sized to the hot
+set = upper bound) / AutoNUMA / 2LM (no QoS). Metrics: FlexKVS p50/p90/p99
+latency + throughput; MaxMem's fast-memory footprint vs HeMem's partition.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    FAST_PAGES,
+    Rows,
+    make_2lm,
+    make_autonuma,
+    make_hemem,
+    make_maxmem,
+)
+from repro.core.simulator import OPTANE, ColocationSim, WorkloadSpec
+
+KVS = dict(n_pages=1280, threads=4, sets=((0.23, 0.9),), value_bytes=16384)
+BE_APPS = {
+    "gups": WorkloadSpec("be", n_pages=1024, t_miss=1.0, threads=8),
+    "gapbs": WorkloadSpec("be", n_pages=512, t_miss=1.0, threads=8,
+                          sets=((0.2, 0.7),)),
+    "bt": WorkloadSpec("be", n_pages=720, t_miss=1.0, threads=8,
+                       value_bytes=4096),  # vector loads: bandwidth-heavy
+}
+
+
+def _run(backend, be_spec, epochs=140, seed=3):
+    sim = ColocationSim(backend, OPTANE, seed=seed)
+    sim.add_tenant(WorkloadSpec("kvs", t_miss=0.1, **KVS))
+    sim.add_tenant(be_spec)
+    sim.run(epochs)
+    tail = sim.history[-15:]
+    mean = lambda f: float(np.mean([f(r) for r in tail]))
+    return {
+        "tput": mean(lambda r: r.throughput["kvs"]),
+        "p50": mean(lambda r: r.p50["kvs"]) * 1e6,
+        "p90": mean(lambda r: r.p90["kvs"]) * 1e6,
+        "p99": mean(lambda r: r.p99["kvs"]) * 1e6,
+        "fmmr": mean(lambda r: r.fmmr_true["kvs"]),
+        "fast": mean(lambda r: r.fast_pages["kvs"]),
+    }
+
+
+def run() -> Rows:
+    rows = Rows()
+    hot_pages = int(0.23 * KVS["n_pages"])  # 294: HeMem partition fits it
+    for be_name, be_spec in BE_APPS.items():
+        mm = _run(make_maxmem(), be_spec)
+        he = _run(make_hemem({0: hot_pages + 32, 1: FAST_PAGES - hot_pages - 32}
+                             ), be_spec)
+        an = _run(make_autonuma(), be_spec)
+        lm = _run(make_2lm(), be_spec)
+        for sysname, r in [("maxmem", mm), ("hemem", he), ("autonuma", an), ("2lm", lm)]:
+            rows.add(
+                f"fig5_7_kvs_{be_name}_{sysname}", 0.0,
+                f"tput={r['tput']:.0f};p50us={r['p50']:.1f};p90us={r['p90']:.1f};"
+                f"p99us={r['p99']:.1f};fmmr={r['fmmr']:.3f};fast_pages={r['fast']:.0f}",
+            )
+        # p90 isolates the hot set (paper §5.2: "90th percentile latencies
+        # show how well the hot set is isolated"); p99 saturates to the
+        # contended slow path for EVERY system under the BT co-runner (also
+        # per the paper), so compare it with a 5% tolerance.
+        rows.add(
+            f"fig5_7_claim_{be_name}_qos", 0.0,
+            f"maxmem_p90_le_autonuma={mm['p90'] <= an['p90']};"
+            f"maxmem_p99_le_autonuma={mm['p99'] <= an['p99'] * 1.05};"
+            f"maxmem_p99_le_2lm={mm['p99'] <= lm['p99'] * 1.05};"
+            f"maxmem_vs_hemem_tput={mm['tput'] / max(he['tput'], 1):.3f};"
+            f"maxmem_fast_vs_hemem_partition={mm['fast'] / (hot_pages + 32):.3f}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run().print()

@@ -1,0 +1,90 @@
+"""Micro-benchmarks: wall time of the hot MaxMem primitives on this host.
+
+(The CPU numbers are not TPU performance claims — they document the
+policy-path costs, which are host-side even in deployment: one policy epoch
+at production page counts must be << the epoch period.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.core import policy
+from repro.core.types import PageState, PolicyParams, TenantState, TIER_FAST, TIER_SLOW
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hot_bins import hot_bins
+from repro.kernels.page_copy import page_move
+from repro.kernels.paged_attention import paged_attention
+
+
+def _time(fn, n=10, warmup=2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> Rows:
+    rows = Rows()
+    rng = np.random.default_rng(0)
+
+    # policy epoch at production scale: 64k pages (128 GB @ 2 MB), 16 tenants
+    P, T, R = 65536, 16, 2048
+    pages = PageState.create(P)._replace(
+        owner=jnp.asarray(rng.integers(0, T, P), jnp.int32),
+        tier=jnp.asarray(np.where(rng.random(P) < 0.25, TIER_FAST, TIER_SLOW), jnp.int8),
+    )
+    tenants = TenantState.create(T)._replace(
+        active=jnp.ones((T,), bool),
+        t_miss=jnp.asarray(rng.uniform(0.05, 1.0, T), jnp.float32),
+        arrival=jnp.arange(T, dtype=jnp.int32),
+    )
+    params = PolicyParams(
+        fast_capacity=jnp.int32(P // 4), migration_budget=jnp.int32(R),
+        sample_period=jnp.int32(100),
+    )
+    sampled = jnp.asarray(rng.poisson(2, P), jnp.uint32)
+    us = _time(lambda: policy.policy_epoch(
+        pages, tenants, sampled, params, max_tenants=T, plan_size=R))
+    rows.add("micro_policy_epoch_64k_pages", us, f"pages={P};tenants={T};budget={R}")
+
+    # hot_bins kernel (interpret mode)
+    ids = jnp.asarray(rng.integers(0, 4096, 2048), jnp.int32)
+    cin = jnp.zeros((4096,), jnp.int32)
+    us = _time(lambda: hot_bins(ids, cin, tile=512))
+    rows.add("micro_hot_bins_4k_pages_2k_samples", us, "tile=512")
+
+    # page_copy kernel: 64 x 0.5 MB pages
+    pool = jnp.asarray(rng.normal(size=(256, 131072)), jnp.float32)
+    sid = jnp.asarray(rng.choice(256, 64, replace=False), jnp.int32)
+    did = jnp.asarray(rng.choice(256, 64, replace=False), jnp.int32)
+    us = _time(lambda: page_move(jnp.copy(pool), sid, did), n=5)
+    rows.add("micro_page_move_64x512KB", us, "bytes=" + str(64 * 131072 * 4))
+
+    # flash attention kernel (interpret)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+    us = _time(lambda: flash_attention(q, k, v, q_blk=128, kv_blk=128), n=5)
+    rows.add("micro_flash_attn_512_interpret", us, "B1_h4_dh64")
+
+    # paged attention kernel (interpret)
+    kp = jax.random.normal(ks[1], (64, 16, 2, 64), jnp.float32)
+    vp = jax.random.normal(ks[2], (64, 16, 2, 64), jnp.float32)
+    qd = jax.random.normal(ks[0], (4, 4, 64), jnp.float32)
+    tables = jnp.asarray(rng.integers(0, 64, (4, 8)), jnp.int32)
+    lens = jnp.asarray([128, 96, 64, 32], jnp.int32)
+    us = _time(lambda: paged_attention(qd, kp, vp, tables, lens), n=5)
+    rows.add("micro_paged_attn_interpret", us, "B4_pages8x16")
+    return rows
+
+
+if __name__ == "__main__":
+    run().print()

@@ -1,0 +1,55 @@
+"""Roofline table: reads results/dryrun/*.json (produced by launch.dryrun)
+and emits the per-(arch x shape x mesh) three-term roofline rows."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import Rows
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(sub: str) -> List[Dict]:
+    d = os.path.join(RESULTS_DIR, sub)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            with open(os.path.join(d, fn)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def run() -> Rows:
+    rows = Rows()
+    for sub in ("singlepod", "multipod"):
+        cells = load_cells(sub)
+        if not cells:
+            rows.add(f"roofline_{sub}_missing", 0.0,
+                     "run `python -m repro.launch.dryrun --all [--multi-pod]` first")
+            continue
+        for c in cells:
+            r = c["roofline"]
+            rows.add(
+                f"roofline_{sub}_{c['arch']}_{c['shape']}",
+                r["step_time_lower_bound_s"] * 1e6,
+                f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+                f"collective_s={r['collective_s']:.3e};dominant={r['dominant']};"
+                f"useful={r['useful_ratio']:.3f};frac={r['roofline_fraction']:.4f};"
+                f"flops_dev={c['flops_per_device']:.3e};bytes_dev={c['bytes_per_device']:.3e};"
+                f"coll_B={c['collective_bytes_total']:.3e}",
+            )
+        n_dom = {}
+        for c in cells:
+            d = c["roofline"]["dominant"]
+            n_dom[d] = n_dom.get(d, 0) + 1
+        rows.add(f"roofline_{sub}_summary", 0.0,
+                 f"cells={len(cells)};dominant_counts={n_dom}")
+    return rows
+
+
+if __name__ == "__main__":
+    run().print()

@@ -1,0 +1,45 @@
+"""Quickstart: MaxMem in 40 lines.
+
+Two tenants share a small tiered memory; the latency-sensitive one (target
+FMMR 0.1) pulls its hot pages into the fast tier, the best-effort one
+(target 1.0) donates. Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import CentralManager, TIER_FAST
+
+mgr = CentralManager(
+    num_pages=256,          # total tiered memory (pages)
+    fast_capacity=64,       # DRAM/HBM-analogue
+    migration_budget=16,    # pages per policy epoch (the paper's 4 GB/s cap)
+    sample_period=1,        # exact access accounting for the demo
+    exact_sampling=True,
+)
+
+ls = mgr.register(t_miss=0.1)   # latency-sensitive tenant
+be = mgr.register(t_miss=1.0)   # best-effort tenant
+
+be_pages = mgr.allocate(be, 96)  # arrives first, grabs the fast tier
+ls_pages = mgr.allocate(ls, 96)
+
+rng = np.random.default_rng(0)
+hot = ls_pages[:32]  # the LS tenant hammers 1/3 of its pages
+
+print(f"{'epoch':>5} {'LS fmmr':>8} {'LS fast pages':>14} {'BE fast pages':>14}")
+for epoch in range(25):
+    counts = np.zeros(mgr.num_pages, np.int64)
+    counts[hot] += 900          # 90% of LS accesses -> hot set
+    counts[ls_pages] += 10
+    counts[be_pages] += 50      # uniform BE traffic
+    mgr.record_access(counts)
+    mgr.run_epoch()
+    if epoch % 4 == 0 or epoch == 24:
+        print(f"{epoch:>5} {mgr.fmmr_of(ls):>8.3f} {mgr.fast_pages_of(ls):>14} "
+              f"{mgr.fast_pages_of(be):>14}")
+
+hot_fast = (mgr.tier_of(hot) == TIER_FAST).mean()
+print(f"\nLS hot set resident in fast tier: {hot_fast:.0%}")
+assert mgr.fmmr_of(ls) <= 0.12, "QoS target missed!"
+print("QoS target met: a_miss <= t_miss  ✓")

@@ -1,0 +1,23 @@
+"""Train a (reduced) model end to end with checkpoint/restart.
+
+Runs 60 steps of the qwen2.5-3b smoke config on CPU, kills the run at step
+30, restores from the async checkpoint, and finishes — demonstrating the
+fault-tolerance path. On a TPU slice drop --smoke for the full config and
+add --mesh prod.
+
+    PYTHONPATH=src python examples/train_small.py
+"""
+import subprocess
+import sys
+import tempfile
+
+if __name__ == "__main__":
+    d = tempfile.mkdtemp(prefix="repro_ckpt_")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch", "qwen2.5-3b",
+            "--smoke", "--batch", "4", "--seq", "32", "--ckpt-dir", d,
+            "--ckpt-every", "15", "--log-every", "5"]
+    print("=== phase 1: train to step 30 (then 'crash') ===")
+    subprocess.run(base + ["--steps", "30"], check=True)
+    print("\n=== phase 2: restart from checkpoint, finish to step 60 ===")
+    subprocess.run(base + ["--steps", "60", "--resume"], check=True)
+    print("\ncheckpoint/restart cycle complete ✓")

@@ -1,0 +1,146 @@
+"""Per-instruction cost attribution — the dry-run 'profiler'.
+
+Walks the module like hlo_cost but keeps (computation, instruction, kind,
+metadata op_name) per contribution, multiplied by enclosing loop trip counts.
+This is how §Perf picks what to attack: no wall-clock trace exists on this
+host, so the lowered IR is the profile (per the Pallas-specific hints).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.analysis import hlo_cost as H
+
+
+@dataclass
+class Contribution:
+    comp: str
+    instr: str
+    kind: str
+    op_name: str
+    flops: float
+    bytes: float
+    coll_bytes: float
+    rtype: str = ""
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _opname(attrs: str) -> str:
+    m = _OPNAME_RE.search(attrs)
+    return m.group(1)[-110:] if m else ""
+
+
+def attribute(hlo_text: str) -> List[Contribution]:
+    comps, entry = H.parse_module(hlo_text)
+    out: List[Contribution] = []
+
+    def walk(comp_name: str, mult: float, in_fusion: bool):
+        comp = comps[comp_name]
+        for ins in comp.instrs:
+            kind = ins.kind
+            base = kind[:-6] if kind.endswith("-start") else kind
+            fl = by = cb = 0.0
+            if base == "dot":
+                fl = H._dot_flops(ins, comp)
+            elif base == "convolution":
+                fl = H._conv_flops(ins, comp)
+            if base in H.COLLECTIVE_KINDS and not kind.endswith("-done"):
+                _, cb = H.shape_elems_bytes(ins.result_type)
+            if base == "while":
+                body = H._called(ins.attrs, "body")
+                trip = H._trip_count(ins, comps)
+                if body in comps:
+                    walk(body, mult * trip, in_fusion)
+                continue
+            if base == "fusion":
+                called = H._called(ins.attrs, "calls")
+                if called in comps:
+                    walk(called, mult, True)
+                    if not in_fusion:
+                        by = H._fusion_bytes(comps[called])
+                if fl or by or cb:
+                    out.append(Contribution(comp_name, ins.name, base,
+                                            _opname(ins.attrs), fl * mult,
+                                            by * mult, cb * mult,
+                                            ins.result_type[:48]))
+                continue
+            if not in_fusion:
+                _, rb = H.shape_elems_bytes(ins.result_type)
+                if base in H._BYTES_OPS_FULL:
+                    ob = sum(
+                        H.shape_elems_bytes(comp.types.get(op, ""))[1]
+                        for op in ins.operand_names
+                    )
+                    by = rb + ob
+                elif base in H._BYTES_OPS_RESULT_ONLY:
+                    by = 2 * rb
+                elif base in H._BYTES_OPS_UPDATE:
+                    if len(ins.operand_names) > 1:
+                        _, ub = H.shape_elems_bytes(
+                            comp.types.get(ins.operand_names[1], "")
+                        )
+                        by = 2 * ub
+            if fl or by or cb:
+                out.append(Contribution(comp_name, ins.name, base,
+                                        _opname(ins.attrs), fl * mult,
+                                        by * mult, cb * mult,
+                                        ins.result_type[:48]))
+
+    if entry:
+        walk(entry, 1.0, False)
+    return out
+
+
+def top(contribs: List[Contribution], key: str = "bytes", n: int = 15):
+    rows = sorted(contribs, key=lambda c: -getattr(c, key))[:n]
+    total = sum(getattr(c, key) for c in contribs)
+    print(f"--- top {n} by {key} (total {total:.3e}) ---")
+    for c in rows:
+        print(
+            f"{getattr(c, key):>12.3e}  {c.kind:18s} {c.instr[:26]:28s} "
+            f"{c.rtype:40s} {c.op_name[-70:]}"
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Kernel-adjusted memory term (§Perf): the XLA attention path materializes
+# score/probability tensors (shape [..., q_blk, kv_blk] and their stacked
+# residuals); the Pallas flash kernel (kernels/flash_attention.py, validated
+# vs ref) keeps them in VMEM. This pass removes those contributions and adds
+# the kernel's true HBM traffic, giving the deploy-with-kernel memory term.
+# Clearly a MODEL, labeled as such in EXPERIMENTS.md.
+# ---------------------------------------------------------------------------
+def kernel_adjusted_bytes(
+    contribs: List[Contribution],
+    cfg,
+    shape,
+    n_chips: int,
+    q_blk: int = 512,
+    kv_blk: int = 1024,
+) -> Tuple[float, float]:
+    """Returns (xla_bytes, kernel_adjusted_bytes) per device."""
+    import re as _re
+
+    pat = _re.compile(rf"\[(?:\d+,)*{q_blk},{kv_blk}\]")
+    total = sum(c.bytes for c in contribs)
+    attn_chain = sum(c.bytes for c in contribs if pat.search(c.rtype))
+    # flash kernel HBM traffic per layer (bf16): fwd reads q,k,v + writes o;
+    # bwd reads q,k,v,o,do + writes dq,dk,dv; remat re-reads q,k,v.
+    B, S = shape.global_batch, shape.seq_len
+    heads_local = max(cfg.num_heads // 16, 1)  # model axis 16
+    kv_local = max(cfg.num_kv_heads // 16, 1)
+    dh = cfg.d_head
+    dp = n_chips // 16
+    per_tensor_q = B * S * heads_local * dh * 2 / dp
+    per_tensor_kv = B * S * kv_local * dh * 2 / dp
+    fwd = 1 * per_tensor_q + 2 * per_tensor_kv + per_tensor_q  # q,k,v -> o
+    bwd = 2 * per_tensor_q + 2 * per_tensor_kv + 2 * per_tensor_q + 3 * per_tensor_kv
+    remat = fwd
+    L_attn = cfg.attn_invocations if cfg.family == "hybrid" else cfg.num_layers
+    kernel_traffic = (fwd + bwd + remat) * L_attn
+    return total, total - attn_chain + kernel_traffic

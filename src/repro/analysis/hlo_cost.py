@@ -1,0 +1,379 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes/collectives by ~num_layers x
+(verified empirically; see EXPERIMENTS.md §Dry-run). This module re-derives
+totals from the optimized HLO text with loop semantics:
+
+  cost(computation) = sum over instructions of
+      dot/conv FLOPs (operand shapes resolved via a per-computation symbol
+      table + contracting dims)
+    + fusion        -> FLOPs of the called computation; HBM bytes are the
+                       fusion wrapper's operands+result (internals stay in
+                       registers/VMEM)
+    + while         -> trip_count * cost(body); trip count from the
+                       backend_config known_trip_count (scans always carry
+                       it), falling back to the cond's compare constant
+    + collectives   -> result bytes per kind (x trip inside loops)
+    + HBM bytes for materializing ops (operands + result)
+
+Approximations (documented in EXPERIMENTS.md):
+  * conv FLOPs = result_elems * 2 * prod(kernel_spatial) * Cin/groups
+  * unparseable trip counts default to 1 (conservative)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ops whose operands+result all cross HBM. Bare elementwise ops (add, mul,
+# convert, ...) are EXCLUDED: on the TPU target they fuse into neighbors;
+# counting the CPU backend's unfused forms would overstate the memory term.
+_BYTES_OPS_FULL = {
+    "fusion", "dot", "convolution", "copy", "reduce", "sort",
+    "concatenate", "pad", "transpose", "reverse", "select-and-scatter",
+    "reduce-window", "cholesky", "triangular-solve", "fft", "rng",
+    "custom-call",
+} | set(COLLECTIVE_KINDS)
+# slicing ops touch only the sliced region, not the full operand
+_BYTES_OPS_RESULT_ONLY = {"dynamic-slice", "slice", "gather", "broadcast"}
+# update ops touch the update region twice (read + write), not the buffer
+_BYTES_OPS_UPDATE = {"dynamic-update-slice", "scatter"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OP_NAME_RE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+
+
+def shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(x) for x in m.group(2).split(",")]
+
+
+@dataclass
+class Instr:
+    name: str
+    kind: str
+    result_type: str
+    operand_names: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)  # instr name -> type
+
+
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(s)
+            if m:
+                cur = Computation(name=m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if s == "}":
+            cur = None
+            continue
+        m = _INSTR_HEAD_RE.match(s)
+        if not m:
+            continue
+        name = m.group(1)
+        i = m.end()
+        # result type: balanced-paren tuple (may contain /*index=N*/ comments
+        # with '=' inside) or a single token
+        if i < len(s) and s[i] == "(":
+            depth = 0
+            j = i
+            while j < len(s):
+                if s[j] == "(":
+                    depth += 1
+                elif s[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        j += 1
+                        break
+                j += 1
+            rtype = s[i:j]
+        else:
+            j = i
+            while j < len(s) and not s[j].isspace():
+                j += 1
+            rtype = s[i:j]
+        mo = _OP_NAME_RE.match(s, j)
+        if not mo:
+            continue
+        kind = mo.group(1)
+        start = mo.end()
+        depth, k = 1, start
+        while k < len(s) and depth > 0:
+            if s[k] == "(":
+                depth += 1
+            elif s[k] == ")":
+                depth -= 1
+            k += 1
+        operand_str = s[start : k - 1]
+        attrs = s[k:]
+        operands = _OPERAND_NAME_RE.findall(operand_str)
+        cur.types[name] = rtype
+        cur.instrs.append(Instr(name, kind, rtype, operands, attrs))
+    return comps, entry
+
+
+def _trip_count(ins: Instr, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(ins.attrs)
+    if m:
+        return max(int(m.group(1)), 1)
+    cond_name = _called(ins.attrs, "condition")
+    cond = comps.get(cond_name)
+    if cond is not None:
+        consts = []
+        for ci in cond.instrs:
+            if ci.kind == "constant":
+                mm = re.search(r"constant\((\d+)\)", ci.attrs)
+                if mm:
+                    consts.append(int(mm.group(1)))
+        if len(consts) == 1:
+            return max(consts[0], 1)
+    return 1
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    relems, _ = shape_elems_bytes(ins.result_type)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if not m or not ins.operand_names:
+        return 2.0 * relems
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs_type = comp.types.get(ins.operand_names[0], "")
+    dims = shape_dims(lhs_type)
+    k = 1
+    for d in cdims:
+        if d < len(dims):
+            k *= dims[d]
+    return 2.0 * relems * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    relems, _ = shape_elems_bytes(ins.result_type)
+    kern = 1
+    m = re.search(r"window=\{size=([0-9x]+)", ins.attrs)
+    if m:
+        for d in m.group(1).split("x"):
+            kern *= int(d)
+    cin = 1
+    if len(ins.operand_names) > 1:
+        d = shape_dims(comp.types.get(ins.operand_names[1], ""))
+        if len(d) >= 2:
+            cin = d[-2]
+    mg = re.search(r"feature_group_count=(\d+)", ins.attrs)
+    if mg and cin > 1:
+        cin = max(cin // int(mg.group(1)), 1)
+    return 2.0 * relems * kern * cin
+
+
+@dataclass
+class ModuleCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_counts: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def scaled(self, factor: float) -> "ModuleCost":
+        out = ModuleCost(flops=self.flops * factor, bytes=self.bytes * factor)
+        for k, v in self.coll_bytes.items():
+            out.coll_bytes[k] = v * factor
+        for k, v in self.coll_counts.items():
+            out.coll_counts[k] = v * factor
+        return out
+
+    def add(self, other: "ModuleCost", factor: float = 1.0) -> None:
+        self.flops += other.flops * factor
+        self.bytes += other.bytes * factor
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * factor
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] += v * factor
+
+
+def _called(attrs: str, key: str) -> Optional[str]:
+    m = re.search(rf"{key}=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+_SLICE_KINDS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_bytes(fcomp: Computation) -> float:
+    """HBM bytes of one fusion execution, aware of slice/update semantics:
+
+    * a parameter consumed ONLY by slicing ops contributes the sliced bytes
+      (the classic scan pattern: full stacked [L, ...] buffer operand, one
+      layer's slice actually read)
+    * a parameter that only flows into a root dynamic-update-slice as the
+      updated buffer is aliased in place: zero read
+    * root DUS writes the update region, not the whole buffer
+    """
+    params = [ins for ins in fcomp.instrs if ins.kind == "parameter"]
+    uses: Dict[str, List[Instr]] = {p.name: [] for p in params}
+    for ins in fcomp.instrs:
+        if ins.kind == "parameter":
+            continue
+        for op in ins.operand_names:
+            if op in uses:
+                uses[op].append(ins)
+    root = fcomp.instrs[-1] if fcomp.instrs else None
+
+    read = 0.0
+    for p in params:
+        _, pb = shape_elems_bytes(p.result_type)
+        us = uses[p.name]
+        if not us:
+            continue
+        if all(u.kind in _SLICE_KINDS and u.operand_names and u.operand_names[0] == p.name
+               for u in us):
+            for u in us:
+                _, rb = shape_elems_bytes(u.result_type)
+                read += rb
+            continue
+        if (
+            root is not None
+            and root.kind == "dynamic-update-slice"
+            and all(u is root and u.operand_names and u.operand_names[0] == p.name
+                    for u in us)
+        ):
+            continue  # in-place aliased buffer
+        read += pb
+
+    if root is not None and root.kind == "dynamic-update-slice":
+        ub = 0.0
+        if len(root.operand_names) > 1:
+            t = fcomp.types.get(root.operand_names[1], "")
+            _, ub = shape_elems_bytes(t)
+        write = ub
+    else:
+        _, write = shape_elems_bytes(root.result_type) if root else (0, 0.0)
+    return read + write
+
+
+def _cost_of(
+    comp: Computation,
+    comps: Dict[str, Computation],
+    memo: Dict[str, ModuleCost],
+    in_fusion: bool,
+) -> ModuleCost:
+    key = comp.name + ("#f" if in_fusion else "")
+    if key in memo:
+        return memo[key]
+    memo[key] = ModuleCost()  # break cycles defensively
+    total = ModuleCost()
+    for ins in comp.instrs:
+        kind = ins.kind
+        base = kind[:-6] if kind.endswith("-start") else kind
+        if base == "dot":
+            total.flops += _dot_flops(ins, comp)
+        elif base == "convolution":
+            total.flops += _conv_flops(ins, comp)
+        if base in COLLECTIVE_KINDS and not kind.endswith("-done"):
+            _, rb = shape_elems_bytes(ins.result_type)
+            total.coll_bytes[base] += rb
+            total.coll_counts[base] += 1
+        if base == "while":
+            body = _called(ins.attrs, "body")
+            trip = _trip_count(ins, comps)
+            if body in comps:
+                total.add(_cost_of(comps[body], comps, memo, in_fusion), trip)
+            continue
+        if base == "fusion":
+            called = _called(ins.attrs, "calls")
+            if called in comps:
+                sub = _cost_of(comps[called], comps, memo, True)
+                total.flops += sub.flops
+                total.add(
+                    ModuleCost(coll_bytes=sub.coll_bytes, coll_counts=sub.coll_counts)
+                )
+                if not in_fusion:
+                    total.bytes += _fusion_bytes(comps[called])
+            continue
+        if base in ("call", "conditional", "async-start"):
+            for keyname in ("to_apply", "true_computation", "false_computation",
+                            "called_computation"):
+                called = _called(ins.attrs, keyname)
+                if called in comps:
+                    total.add(_cost_of(comps[called], comps, memo, in_fusion))
+        if not in_fusion:
+            _, rb = shape_elems_bytes(ins.result_type)
+            if base in _BYTES_OPS_FULL and base != "fusion":
+                ob = 0
+                for op in ins.operand_names:
+                    _, b = shape_elems_bytes(comp.types.get(op, ""))
+                    ob += b
+                total.bytes += rb + ob
+            elif base in _BYTES_OPS_RESULT_ONLY:
+                total.bytes += 2 * rb  # read region + write result
+            elif base in _BYTES_OPS_UPDATE:
+                ub = 0
+                if len(ins.operand_names) > 1:
+                    _, ub = shape_elems_bytes(
+                        comp.types.get(ins.operand_names[1], "")
+                    )
+                total.bytes += 2 * ub
+    memo[key] = total
+    return total
+
+
+def module_cost(hlo_text: str) -> ModuleCost:
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c].instrs)) if comps else None
+    if entry is None:
+        return ModuleCost()
+    return _cost_of(comps[entry], comps, {}, False)

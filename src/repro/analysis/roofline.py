@@ -1,0 +1,152 @@
+"""Roofline model for TPU v5e (the deployment target).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step, derived from
+the compiled dry-run artifact (cost_analysis + HLO collective parse):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+cost_analysis reports the per-device (partitioned) module, so no further
+division by chip count is needed. The dominant term is the bottleneck; the
+MODEL_FLOPS / HLO_FLOPs ratio measures how much compiled compute is "useful"
+(catches remat recompute, masked-block waste, MoE capacity padding,
+replicated compute on unused mesh axes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (one-direction usable, per prompt spec)
+HBM_BYTES = 16 << 30
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs MFU bound at this step time: how close the USEFUL
+        work runs to the chips' peak given the dominant term."""
+        if self.step_time_s <= 0:
+            return 0.0
+        chips_flops = self.flops_per_device / max(self.step_time_s, 1e-30)
+        return min(chips_flops / PEAK_FLOPS, 1.0) * self.useful_ratio
+
+
+def _attn_context_flops(cfg, shape, fwd_bwd: float) -> float:
+    """Attention score+value matmul FLOPs (outside the N·D parameter rule).
+
+    fwd causal full-seq: 2·B·h·dh·S·ctx (QK^T + PV, halved for causality);
+    decode: 4·B·h·dh·ctx per step. ``fwd_bwd`` = 1 (inference) or 3 (train:
+    fwd + 2x bwd; remat recompute is NOT useful work)."""
+    if not cfg.num_heads:
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    L_attn = cfg.attn_invocations if cfg.family == "hybrid" else cfg.num_layers
+    hd = cfg.num_heads * cfg.d_head
+    ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    if shape.kind == "decode":
+        flops = 4.0 * B * L_attn * hd * ctx
+        if cfg.is_encoder_decoder:
+            flops += 4.0 * B * cfg.num_layers * hd * cfg.max_encoder_len
+        return flops
+    # full-sequence score elements: S*ctx (window) or causal half S^2/2
+    score_elems = S * ctx if cfg.sliding_window else S * S / 2
+    flops = fwd_bwd * 4.0 * B * L_attn * hd * score_elems
+    if cfg.is_encoder_decoder:
+        T = cfg.max_encoder_len
+        flops += fwd_bwd * 4.0 * B * cfg.encoder_layers * hd * T * T  # bidir enc
+        flops += fwd_bwd * 4.0 * B * cfg.num_layers * hd * S * T  # cross
+    return flops
+
+
+def model_flops_per_step(cfg, shape, n_chips: int) -> float:
+    """Useful FLOPs: 6·N_active·D train / 2·N_active·D inference, plus the
+    attention-context term. Remat recompute, MoE capacity padding, masked
+    blocks, and replicated compute are deliberately excluded — their absence
+    is what useful_ratio measures."""
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        # encoder processes enc_len frames, decoder processes S tokens
+        d = cfg.d_model
+        enc_p = cfg.encoder_layers * (cfg._attn_params() + cfg._mlp_params() + 2 * d)
+        dec_p = cfg.num_layers * (2 * cfg._attn_params() + cfg._mlp_params() + 3 * d)
+        head_p = cfg.vocab_size * d
+        mult = 6.0 if shape.kind == "train" else 2.0
+        if shape.kind == "decode":
+            flops = mult * (dec_p + head_p) * B  # encoder already ran
+        else:
+            flops = mult * (enc_p * B * cfg.max_encoder_len + (dec_p + head_p) * B * S)
+        return flops + _attn_context_flops(
+            cfg, shape, 3.0 if shape.kind == "train" else 1.0
+        )
+    if shape.kind == "train":
+        return (6.0 * n_active * B * S + _attn_context_flops(cfg, shape, 3.0)
+                + _ssd_context_flops(cfg, shape, 3.0))
+    if shape.kind == "prefill":
+        return (2.0 * n_active * B * S + _attn_context_flops(cfg, shape, 1.0)
+                + _ssd_context_flops(cfg, shape, 1.0))
+    return 2.0 * n_active * B + _attn_context_flops(cfg, shape, 1.0)
+
+
+def _ssd_context_flops(cfg, shape, fwd_bwd: float) -> float:
+    """SSD (Mamba2) within-chunk + state matmuls, not covered by N·D:
+    per token/layer ~ 2·(Q·N + d_inner·Q + 2·d_inner·N). Approximate — the
+    compiler's einsum contraction order can undercut it; useful_ratio for SSM
+    archs is therefore indicative (EXPERIMENTS.md §Roofline note)."""
+    if not cfg.ssm_state:
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    Q, N, di = cfg.ssm_chunk, cfg.ssm_state, cfg.ssm_d_inner
+    per_tok = 2.0 * (Q * N + di * Q + 2 * di * N)
+    return fwd_bwd * B * S * cfg.num_layers * per_tok
+
+
+def compute_terms(
+    cfg,
+    shape,
+    n_chips: int,
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_dev: float,
+) -> RooflineTerms:
+    mf = model_flops_per_step(cfg, shape, n_chips)
+    total_hlo = flops_per_device * n_chips
+    return RooflineTerms(
+        compute_s=flops_per_device / PEAK_FLOPS,
+        memory_s=bytes_per_device / HBM_BW,
+        collective_s=collective_bytes_dev / ICI_BW,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        collective_bytes=collective_bytes_dev,
+        model_flops=mf,
+        useful_ratio=min(mf / max(total_hlo, 1.0), 1.0),
+    )

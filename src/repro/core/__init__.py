@@ -1,0 +1,25 @@
+"""MaxMem core: FMMR QoS policy, hotness bins, sampling, central manager."""
+from repro.core.manager import CentralManager, TenantHandle
+from repro.core.types import (
+    TIER_FAST,
+    TIER_NONE,
+    TIER_SLOW,
+    EpochStats,
+    MigrationPlan,
+    PageState,
+    PolicyParams,
+    TenantState,
+)
+
+__all__ = [
+    "CentralManager",
+    "TenantHandle",
+    "TIER_FAST",
+    "TIER_NONE",
+    "TIER_SLOW",
+    "EpochStats",
+    "MigrationPlan",
+    "PageState",
+    "PolicyParams",
+    "TenantState",
+]

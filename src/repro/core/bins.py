@@ -1,0 +1,100 @@
+"""Hotness bins with lazy cooling (paper §3.2), dense-array TPU adaptation.
+
+The paper keeps per-bin linked lists; pointer chasing is hostile to TPU, so
+bins are *derived* from a dense per-page counter array:
+
+    bin(count) = 0                 if count == 0
+               = min(floor(log2(count)) + 1, num_bins - 1)
+
+i.e. bin k>=1 holds counts in [2^(k-1), 2^k) — exponential heat classes, one
+bin ~2x hotter than its colder neighbor, exactly the paper's semantics.
+
+Cooling: when any page of a tenant would exceed the hottest bin's threshold
+(2^(num_bins-1) with 6 bins), all of that tenant's pages halve — implemented
+*lazily* via a per-tenant ``cool_epoch`` counter and per-page ``last_cool``
+stamp; a page's effective count is ``count >> (cool_epoch - last_cool)``,
+applied on its next touch. Cooling fires at most once per epoch (paper).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PageState, TenantState
+
+
+def bin_of(count: jax.Array, num_bins) -> jax.Array:
+    """Vectorized heat-bin id for (effective) counts."""
+    c = count.astype(jnp.uint32)
+    # floor(log2(c)) via bit width; c==0 -> bin 0
+    fl = jnp.where(c > 0, 31 - jax.lax.clz(jnp.maximum(c, 1).astype(jnp.int32)), -1)
+    return jnp.clip(fl + 1, 0, num_bins - 1).astype(jnp.int32)
+
+
+def cool_threshold(num_bins) -> jax.Array:
+    """Counts >= 2^(num_bins-1) trigger a tenant-wide cooling event."""
+    return (jnp.uint32(1) << jnp.uint32(num_bins - 1)).astype(jnp.uint32)
+
+
+def effective_count(pages: PageState, tenants: TenantState) -> jax.Array:
+    """Apply pending (lazy) cooling: count >> cooling events since last touch."""
+    owner = jnp.maximum(pages.owner, 0)
+    pending = jnp.maximum(tenants.cool_epoch[owner] - pages.last_cool, 0)
+    pending = jnp.minimum(pending, 31).astype(jnp.uint32)
+    eff = pages.count >> pending
+    return jnp.where(pages.owner >= 0, eff, jnp.uint32(0))
+
+
+def accumulate_samples(
+    pages: PageState,
+    tenants: TenantState,
+    sampled: jax.Array,  # u32[P] sampled accesses this epoch
+    num_bins,
+) -> Tuple[PageState, TenantState, jax.Array]:
+    """Fold one epoch of samples into the counters; fire cooling if needed.
+
+    Returns (pages, tenants, cooled[T] bool). Lazy-cooling bookkeeping: pages
+    touched this epoch materialize their pending shifts; untouched pages keep
+    their stale counts + stamps (materialized on their next touch or read via
+    ``effective_count``).
+    """
+    eff = effective_count(pages, tenants)
+    new_count = eff + sampled.astype(jnp.uint32)
+    touched = sampled > 0
+    owner = jnp.maximum(pages.owner, 0)
+
+    count1 = jnp.where(touched, new_count, pages.count)
+    last1 = jnp.where(touched, tenants.cool_epoch[owner], pages.last_cool)
+
+    # cooling: any page of tenant t reaching the top-bin threshold halves all
+    thresh = cool_threshold(num_bins)
+    over = touched & (new_count >= thresh) & (pages.owner >= 0)
+    cooled = (
+        jnp.zeros_like(tenants.cool_epoch, dtype=bool)
+        .at[owner]
+        .max(over, mode="drop")
+    )
+    cool_epoch2 = tenants.cool_epoch + cooled.astype(jnp.int32)
+
+    # materialize the new cooling event for touched pages immediately
+    do_halve = cooled[owner] & touched
+    count2 = jnp.where(do_halve, count1 >> 1, count1)
+    last2 = jnp.where(touched, cool_epoch2[owner], last1)
+
+    pages2 = pages._replace(count=count2, last_cool=last2)
+    tenants2 = tenants._replace(cool_epoch=cool_epoch2)
+    return pages2, tenants2, cooled
+
+
+def heat_histogram(
+    pages: PageState, tenants: TenantState, num_bins: int, max_tenants: int
+) -> jax.Array:
+    """[T, num_bins] page counts per (tenant, bin) — the heat gradient."""
+    eff = effective_count(pages, tenants)
+    b = bin_of(eff, num_bins)
+    owner = pages.owner
+    flat = jnp.where(owner >= 0, owner * num_bins + b, max_tenants * num_bins)
+    hist = jnp.zeros((max_tenants * num_bins + 1,), jnp.int32).at[flat].add(1)
+    return hist[:-1].reshape(max_tenants, num_bins)

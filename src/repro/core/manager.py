@@ -1,0 +1,204 @@
+"""MaxMem central manager + tenant handles (paper §3.3 user-space design).
+
+The manager owns all policy state (trust model: tenants cannot touch it) and
+exposes the libMaxMem-analogue surface:
+
+    mgr = CentralManager(num_pages=..., fast_capacity=..., ...)
+    h = mgr.register(t_miss=0.1)          # process connects over the socket
+    pages = mgr.allocate(h, n_pages)      # mmap/page-fault analogue
+    mgr.record_access(counts)             # engine reports page accesses
+    stats = mgr.run_epoch()               # policy thread tick
+    mgr.set_target(h, 0.5)                # dynamic QoS update
+    mgr.free(h, pages); mgr.unregister(h) # process exit
+
+Allocation follows §3.1: fast first, slow if fast exhausted, error if both
+exhausted. On tenant exit, memory returns to the free pool and is granted to
+needers on the next epoch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy
+from repro.core.sampler import sample_accesses
+from repro.core.types import (
+    TIER_FAST,
+    TIER_NONE,
+    TIER_SLOW,
+    EpochStats,
+    MigrationPlan,
+    PageState,
+    PolicyParams,
+    TenantState,
+)
+
+
+class TenantHandle(int):
+    """Opaque tenant slot id (the libMaxMem connection analogue)."""
+
+
+@dataclasses.dataclass
+class EpochResult:
+    stats: EpochStats
+    plan: MigrationPlan
+    flags: np.ndarray  # bool[T] tenants that could not be served
+
+    def fmmr(self, h: int) -> float:
+        return float(self.stats.fmmr_ewma[h])
+
+
+class CentralManager:
+    def __init__(
+        self,
+        num_pages: int,
+        fast_capacity: int,
+        migration_budget: int,
+        max_tenants: int = 16,
+        num_bins: int = 6,
+        sample_period: int = 100,
+        ewma_lambda: float = 0.5,
+        fair_mode: bool = False,
+        seed: int = 0,
+        exact_sampling: bool = False,
+    ):
+        assert fast_capacity <= num_pages
+        self.num_pages = num_pages
+        self.max_tenants = max_tenants
+        self.params = PolicyParams(
+            fast_capacity=jnp.int32(fast_capacity),
+            migration_budget=jnp.int32(migration_budget),
+            num_bins=jnp.int32(num_bins),
+            ewma_lambda=jnp.float32(ewma_lambda),
+            sample_period=jnp.int32(sample_period),
+            fair_mode=fair_mode,
+        )
+        self.plan_size = int(migration_budget)
+        self.pages = PageState.create(num_pages)
+        self.tenants = TenantState.create(max_tenants)
+        self._arrival_seq = 0
+        self._rng = jax.random.PRNGKey(seed)
+        self._pending = np.zeros((num_pages,), np.int64)  # un-sampled accesses
+        self.exact_sampling = exact_sampling
+        self.epoch_index = 0
+
+    # ------------------------------------------------------------- tenants
+    def register(self, t_miss: float) -> TenantHandle:
+        assert 0.0 < t_miss <= 1.0, "t_miss must be in (0, 1] (§3.1)"
+        active = np.asarray(self.tenants.active)
+        free = np.flatnonzero(~active)
+        if len(free) == 0:
+            raise RuntimeError("tenant table full")
+        slot = int(free[0])
+        t = self.tenants
+        self.tenants = t._replace(
+            active=t.active.at[slot].set(True),
+            t_miss=t.t_miss.at[slot].set(t_miss),
+            a_miss=t.a_miss.at[slot].set(0.0),
+            arrival=t.arrival.at[slot].set(self._arrival_seq),
+            cool_epoch=t.cool_epoch.at[slot].set(0),
+            flagged=t.flagged.at[slot].set(False),
+        )
+        self._arrival_seq += 1
+        return TenantHandle(slot)
+
+    def set_target(self, h: TenantHandle, t_miss: float) -> None:
+        assert 0.0 < t_miss <= 1.0
+        self.tenants = self.tenants._replace(
+            t_miss=self.tenants.t_miss.at[int(h)].set(t_miss)
+        )
+
+    def unregister(self, h: TenantHandle) -> None:
+        owned = np.flatnonzero(np.asarray(self.pages.owner) == int(h))
+        if len(owned):
+            self.free(h, owned)
+        t = self.tenants
+        self.tenants = t._replace(active=t.active.at[int(h)].set(False))
+
+    # ------------------------------------------------------------- memory
+    def allocate(self, h: TenantHandle, n_pages: int) -> np.ndarray:
+        """First-touch allocation: fast while available, then slow (§3.1)."""
+        tier = np.asarray(self.pages.tier)
+        owner = np.asarray(self.pages.owner)
+        unalloc = np.flatnonzero(tier == TIER_NONE)
+        if len(unalloc) < n_pages:
+            raise MemoryError(
+                f"tenant {int(h)}: out of tiered memory "
+                f"({n_pages} requested, {len(unalloc)} free)"
+            )
+        fast_used = int((tier == TIER_FAST).sum())
+        fast_room = max(int(self.params.fast_capacity) - fast_used, 0)
+        take = unalloc[:n_pages]
+        n_fast = min(fast_room, n_pages)
+        new_tier = tier.copy()
+        new_owner = owner.copy()
+        new_tier[take[:n_fast]] = TIER_FAST
+        new_tier[take[n_fast:]] = TIER_SLOW
+        new_owner[take] = int(h)
+        self.pages = self.pages._replace(
+            tier=jnp.asarray(new_tier), owner=jnp.asarray(new_owner)
+        )
+        return take
+
+    def free(self, h: TenantHandle, page_ids: Sequence[int]) -> None:
+        ids = np.asarray(page_ids, np.int32)
+        owner = np.asarray(self.pages.owner)
+        if not np.all(owner[ids] == int(h)):
+            raise PermissionError("tenant freeing pages it does not own")
+        tier = np.asarray(self.pages.tier).copy()
+        owner = owner.copy()
+        tier[ids] = TIER_NONE
+        owner[ids] = -1
+        count = np.asarray(self.pages.count).copy()
+        count[ids] = 0
+        self.pages = self.pages._replace(
+            tier=jnp.asarray(tier), owner=jnp.asarray(owner), count=jnp.asarray(count)
+        )
+        self._pending[ids] = 0
+
+    # ------------------------------------------------------------- accesses
+    def record_access(self, counts: np.ndarray) -> None:
+        """Engine-side access report: exact per-page access counts since the
+        last call (the instrumented attention/GUPS stream)."""
+        self._pending += np.asarray(counts, np.int64)
+
+    # ------------------------------------------------------------- epoch
+    def run_epoch(self) -> EpochResult:
+        """Policy-thread tick: sample -> policy -> migrate metadata."""
+        self._rng, sub = jax.random.split(self._rng)
+        sampled = sample_accesses(
+            sub,
+            jnp.asarray(self._pending, jnp.uint32),
+            int(self.params.sample_period),
+            exact=self.exact_sampling,
+        )
+        self._pending[:] = 0
+        pages, tenants, plan, stats = policy.policy_epoch(
+            self.pages,
+            self.tenants,
+            sampled,
+            self.params,
+            max_tenants=self.max_tenants,
+            plan_size=self.plan_size,
+        )
+        pages = policy.apply_plan(pages, plan)
+        self.pages, self.tenants = pages, tenants
+        self.epoch_index += 1
+        return EpochResult(stats=stats, plan=plan, flags=np.asarray(tenants.flagged))
+
+    # ------------------------------------------------------------- telemetry
+    def fast_pages_of(self, h: TenantHandle) -> int:
+        m = (np.asarray(self.pages.owner) == int(h)) & (
+            np.asarray(self.pages.tier) == TIER_FAST
+        )
+        return int(m.sum())
+
+    def tier_of(self, page_ids) -> np.ndarray:
+        return np.asarray(self.pages.tier)[np.asarray(page_ids)]
+
+    def fmmr_of(self, h: TenantHandle) -> float:
+        return float(self.tenants.a_miss[int(h)])

@@ -1,0 +1,216 @@
+"""The MaxMem per-epoch policy step (paper §3.1 + §3.2), fully jittable.
+
+Pipeline per epoch (cf. Figure 1 of the paper):
+  1. fold sampled accesses into per-page counters (+ lazy cooling)   [bins]
+  2. compute instantaneous FMMR per tenant, update EWMA (lambda=.5)  [fmmr]
+  3. reallocate fast memory proportionally to distance from target   [fmmr]
+     using half the migration budget
+  4. intra-tenant rebalance with the other half: promote hottest-slow
+     / demote coldest-fast pairs where it strictly improves FMMR
+  5. emit a bounded MigrationPlan (page id lists) + telemetry
+
+Victim selection uses the dense heat gradient: per-tenant rank of every page
+within its (owner, tier) group by effective count — a composite-key argsort
+replaces the paper's per-bin linked lists (TPU adaptation, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bins, fmmr
+from repro.core.types import (
+    TIER_FAST,
+    TIER_SLOW,
+    EpochStats,
+    MigrationPlan,
+    PageState,
+    PolicyParams,
+    TenantState,
+)
+
+
+def _per_tenant_pages(pages: PageState, max_tenants: int) -> Tuple[jax.Array, jax.Array]:
+    """(fast_pages[T], slow_pages[T]) holdings."""
+    owner = jnp.where(pages.owner >= 0, pages.owner, max_tenants)
+    fast = jnp.zeros((max_tenants + 1,), jnp.int32).at[owner].add(pages.tier == TIER_FAST)
+    slow = jnp.zeros((max_tenants + 1,), jnp.int32).at[owner].add(pages.tier == TIER_SLOW)
+    return fast[:-1], slow[:-1]
+
+
+@partial(jax.jit, static_argnames=("max_tenants", "plan_size"))
+def policy_epoch(
+    pages: PageState,
+    tenants: TenantState,
+    sampled: jax.Array,  # u32[P] sampled accesses this epoch (PEBS analogue)
+    params: PolicyParams,
+    *,
+    max_tenants: int,
+    plan_size: int,
+):
+    """Returns (pages', tenants', MigrationPlan, EpochStats)."""
+    P = pages.owner.shape[0]
+    T = max_tenants
+
+    # ---- 1. per-tenant fast/slow sample counts (tier *before* migration) ----
+    owner_c = jnp.where(pages.owner >= 0, pages.owner, T)
+    s_fast = (
+        jnp.zeros((T + 1,), jnp.uint32)
+        .at[owner_c]
+        .add(jnp.where(pages.tier == TIER_FAST, sampled, 0))[:-1]
+    )
+    s_slow = (
+        jnp.zeros((T + 1,), jnp.uint32)
+        .at[owner_c]
+        .add(jnp.where(pages.tier == TIER_SLOW, sampled, 0))[:-1]
+    )
+    pages, tenants, cooled = bins.accumulate_samples(
+        pages, tenants, sampled, params.num_bins
+    )
+
+    # ---- 2. FMMR update ------------------------------------------------------
+    now = fmmr.fmmr_now(s_fast.astype(jnp.float32), s_slow.astype(jnp.float32))
+    ewma = fmmr.update_ewma(tenants.a_miss, now, params.ewma_lambda)
+    ewma = jnp.where(tenants.active, ewma, 0.0)
+    tenants = tenants._replace(a_miss=ewma)
+
+    # ---- 3. proportional reallocation (budget R/2) ---------------------------
+    fast_pages, slow_pages = _per_tenant_pages(pages, T)
+    free_fast = params.fast_capacity - fast_pages.sum()
+    realloc_budget = params.migration_budget // 2
+    ra = fmmr.reallocate(
+        tenants, fast_pages, free_fast, realloc_budget,
+        fair_mode=params.fair_mode, hysteresis=params.hysteresis,
+    )
+    tenants = tenants._replace(flagged=ra.flagged)
+    # the R/2 reallocation budget counts BOTH promotions and the demotions
+    # that make room for them: rescale if gives+takes overshoot.
+    ra_moves = ra.give.sum() + ra.take.sum()
+    ra_scale = jnp.where(
+        ra_moves > realloc_budget,
+        realloc_budget.astype(jnp.float32) / jnp.maximum(ra_moves, 1),
+        1.0,
+    )
+    take2 = jnp.floor(ra.take * ra_scale).astype(jnp.int32)
+    give2 = jnp.floor(ra.give * ra_scale).astype(jnp.int32)
+    # integer flooring can break gives <= free + takes: FCFS re-clamp
+    give2 = fmmr.clamp_gives(give2, tenants.arrival, free_fast + take2.sum())
+    ra = ra._replace(give=give2, take=take2)
+
+    # ---- 4. intra-tenant rebalance (budget R/2; each pair = 2 moves) ---------
+    eff = bins.effective_count(pages, tenants).astype(jnp.int32)  # [P]
+    n_active = jnp.maximum(tenants.active.sum(), 1)
+    rebal_share = (params.migration_budget - realloc_budget) // (2 * n_active)
+
+    is_owned = pages.owner >= 0
+    owner = jnp.maximum(pages.owner, 0)
+    slow_cand = is_owned & (pages.tier == TIER_SLOW)
+    fast_cand = is_owned & (pages.tier == TIER_FAST)
+
+    # per-tenant rank by heat: composite sort key (tenant-major), then rank
+    # within the (tenant, tier) segment. hot ranks: descending count.
+    def _ranks(cand, descending):
+        sign = -1 if descending else 1
+        t_key = jnp.where(cand, owner, T).astype(jnp.int32)
+        count_key = sign * jnp.where(cand, eff, 0).astype(jnp.int32)
+        # lexsort: last key is primary -> grouped by tenant, heat-ordered within
+        order = jnp.lexsort((count_key, t_key))
+        sorted_t = t_key[order]
+        idx = jnp.arange(P, dtype=jnp.int32)
+        first = (
+            jnp.full((T + 1,), jnp.iinfo(jnp.int32).max, jnp.int32)
+            .at[sorted_t]
+            .min(idx, mode="drop")
+        )
+        rank_sorted = idx - first[sorted_t]
+        rank = jnp.full((P,), jnp.iinfo(jnp.int32).max, jnp.int32).at[order].set(rank_sorted)
+        return jnp.where(cand, rank, jnp.iinfo(jnp.int32).max)
+
+    hot_rank = _ranks(slow_cand, descending=True)  # 0 = hottest slow page
+    cold_rank = _ranks(fast_cand, descending=False)  # 0 = coldest fast page
+
+    # rebalance pair count n_t: compare i-th hottest slow vs i-th coldest fast
+    def _sorted_counts(rank, cand, descending):
+        vals = jnp.full((T, min(P, 4096)), -1, jnp.int32)
+        # gather counts by (tenant, rank) for rank < window
+        window = vals.shape[1]
+        ok = cand & (rank < window)
+        flat = jnp.where(ok, owner * window + rank, T * window)
+        out = jnp.full((T * window + 1,), -1, jnp.int32).at[flat].max(
+            jnp.where(ok, eff, -1), mode="drop"
+        )
+        return out[:-1].reshape(T, window)
+
+    W = min(P, 4096)
+    rebal_share = jnp.minimum(rebal_share, W)
+    hot_counts = _sorted_counts(hot_rank, slow_cand, True)  # [T, W] desc
+    cold_counts = _sorted_counts(cold_rank, fast_cand, False)  # [T, W] asc
+
+    # Reallocation consumes the first `give` hottest-slow / `take` coldest-fast
+    # victims; the i-th REBALANCE pair is (hot[give+i], cold[take+i]). Pairs
+    # must fit the remaining candidates on BOTH sides so promote/demote stay
+    # 1:1 per tenant (capacity invariant).
+    n_slow_cand = jnp.zeros((T + 1,), jnp.int32).at[owner_c].add(slow_cand)[:-1]
+    n_fast_cand = jnp.zeros((T + 1,), jnp.int32).at[owner_c].add(fast_cand)[:-1]
+    give_eff = jnp.minimum(ra.give, n_slow_cand)
+    take_eff = jnp.minimum(ra.take, n_fast_cand)
+    max_pairs = jnp.clip(
+        jnp.minimum(n_fast_cand - take_eff, n_slow_cand - give_eff), 0, rebal_share
+    )
+    i_idx = jnp.arange(W, dtype=jnp.int32)
+    hot_i = jnp.take_along_axis(
+        hot_counts, jnp.minimum(give_eff[:, None] + i_idx[None, :], W - 1), axis=1
+    )
+    cold_i = jnp.take_along_axis(
+        cold_counts, jnp.minimum(take_eff[:, None] + i_idx[None, :], W - 1), axis=1
+    )
+    improves = (
+        (hot_i > cold_i)
+        & (hot_i >= 0)
+        & (cold_i >= 0)
+        & (i_idx[None, :] < max_pairs[:, None])
+    )
+    n_rebal = improves.sum(axis=1).astype(jnp.int32)  # [T]
+    n_rebal = jnp.where(tenants.active, n_rebal, 0)
+
+    # ---- 5. quotas -> plan ----------------------------------------------------
+    promote_quota = give_eff + n_rebal  # <= n_slow_cand by construction
+    demote_quota = take_eff + n_rebal  # <= n_fast_cand by construction
+
+    promote_mask = slow_cand & (hot_rank < promote_quota[owner])
+    demote_mask = fast_cand & (cold_rank < demote_quota[owner])
+
+    promote_ids = jnp.nonzero(promote_mask, size=plan_size, fill_value=-1)[0].astype(jnp.int32)
+    demote_ids = jnp.nonzero(demote_mask, size=plan_size, fill_value=-1)[0].astype(jnp.int32)
+    plan = MigrationPlan(promote=promote_ids, demote=demote_ids)
+
+    # ---- stats ---------------------------------------------------------------
+    promoted = jnp.zeros((T + 1,), jnp.int32).at[owner_c].add(promote_mask)[:-1]
+    demoted = jnp.zeros((T + 1,), jnp.int32).at[owner_c].add(demote_mask)[:-1]
+    stats = EpochStats(
+        fmmr_now=now,
+        fmmr_ewma=ewma,
+        fast_pages=fast_pages,
+        slow_pages=slow_pages,
+        promoted=promoted,
+        demoted=demoted,
+        cooled=cooled,
+    )
+    return pages, tenants, plan, stats
+
+
+@jax.jit
+def apply_plan(pages: PageState, plan: MigrationPlan) -> PageState:
+    """Execute a migration plan on the metadata (data movement is the
+    caller's job — pools + Pallas page_copy kernel, or DMA on real HW)."""
+    P = pages.tier.shape[0]
+    # -1 padding would wrap to P-1: remap to P so mode="drop" discards it
+    promote = jnp.where(plan.promote >= 0, plan.promote, P)
+    demote = jnp.where(plan.demote >= 0, plan.demote, P)
+    tier = pages.tier
+    tier = tier.at[promote].set(jnp.int8(TIER_FAST), mode="drop")
+    tier = tier.at[demote].set(jnp.int8(TIER_SLOW), mode="drop")
+    return pages._replace(tier=tier)

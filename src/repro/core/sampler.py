@@ -1,0 +1,32 @@
+"""PEBS-analogue access-stream sampling (paper §3.2).
+
+The paper samples 1-in-100 loads via PEBS counters. Here the serving engine
+reports *exact* per-page access counts (it owns the attention page selector),
+and we binomially subsample them with p = 1/sample_period — statistically the
+same observable the paper's PEBS stream provides, without PMU noise.
+
+``exact=True`` bypasses sampling (useful for deterministic tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_accesses(
+    rng: jax.Array,
+    counts: jax.Array,  # u32[P] exact accesses this epoch
+    sample_period: int,
+    *,
+    exact: bool = False,
+) -> jax.Array:
+    """Returns u32[P] sampled access counts."""
+    if exact or sample_period <= 1:
+        return counts.astype(jnp.uint32)
+    p = 1.0 / float(sample_period)
+    n = counts.astype(jnp.float32)
+    # Binomial(n, p) ~ Normal(np, np(1-p)) for large n; exact Bernoulli sum is
+    # wasteful under jit. Poisson(np) is the standard PEBS model; clamp at n.
+    lam = n * p
+    draw = jax.random.poisson(rng, lam, dtype=jnp.int32).astype(jnp.float32)
+    return jnp.minimum(draw, n).astype(jnp.uint32)

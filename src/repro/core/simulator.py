@@ -1,0 +1,297 @@
+"""Tiered-memory colocation simulator (drives the paper-figure benchmarks).
+
+The simulator runs GUPS/KVS-like tenant workloads against a placement policy
+(MaxMem's CentralManager or a baseline from ``core.baselines``) and evaluates
+a machine cost model each epoch:
+
+  * per-access latency  = hit * lat_fast + miss * lat_slow(load)
+  * slow-tier load      = sum of tenant miss traffic + migration traffic;
+                          latency scales by demand/capacity when saturated
+  * tenant throughput   = threads / avg_latency  (closed-loop, fixed point)
+  * tail latencies      = quantiles of the two-point access mixture with a
+                          migration-interference term (write-protect stalls)
+
+Constants are published-order-of-magnitude (DRAM ~80ns/100GB/s, Optane
+~300ns/30GB/s read, I/OAT ~4GB/s/chan; TPU profile: HBM 819GB/s vs host DMA
+~50GB/s). The *policies* are exact; the cost model only needs to rank them,
+matching the paper's qualitative claims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.manager import CentralManager
+from repro.core.types import TIER_FAST, TIER_SLOW
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    latency_ns: float
+    bandwidth_GBps: float
+
+
+@dataclass(frozen=True)
+class MachineSpec:
+    fast: TierSpec
+    slow: TierSpec
+    page_bytes: int = 2 << 20  # 2 MB huge pages (paper granularity)
+    migration_GBps: float = 4.0  # I/OAT DMA engine class
+    access_bytes: int = 64  # one cache line per op (GUPS)
+
+
+OPTANE = MachineSpec(fast=TierSpec(80, 100.0), slow=TierSpec(300, 30.0))
+TPU_HOST = MachineSpec(
+    fast=TierSpec(500, 819.0),
+    slow=TierSpec(2500, 50.0),
+    page_bytes=2 << 20,
+    migration_GBps=25.0,
+)
+
+
+@dataclass
+class WorkloadSpec:
+    """Hot/warm/cold set access skew, GUPS-style closed-loop tenant."""
+
+    name: str
+    n_pages: int
+    t_miss: float = 1.0
+    threads: int = 2
+    # (fraction_of_pages, fraction_of_accesses) per set; remainder uniform
+    sets: Tuple[Tuple[float, float], ...] = ()
+    value_bytes: int = 64  # per-op payload (16 KB for the KVS workload)
+
+
+class TenantSim:
+    def __init__(self, spec: WorkloadSpec, page_ids: np.ndarray, rng: np.random.Generator):
+        self.spec = spec
+        self.page_ids = np.asarray(page_ids)
+        self.rng = rng
+        # scatter hot/warm sets across the virtual address space: the initial
+        # fast-first allocation must not accidentally equal the hot set
+        self._perm = rng.permutation(len(page_ids))
+        self.probs = self._build_probs(spec, len(page_ids))[self._perm]
+
+    @staticmethod
+    def _build_probs(spec: WorkloadSpec, n: int) -> np.ndarray:
+        probs = np.zeros(n)
+        start = 0
+        frac_left = 1.0
+        for fp, fa in spec.sets:
+            k = max(1, int(round(fp * n)))
+            probs[start : start + k] = fa / k
+            start += k
+            frac_left -= fa
+        rest = n - start
+        if rest > 0 and frac_left > 0:
+            probs[start:] = frac_left / rest
+        s = probs.sum()
+        return probs / s if s > 0 else np.full(n, 1.0 / n)
+
+    def resize_set(self, set_index: int, new_frac_pages: float):
+        """Dynamic hot-set change (Fig. 4 event 5 / Fig. 8 event 2)."""
+        sets = list(self.spec.sets)
+        fp, fa = sets[set_index]
+        sets[set_index] = (new_frac_pages, fa)
+        self.spec = dataclasses.replace(self.spec, sets=tuple(sets))
+        self.probs = self._build_probs(self.spec, len(self.page_ids))[self._perm]
+
+    def miss_ratio(self, tier: np.ndarray) -> float:
+        t = tier[self.page_ids]
+        return float(self.probs[t == TIER_SLOW].sum())
+
+
+@dataclass
+class EpochRecord:
+    epoch: int
+    throughput: Dict[str, float]  # ops/s per tenant
+    fmmr_true: Dict[str, float]
+    fmmr_measured: Dict[str, float]
+    fast_pages: Dict[str, int]
+    p50: Dict[str, float]
+    p90: Dict[str, float]
+    p99: Dict[str, float]
+    migrated_pages: int
+    stalled: bool
+
+
+class ColocationSim:
+    """Closed-loop multi-tenant simulation against a placement backend."""
+
+    def __init__(
+        self,
+        backend,  # CentralManager or a baseline with the same surface
+        machine: MachineSpec = OPTANE,
+        epoch_seconds: float = 1.0,
+        seed: int = 0,
+        access_noise: bool = True,
+    ):
+        self.backend = backend
+        self.machine = machine
+        self.epoch_s = epoch_seconds
+        self.rng = np.random.default_rng(seed)
+        self.tenants: Dict[str, TenantSim] = {}
+        self.handles: Dict[str, int] = {}
+        self.history: List[EpochRecord] = []
+        self.access_noise = access_noise
+        self._stall_epochs = 0.0
+
+    # ----------------------------------------------------------- lifecycle
+    def add_tenant(self, spec: WorkloadSpec) -> TenantSim:
+        h = self.backend.register(spec.t_miss)
+        pages = self.backend.allocate(h, spec.n_pages)
+        sim = TenantSim(spec, pages, self.rng)
+        self.tenants[spec.name] = sim
+        self.handles[spec.name] = h
+        return sim
+
+    def remove_tenant(self, name: str):
+        h = self.handles.pop(name)
+        self.backend.unregister(h)
+        del self.tenants[name]
+
+    def set_target(self, name: str, t_miss: float):
+        self.backend.set_target(self.handles[name], t_miss)
+        self.tenants[name].spec = dataclasses.replace(
+            self.tenants[name].spec, t_miss=t_miss
+        )
+
+    # ----------------------------------------------------------- cost model
+    def _latencies(
+        self, misses: Dict[str, float], migration_bytes: float
+    ) -> Tuple[Dict[str, float], Dict[str, float]]:
+        """Fixed-point closed-loop: returns (avg_latency_s, slow_op_lat_s).
+
+        Per-op latency = tier latency + value transfer at the tier's
+        (contention-scaled) bandwidth; bandwidth contention couples tenants."""
+        m = self.machine
+        lat_f = m.fast.latency_ns * 1e-9
+        lat_s0 = m.slow.latency_ns * 1e-9
+        slow_cap = m.slow.bandwidth_GBps * 1e9
+        fast_cap = m.fast.bandwidth_GBps * 1e9
+
+        def op_lat(ms, bytes_per_op, sf=1.0, ss=1.0):
+            f = lat_f + bytes_per_op / (fast_cap / sf)
+            s = lat_s0 * ss + bytes_per_op / (slow_cap / ss)
+            return f * (1 - ms) + s * ms, s
+
+        lat = {}
+        slow_op = {}
+        for n, t in self.tenants.items():
+            lat[n], slow_op[n] = op_lat(misses[n], max(t.spec.value_bytes, m.access_bytes))
+        for _ in range(4):
+            demand_slow = migration_bytes / self.epoch_s
+            demand_fast = migration_bytes / self.epoch_s
+            for n, t in self.tenants.items():
+                tput = t.spec.threads / lat[n]
+                bytes_per_op = max(t.spec.value_bytes, m.access_bytes)
+                demand_slow += tput * misses[n] * bytes_per_op
+                demand_fast += tput * (1 - misses[n]) * bytes_per_op
+            scale_s = max(1.0, demand_slow / slow_cap)
+            scale_f = max(1.0, demand_fast / fast_cap)
+            for n, t in self.tenants.items():
+                lat[n], slow_op[n] = op_lat(
+                    misses[n], max(t.spec.value_bytes, m.access_bytes),
+                    scale_f, scale_s,
+                )
+        return lat, slow_op
+
+    @staticmethod
+    def _mixture_quantile(q: float, miss: float, lat_fast: float, lat_slow: float) -> float:
+        return lat_slow if miss > (1.0 - q) else lat_fast
+
+    # ----------------------------------------------------------- epoch
+    def run_epoch(self) -> EpochRecord:
+        m = self.machine
+        tier = np.asarray(self.backend.pages.tier)
+        misses = {n: t.miss_ratio(tier) for n, t in self.tenants.items()}
+
+        # migration traffic of the PREVIOUS epoch's plan affects this epoch's
+        # latency; simpler: compute after policy and charge within this epoch.
+        lat, _slow0 = self._latencies(misses, migration_bytes=0.0)
+        ops = {
+            n: t.spec.threads / lat[n] * self.epoch_s for n, t in self.tenants.items()
+        }
+
+        # report accesses
+        counts = np.zeros(self.backend.num_pages, np.int64)
+        for n, t in self.tenants.items():
+            expect = t.probs * ops[n]
+            if self.access_noise:
+                expect = self.rng.poisson(np.maximum(expect, 0))
+            counts[t.page_ids] += expect.astype(np.int64)
+        self.backend.record_access(counts)
+
+        # policy tick (may be stalled by over-requested migration, Fig. 9)
+        stalled = self._stall_epochs >= 1.0
+        migrated = 0
+        if stalled:
+            self._stall_epochs -= 1.0
+            result = None
+        else:
+            result = self.backend.run_epoch()
+            migrated = int(result.plan.num_promote) + int(result.plan.num_demote)
+            mig_bytes = migrated * m.page_bytes
+            mig_time = mig_bytes / (m.migration_GBps * 1e9)
+            if mig_time > self.epoch_s:
+                self._stall_epochs += mig_time / self.epoch_s - 1.0
+
+        # recompute latency including migration interference
+        mig_bytes = migrated * m.page_bytes
+        lat, slow_op = self._latencies(misses, migration_bytes=mig_bytes)
+
+        def fast_op(n):
+            b = max(self.tenants[n].spec.value_bytes, m.access_bytes)
+            return m.fast.latency_ns * 1e-9 + b / (m.fast.bandwidth_GBps * 1e9)
+        # write-protect stall term: fraction of accesses landing on in-flight
+        # pages pay the slow-tier copy latency
+        mig_frac = min(mig_bytes / max(m.page_bytes, 1) / max(self.backend.num_pages, 1), 1.0)
+
+        tput = {n: t.spec.threads / lat[n] for n, t in self.tenants.items()}
+        measured = {}
+        for n in self.tenants:
+            h = self.handles[n]
+            measured[n] = (
+                float(self.backend.fmmr_of(h)) if hasattr(self.backend, "fmmr_of") else misses[n]
+            )
+        fast_pages = {
+            n: int(
+                (
+                    (np.asarray(self.backend.pages.owner)[self.tenants[n].page_ids] >= 0)
+                    & (np.asarray(self.backend.pages.tier)[self.tenants[n].page_ids] == TIER_FAST)
+                ).sum()
+            )
+            for n in self.tenants
+        }
+        q = lambda qq, n: self._mixture_quantile(
+            qq, misses[n] + mig_frac, fast_op(n), slow_op[n]
+        )
+        rec = EpochRecord(
+            epoch=len(self.history),
+            throughput=tput,
+            fmmr_true=misses,
+            fmmr_measured=measured,
+            fast_pages=fast_pages,
+            p50={n: q(0.50, n) for n in self.tenants},
+            p90={n: q(0.90, n) for n in self.tenants},
+            p99={n: q(0.99, n) for n in self.tenants},
+            migrated_pages=migrated,
+            stalled=stalled,
+        )
+        self.history.append(rec)
+        return rec
+
+    def run(
+        self,
+        n_epochs: int,
+        events: Optional[Dict[int, Callable[["ColocationSim"], None]]] = None,
+    ) -> List[EpochRecord]:
+        events = events or {}
+        for e in range(n_epochs):
+            if len(self.history) in events:
+                events[len(self.history)](self)
+            self.run_epoch()
+        return self.history

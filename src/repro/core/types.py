@@ -1,0 +1,107 @@
+"""MaxMem core state pytrees.
+
+All policy state lives in fixed-size jnp arrays so the per-epoch policy step
+is one jittable pure function (`repro.core.policy.policy_epoch`). Tenants are
+slots in [0, max_tenants); pages are slots in a global pool [0, num_pages).
+
+Tier encoding per page: -1 unallocated, 0 slow, 1 fast.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+TIER_NONE = -1
+TIER_SLOW = 0
+TIER_FAST = 1
+
+
+class PolicyParams(NamedTuple):
+    """Knobs of the paper's policy (§3.1/§3.2) in page units."""
+
+    fast_capacity: jnp.int32  # F: fast-tier page slots
+    migration_budget: jnp.int32  # R: total pages migrated per epoch (paper: 4 GB)
+    num_bins: jnp.int32 = 6  # hotness bins (paper: 6)
+    ewma_lambda: jnp.float32 = 0.5  # FMMR EWMA (paper: 0.5)
+    sample_period: jnp.int32 = 100  # PEBS-analogue: 1-in-100 accesses
+    fair_mode: bool = False  # False = paper FCFS; True = equal-distance fairness
+    # Stability addition (beyond paper; see EXPERIMENTS §Perf notes): tenants
+    # within +-hysteresis of target are neither needers nor donors. Without
+    # it, near-saturated mixes oscillate: serving one needer flips marginal
+    # donors over target and starvation rotates tenant-to-tenant.
+    hysteresis: jnp.float32 = 0.08
+
+
+class TenantState(NamedTuple):
+    """Per-tenant QoS state. Arrays of length max_tenants."""
+
+    active: jax.Array  # bool[T]
+    t_miss: jax.Array  # f32[T] target FMMR in (0, 1]
+    a_miss: jax.Array  # f32[T] EWMA of achieved FMMR
+    arrival: jax.Array  # i32[T] arrival order (FCFS tie-break); lower = earlier
+    cool_epoch: jax.Array  # i32[T] per-tenant cooling counter (lazy cooling)
+    flagged: jax.Array  # bool[T] cannot meet target (admin signal, §3.1)
+
+    @classmethod
+    def create(cls, max_tenants: int) -> "TenantState":
+        T = max_tenants
+        return cls(
+            active=jnp.zeros((T,), bool),
+            t_miss=jnp.ones((T,), jnp.float32),
+            a_miss=jnp.zeros((T,), jnp.float32),
+            arrival=jnp.full((T,), jnp.iinfo(jnp.int32).max, jnp.int32),
+            cool_epoch=jnp.zeros((T,), jnp.int32),
+            flagged=jnp.zeros((T,), bool),
+        )
+
+
+class PageState(NamedTuple):
+    """Per-page metadata. Arrays of length num_pages."""
+
+    owner: jax.Array  # i32[P] tenant slot, -1 if unallocated
+    tier: jax.Array  # i8[P]
+    count: jax.Array  # u32[P] accumulated (lazily cooled) sample count
+    last_cool: jax.Array  # i32[P] owner cool_epoch at last count update
+
+    @classmethod
+    def create(cls, num_pages: int) -> "PageState":
+        P = num_pages
+        return cls(
+            owner=jnp.full((P,), -1, jnp.int32),
+            tier=jnp.full((P,), TIER_NONE, jnp.int8),
+            count=jnp.zeros((P,), jnp.uint32),
+            last_cool=jnp.zeros((P,), jnp.int32),
+        )
+
+
+class MigrationPlan(NamedTuple):
+    """Output of the policy step: bounded page-move lists.
+
+    promote/demote: i32[R] page ids (padded with -1). Promotions move
+    slow->fast, demotions fast->slow. len <= migration_budget by construction.
+    """
+
+    promote: jax.Array
+    demote: jax.Array
+
+    @property
+    def num_promote(self) -> jax.Array:
+        return (self.promote >= 0).sum()
+
+    @property
+    def num_demote(self) -> jax.Array:
+        return (self.demote >= 0).sum()
+
+
+class EpochStats(NamedTuple):
+    """Telemetry emitted each epoch (per tenant unless noted)."""
+
+    fmmr_now: jax.Array  # f32[T] instantaneous FMMR this epoch
+    fmmr_ewma: jax.Array  # f32[T]
+    fast_pages: jax.Array  # i32[T]
+    slow_pages: jax.Array  # i32[T]
+    promoted: jax.Array  # i32[T]
+    demoted: jax.Array  # i32[T]
+    cooled: jax.Array  # bool[T] cooling event fired

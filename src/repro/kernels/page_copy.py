@@ -1,0 +1,93 @@
+"""Page-migration copy kernel — Pallas TPU (the I/OAT DMA-engine analogue).
+
+Gathers pool rows ``src_ids`` and scatters them to rows ``dst_ids`` of the
+destination pool in one grid sweep; both id vectors are scalar-prefetched so
+the BlockSpec index_maps perform the indirection (each grid step is one
+page-sized VMEM round trip — back-to-back DMA, no compute).
+
+Contract: ids must be in-range. Fixed-size plans pad with a reserved trash
+row (by convention the LAST row of the destination pool), mirroring how the
+MaxMem migration planner emits fixed-size plans.
+
+The destination pool is donated (input_output_aliased): the copy is in-place,
+like the DMA engine the paper offloads to.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(src_ids_ref, dst_ids_ref, src_ref, dst_ref, o_ref):
+    o_ref[...] = src_ref[...]
+
+
+def _move_kernel(src_ids_ref, dst_ids_ref, src_ref, o_ref):
+    o_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def page_move(
+    pool: jax.Array,  # [P, E] (donated; in-place moves)
+    src_ids: jax.Array,  # [M] int32
+    dst_ids: jax.Array,  # [M] int32
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Intra-pool page moves: pool[dst_ids[i]] = pool[src_ids[i]].
+
+    One buffer aliased input->output with different index maps (read row
+    src_ids[i], write row dst_ids[i]). GATHER semantics: reads must see the
+    pre-plan pool, so a plan must never read a row it also writes. The MaxMem
+    executor guarantees this (promote sources are owned slow slots; demote
+    destinations are unowned slow slots — disjoint sets)."""
+    E = pool.shape[1]
+    M = src_ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda i, src_ids, dst_ids: (src_ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, E), lambda i, src_ids, dst_ids: (dst_ids[i], 0)),
+    )
+    return pl.pallas_call(
+        _move_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},  # pool (after 2 scalar args) -> out
+        interpret=interpret,
+    )(src_ids, dst_ids, pool)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(1,))
+def page_copy(
+    src_pool: jax.Array,  # [Ps, E]
+    dst_pool: jax.Array,  # [Pd, E] (donated)
+    src_ids: jax.Array,  # [M] int32
+    dst_ids: jax.Array,  # [M] int32
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    M = src_ids.shape[0]
+    E = src_pool.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda i, src_ids, dst_ids: (src_ids[i], 0)),
+            pl.BlockSpec((1, E), lambda i, src_ids, dst_ids: (dst_ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, E), lambda i, src_ids, dst_ids: (dst_ids[i], 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_pool.shape, dst_pool.dtype),
+        input_output_aliases={3: 0},  # dst_pool (arg idx incl. 2 scalar args) -> out
+        interpret=interpret,
+    )(src_ids, dst_ids, src_pool, dst_pool)

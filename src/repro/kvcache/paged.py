@@ -1,0 +1,172 @@
+"""Tiered paged KV cache.
+
+A *logical page* (what MaxMem tracks and migrates) is a block of
+``page_tokens`` consecutive tokens of one sequence, spanning ALL layers and
+both K and V — for yi-6b with 16-token pages that is ~0.5 MB, i.e. exactly a
+huge-page-sized migration unit (DESIGN.md §2).
+
+Physically, pools are [L, n_slots, page, nkv, dh] for K and V. Slots
+[0, n_fast) live in the fast tier (HBM), slots [n_fast, n_slots) in the slow
+tier (host memory via ``pinned_host`` on real TPU). ``slot_of`` maps logical
+page id -> physical slot; migration copies slot contents across the boundary
+and rewrites the mapping — block tables hold logical ids and never change.
+
+Page heat summaries (Quest-style per-page key min/max) ride along for the
+top-k page selector in the serving engine.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.manager import CentralManager
+from repro.core.types import TIER_FAST, TIER_SLOW, MigrationPlan
+from repro.kernels import ops
+
+
+class TieredPagedKV:
+    def __init__(
+        self,
+        cfg,
+        n_fast_slots: int,
+        n_slow_slots: int,
+        page_tokens: int = 16,
+        dtype=jnp.float32,
+    ):
+        self.cfg = cfg
+        self.page = page_tokens
+        self.n_fast = n_fast_slots
+        self.n_slots = n_fast_slots + n_slow_slots
+        L, nkv, dh = cfg.num_layers, cfg.num_kv_heads, cfg.d_head
+        self.k_pool = jnp.zeros((L, self.n_slots, page_tokens, nkv, dh), dtype)
+        self.v_pool = jnp.zeros((L, self.n_slots, page_tokens, nkv, dh), dtype)
+        # Quest summaries (per layer): elementwise min/max of keys in the page
+        self.k_max = jnp.full((L, self.n_slots, nkv, dh), -jnp.inf, jnp.float32)
+        self.k_min = jnp.full((L, self.n_slots, nkv, dh), jnp.inf, jnp.float32)
+        # logical page id -> physical slot. Identity at boot: manager hands
+        # out page ids with tier semantics (id < n_fast iff fast at alloc).
+        self.slot_of = np.arange(self.n_slots, dtype=np.int32)
+        self._slot_owner = np.full(self.n_slots, -1, np.int32)  # logical page or -1
+
+    # ------------------------------------------------------------ mapping
+    def slots_for(self, logical_pages: np.ndarray) -> np.ndarray:
+        return self.slot_of[np.asarray(logical_pages)]
+
+    def page_bytes(self) -> int:
+        L, nkv, dh = self.cfg.num_layers, self.cfg.num_kv_heads, self.cfg.d_head
+        return L * 2 * self.page * nkv * dh * self.k_pool.dtype.itemsize
+
+    # ------------------------------------------------------------ writes
+    def write_tokens(
+        self,
+        layer_kv: Tuple[jax.Array, jax.Array],  # k,v: [L, B, T, nkv, dh]
+        logical_pages: np.ndarray,  # [B, n_pages_of_write] logical ids
+        start_pos: int,
+    ) -> None:
+        """Scatter T tokens (from prefill) into pages. Host-side loop over
+        pages — prefill writes are not the steady-state hot path."""
+        k, v = layer_kv
+        L, B, T, nkv, dh = k.shape
+        p = self.page
+        for b in range(B):
+            for j in range((start_pos + T + p - 1) // p):
+                lo = max(j * p - start_pos, 0)
+                hi = min((j + 1) * p - start_pos, T)
+                if hi <= lo:
+                    continue
+                slot = int(self.slot_of[int(logical_pages[b, j])])
+                off = (start_pos + lo) % p
+                kb = k[:, b, lo:hi]
+                vb = v[:, b, lo:hi]
+                self.k_pool = jax.lax.dynamic_update_slice(
+                    self.k_pool, kb[:, None].astype(self.k_pool.dtype), (0, slot, off, 0, 0)
+                )
+                self.v_pool = jax.lax.dynamic_update_slice(
+                    self.v_pool, vb[:, None].astype(self.v_pool.dtype), (0, slot, off, 0, 0)
+                )
+                kmax = jnp.maximum(self.k_max[:, slot], kb.max(axis=1).astype(jnp.float32))
+                kmin = jnp.minimum(self.k_min[:, slot], kb.min(axis=1).astype(jnp.float32))
+                self.k_max = self.k_max.at[:, slot].set(kmax)
+                self.k_min = self.k_min.at[:, slot].set(kmin)
+
+    # ------------------------------------------------------------ migration
+    def migrate(self, plan: MigrationPlan, manager: CentralManager) -> int:
+        """Execute a MaxMem plan: move page data across the tier boundary and
+        rewrite slot_of. Demotions first (they free fast slots). Returns the
+        number of pages moved."""
+        promote = np.asarray(plan.promote)
+        demote = np.asarray(plan.demote)
+        promote = promote[promote >= 0]
+        demote = demote[demote >= 0]
+        if len(promote) == 0 and len(demote) == 0:
+            return 0
+
+        # slot_of is a permutation: "free" slots are those whose logical
+        # holder is unallocated in the manager. Moving a page swaps its
+        # mapping with such a holder (whose slot content is garbage).
+        owner = np.asarray(manager.pages.owner)
+        inv = np.empty_like(self.slot_of)
+        inv[self.slot_of] = np.arange(self.n_slots, dtype=np.int32)
+        free_fast = [s for s in range(self.n_fast) if owner[inv[s]] < 0]
+        free_slow = [s for s in range(self.n_fast, self.n_slots) if owner[inv[s]] < 0]
+
+        moves_src: List[int] = []
+        moves_dst: List[int] = []
+
+        def _swap(pg: int, dst: int):
+            src = int(self.slot_of[pg])
+            holder = int(inv[dst])  # unallocated logical page holding dst
+            self.slot_of[pg] = dst
+            self.slot_of[holder] = src
+            inv[dst] = pg
+            inv[src] = holder
+            moves_src.append(src)
+            moves_dst.append(dst)
+            return src
+
+        for pg in demote:
+            if int(self.slot_of[pg]) >= self.n_fast:
+                continue  # already slow (idempotent)
+            if not free_slow:
+                break
+            freed = _swap(int(pg), free_slow.pop())
+            free_fast.append(freed)
+        for pg in promote:
+            if int(self.slot_of[pg]) < self.n_fast:
+                continue
+            if not free_fast:
+                break  # plan over-eager for the slots actually available
+            freed = _swap(int(pg), free_fast.pop())
+            free_slow.append(freed)
+        if not moves_src:
+            return 0
+
+        src = jnp.asarray(moves_src, jnp.int32)
+        dst = jnp.asarray(moves_dst, jnp.int32)
+        L = self.cfg.num_layers
+        n = self.n_slots
+        # expand page moves across layers: row id = l * n_slots + slot
+        src_all = (jnp.arange(L)[:, None] * n + src[None, :]).reshape(-1)
+        dst_all = (jnp.arange(L)[:, None] * n + dst[None, :]).reshape(-1)
+        E = int(np.prod(self.k_pool.shape[2:]))
+        self.k_pool = ops.page_move(
+            self.k_pool.reshape(L * n, E), src_all, dst_all
+        ).reshape(self.k_pool.shape)
+        self.v_pool = ops.page_move(
+            self.v_pool.reshape(L * n, E), src_all, dst_all
+        ).reshape(self.v_pool.shape)
+        Es = int(np.prod(self.k_max.shape[2:]))
+        self.k_max = ops.page_move(
+            self.k_max.reshape(L * n, Es), src_all, dst_all
+        ).reshape(self.k_max.shape)
+        self.k_min = ops.page_move(
+            self.k_min.reshape(L * n, Es), src_all, dst_all
+        ).reshape(self.k_min.shape)
+        return len(moves_src)
+
+    # ------------------------------------------------------------ telemetry
+    def tier_of_pages(self, logical_pages: np.ndarray) -> np.ndarray:
+        return np.where(self.slots_for(logical_pages) < self.n_fast, TIER_FAST, TIER_SLOW)

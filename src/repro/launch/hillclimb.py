@@ -1,0 +1,145 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: lower a cell under tuning-flag variants, report
+the three roofline terms per variant, and dump top byte/collective
+contributors for hypothesis formation.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch yi-6b --shape train_4k \
+      --variants baseline,bf16_scores --attribute
+"""
+import argparse
+import json
+
+from repro.analysis.attribution import attribute, top
+from repro.launch.dryrun import run_cell
+from repro.models import tuning
+
+# named variants: tuning-flag overrides (+ optional remat override)
+VARIANTS = {
+    "baseline": {  # paper-faithful configuration (pre-hillclimb defaults)
+        "q_block": 512, "kv_block": 1024, "seq_parallel_activations": False,
+        "moe_shardmap": False, "decode_deferred_commit": False,
+        "serve_resident_weights": False,
+    },
+    "optimized": {},  # current framework defaults
+    "bf16_scores": {"attn_score_f32": False},
+    "kv2048": {"kv_block": 2048},
+    "kv4096": {"kv_block": 4096, "q_block": 1024},
+    "seq_parallel": {"seq_parallel_activations": True},
+    "loss_bf16": {"loss_logits_bf16": True},
+    "remat_dots": {"_remat": "dots"},
+    "no_remat": {"_remat": "none"},
+    "moe_local_dispatch": {"moe_shard_capacity": True},
+    "cap1.0": {"capacity_factor": 1.0},
+    "moe_local+cap1.0": {"moe_shard_capacity": True, "capacity_factor": 1.0},
+    "combo_mem": {"attn_score_f32": False, "loss_logits_bf16": True},
+    "combo_mem_sp": {
+        "attn_score_f32": False,
+        "loss_logits_bf16": True,
+        "seq_parallel_activations": True,
+    },
+    "sp+kv4096": {"seq_parallel_activations": True, "kv_block": 4096,
+                  "q_block": 1024},
+    "sp+loss_bf16": {"seq_parallel_activations": True, "loss_logits_bf16": True},
+    "sp+kv4096+bf16": {"seq_parallel_activations": True, "kv_block": 4096,
+                       "q_block": 1024, "attn_score_f32": False},
+    "sp+kv4096+dots": {"seq_parallel_activations": True, "kv_block": 4096,
+                       "q_block": 1024, "_remat": "dots"},
+    "sp+kv4096q2048+dots": {"seq_parallel_activations": True, "kv_block": 4096,
+                            "q_block": 2048, "_remat": "dots"},
+    "best+loss_bf16": {"seq_parallel_activations": True, "kv_block": 4096,
+                       "q_block": 1024, "_remat": "dots", "loss_logits_bf16": True},
+    "best+norm_bf16": {"seq_parallel_activations": True, "kv_block": 4096,
+                       "q_block": 1024, "_remat": "dots", "norm_bf16_apply": True},
+    "moe_2d": {"moe_shard_both": True},
+    "moe_a2a": {"moe_explicit_a2a": True},
+    "moe_sm": {"moe_shardmap": True},
+    "deferred": {"decode_deferred_commit": True},
+    "deferred+resident": {"decode_deferred_commit": True,
+                          "serve_resident_weights": True},
+    "moe_sm+cap1.0": {"moe_shardmap": True, "capacity_factor": 1.0},
+    "moe_best": {"moe_shardmap": True, "capacity_factor": 1.0, "_remat": "dots"},
+    "moe_best+kv": {"moe_shardmap": True, "capacity_factor": 1.0,
+                    "_remat": "dots", "kv_block": 4096, "q_block": 1024},
+    "moe_best+loss": {"moe_shardmap": True, "capacity_factor": 1.0,
+                      "_remat": "dots", "loss_logits_bf16": True},
+    "ssd_q64": {"ssd_chunk": 64},
+    "ssd_q256": {"ssd_chunk": 256},
+    "ssd_q64+dots": {"ssd_chunk": 64, "_remat": "dots"},
+    "ssd_q512": {"ssd_chunk": 512},
+    "ssd_q256+dots": {"ssd_chunk": 256, "_remat": "dots"},
+    "moe_a2a+cap1.0": {"moe_explicit_a2a": True, "capacity_factor": 1.0},
+    "moe_2d+cap1.0": {"moe_shard_both": True, "capacity_factor": 1.0},
+    "moe_2d+cap1.0+sp": {"moe_shard_both": True, "capacity_factor": 1.0,
+                         "seq_parallel_activations": True},
+}
+
+
+def run_variant(arch, shape, name, *, multi_pod=False, attribute_top=False):
+    spec = dict(VARIANTS[name])
+    remat = spec.pop("_remat", "block")
+    with tuning.tuned(**spec):
+        res = run_cell(
+            arch, shape, multi_pod=multi_pod, remat=remat,
+            save=False, verbose=False,
+        )
+    r = res["roofline"]
+    print(
+        f"{name:20s} compute={r['compute_s']:9.3e} memory={r['memory_s']:9.3e} "
+        f"collective={r['collective_s']:9.3e} dom={r['dominant']:10s} "
+        f"bound={r['step_time_lower_bound_s']:9.3e} useful={r['useful_ratio']:.3f} "
+        f"frac={r['roofline_fraction']:.4f}"
+    )
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attribute", action="store_true",
+                    help="dump top contributors for the FIRST variant")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    results = {}
+    for i, name in enumerate(args.variants.split(",")):
+        res = run_variant(args.arch, args.shape, name, multi_pod=args.multi_pod)
+        results[name] = res
+        if args.attribute and i == 0:
+            # re-lower to get text (run_cell doesn't keep it); cheap enough
+            import jax
+            from repro.configs import get_config, get_shape
+            from repro.launch.dryrun import build_cell
+            from repro.launch.mesh import make_production_mesh
+            from repro.launch.partitioning import use_partitioning
+            from repro.launch.shardings import rules_for
+
+            cfg, shp = get_config(args.arch), get_shape(args.shape)
+            mesh = make_production_mesh(multi_pod=args.multi_pod)
+            rules = rules_for(cfg, mesh, shp)
+            spec = dict(VARIANTS[name])
+            remat = spec.pop("_remat", "block")
+            with tuning.tuned(**spec), use_partitioning(mesh, rules):
+                fn, in_sh, out_sh, in_shapes, donate = build_cell(
+                    cfg, shp, mesh, rules, remat=remat
+                )
+                compiled = (
+                    jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                            donate_argnums=donate)
+                    .lower(*in_shapes).compile()
+                )
+            contribs = attribute(compiled.as_text())
+            top(contribs, "bytes", 12)
+            top(contribs, "coll_bytes", 8)
+            top(contribs, "flops", 8)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

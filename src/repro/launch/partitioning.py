@@ -1,0 +1,160 @@
+"""Logical-axis partitioning.
+
+Model code annotates activations with *logical* axis names via ``shard(x,
+"batch", "seq", None)``. The launch layer installs a (mesh, rules) context;
+outside any context the calls are no-ops, so the same model code runs on a
+laptop CPU and on a 512-chip mesh unchanged.
+
+Rules map logical names -> mesh axis name(s) (or None = replicated). Param
+shardings are derived from the same rules by ``param_specs`` via pytree-path
+heuristics, so adding a new architecture does not require hand-writing a
+sharding tree.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisNames = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, AxisNames]]]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextmanager
+def use_partitioning(mesh: Mesh, rules: Dict[str, AxisNames]):
+    prev = _current()
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def logical_spec(names: Sequence[Optional[str]], rules: Dict[str, AxisNames]) -> P:
+    """Translate logical dim names -> PartitionSpec, dropping duplicate axes."""
+    used: set = set()
+    out = []
+    for n in names:
+        ax = rules.get(n) if n else None
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without a context)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_spec(names, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Default logical rules
+# --------------------------------------------------------------------------
+def default_rules(multi_pod: bool = False) -> Dict[str, AxisNames]:
+    dp: AxisNames = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": dp,
+        "fsdp": dp,
+        "seq": None,
+        "d_model": None,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "kv_seq": None,
+        "d_ff": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "experts_buf": ("model",),  # MoE dispatch buffer expert dim
+        "expert_cap": None,  # MoE dispatch buffer capacity dim
+        "a2a_cap": ("data",),  # explicit-a2a staging: C over data
+        "seq_sp": ("model",),  # sequence-parallel residual stream
+        "ssm_heads": ("model",),
+        "ssm_state": None,
+        "enc_seq": None,
+    }
+
+
+# --------------------------------------------------------------------------
+# Param spec derivation (pytree-path heuristics)
+# --------------------------------------------------------------------------
+# Each entry: (regex on '/'.joined path, logical names per trailing dims).
+# Leading stacked-layer dims (from scan) are detected by ndim mismatch and
+# get None. First match wins.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed$", ("vocab", "fsdp_embed")),
+    (r"lm_head$", ("fsdp_embed", "vocab")),
+    (r"pos_embed$", (None, None)),
+    (r"attn/w_q$", ("fsdp", "heads")),
+    (r"attn/w_k$", ("fsdp", "kv_heads")),
+    (r"attn/w_v$", ("fsdp", "kv_heads")),
+    (r"attn/w_o$", ("heads", "fsdp")),
+    (r"attn/b_q$", ("heads",)),
+    (r"attn/b_[kv]$", ("kv_heads",)),
+    (r"attn/[qk]_norm$", (None,)),
+    (r"(mlp|shared)/w_(gate|up)$", ("fsdp", "d_ff")),
+    (r"(mlp|shared)/w_down$", ("d_ff", "fsdp")),
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/w_(gate|up)$", ("experts", "fsdp", None)),
+    (r"moe/w_down$", ("experts", None, "fsdp")),
+    (r"ssm/in_proj$", ("fsdp", "ssm_inner")),
+    (r"ssm/out_proj$", ("ssm_inner", "fsdp")),
+    (r"ssm/conv_[wb]$", None),  # tiny; replicated
+    (r"ssm/(A_log|D|dt_bias)$", None),
+    (r"norm", None),
+    (r"", None),  # default: replicated
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Any, rules: Dict[str, AxisNames], num_layers_dims: int = 1):
+    """Derive a PartitionSpec pytree for a param pytree (of ShapeDtypeStruct
+    or arrays). Stacked-layer leading dims get None."""
+
+    def spec_for(path, leaf) -> P:
+        ps = _path_str(path)
+        shape = leaf.shape
+        for pat, names in _PARAM_RULES:
+            if re.search(pat, ps):
+                if names is None:
+                    return P()
+                extra = len(shape) - len(names)
+                full = (None,) * extra + tuple(names)
+                return logical_spec(full, rules)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)

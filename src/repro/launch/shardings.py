@@ -1,0 +1,161 @@
+"""Per-architecture sharding rules + input/cache/state spec builders.
+
+Rules adapt to the mesh's model-axis size: logical axes whose dimension does
+not divide the axis fall back to replication (or to sequence sharding for KV
+caches), per DESIGN.md §5. Everything downstream (param specs, cache specs,
+batch specs) derives from the one rules dict.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.partitioning import default_rules, logical_spec, param_specs
+from repro.models import tuning
+from repro.models.encdec import EncDecCache
+from repro.models.hybrid import HybridCache
+from repro.models.ssm_lm import SSMLMCache
+from repro.models.transformer import KVCache
+
+
+def rules_for(cfg, mesh: Mesh, shape=None) -> Dict[str, Any]:
+    multi_pod = "pod" in mesh.axis_names
+    r = default_rules(multi_pod)
+    m = mesh.shape["model"]
+    dp = r["batch"]
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_size *= mesh.shape[a]
+    if shape is not None and shape.global_batch % dp_size != 0:
+        # e.g. long_500k (B=1): batch replicated; KV sequence carries memory
+        r["batch"] = None
+        r["kv_seq"] = ("model",)
+
+    # big embeddings also shard their d_model dim over the data axes (FSDP)
+    r["fsdp_embed"] = dp if cfg.vocab_size * cfg.d_model > 5e7 else None
+
+    if shape is not None and shape.is_decode and tuning.FLAGS.serve_resident_weights:
+        # inference layout: no optimizer state, weights replicated over the
+        # data axes (TP-sharded only) => zero per-step FSDP gathers
+        r["fsdp"] = None
+        r["fsdp_embed"] = None
+
+    def divides(n):
+        return n > 0 and n % m == 0
+
+    if not divides(cfg.num_heads):
+        # uneven head sharding (GSPMD pads); replicate only tiny models
+        r["heads"] = ("model",) if cfg.num_heads >= m else None
+    if not divides(cfg.num_kv_heads):
+        r["kv_heads"] = None
+        # shard decode KV over sequence instead (flash-decoding split-K)
+        r["kv_seq"] = ("model",)
+    if not divides(cfg.d_ff):
+        r["d_ff"] = None
+    if cfg.vocab_size % m:
+        r["vocab"] = ("model",) if cfg.vocab_size > 100_000 else None
+    if cfg.is_moe and tuning.FLAGS.moe_shard_both:
+        r["experts_buf"] = ("model",)
+        r["expert_cap"] = dp
+    elif cfg.is_moe and tuning.FLAGS.moe_shard_capacity:
+        # §Perf: keep the dispatch buffer token-sharded (scatter stays local;
+        # the expert einsum does the honest all-to-all instead of XLA
+        # materializing the GLOBAL [E, C, d] buffer per device)
+        r["experts_buf"] = None
+        r["expert_cap"] = dp
+    if cfg.ssm_state:
+        r["ssm_heads"] = ("model",) if divides(cfg.ssm_heads) else None
+        # packed in_proj dim is not TP-shardable (slice boundaries misalign);
+        # SSM weights stay FSDP-only. See DESIGN.md §5 + EXPERIMENTS §Perf.
+        r["ssm_inner"] = None
+    return r
+
+
+# --------------------------------------------------------------------------- specs
+def _ns(mesh, *names):
+    def f(rules):
+        return NamedSharding(mesh, logical_spec(names, rules))
+    return f
+
+
+def batch_specs(cfg, shape, mesh: Mesh, rules) -> Dict[str, NamedSharding]:
+    mk = lambda *names: NamedSharding(mesh, logical_spec(names, rules))
+    if shape.is_decode:
+        return {"token": mk("batch")}
+    specs = {"tokens": mk("batch", "seq"), "labels": mk("batch", "seq")}
+    if cfg.is_encoder_decoder:
+        specs["enc_embeds"] = mk("batch", "enc_seq", None)
+    return specs
+
+
+def params_sharding(params_shape, mesh: Mesh, rules):
+    specs = param_specs(params_shape, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_sharding(cache_shape, cfg, mesh: Mesh, rules):
+    """NamedSharding tree for a decode cache (family-specific layouts)."""
+    mk = lambda *names: NamedSharding(mesh, logical_spec(names, rules))
+    rep = mk()
+
+    def kv5(_):  # [L, B, S, h, dh]
+        return mk(None, "batch", "kv_seq", "kv_heads", None)
+
+    if isinstance(cache_shape, KVCache):
+        return KVCache(k=kv5(None), v=kv5(None), pos=rep)
+    if isinstance(cache_shape, SSMLMCache):
+        from repro.models.ssm import SSMCache
+
+        return SSMLMCache(
+            layers=SSMCache(
+                conv=mk(None, "batch", None, None),
+                state=mk(None, "batch", "ssm_heads", None, None),
+            ),
+            pos=rep,
+        )
+    if isinstance(cache_shape, HybridCache):
+        from repro.models.ssm import SSMCache
+
+        return HybridCache(
+            group_ssm=SSMCache(
+                conv=mk(None, None, "batch", None, None),
+                state=mk(None, None, "batch", "ssm_heads", None, None),
+            ),
+            tail_ssm=SSMCache(
+                conv=mk(None, "batch", None, None),
+                state=mk(None, "batch", "ssm_heads", None, None),
+            ),
+            k=kv5(None),
+            v=kv5(None),
+            pos=rep,
+        )
+    if isinstance(cache_shape, EncDecCache):
+        # cross-attn KV: enc_len (1500) divides nothing; replicate seq dim
+        cross = mk(None, "batch", "enc_seq", "kv_heads", None)
+        return EncDecCache(k=kv5(None), v=kv5(None), ck=cross, cv=cross, pos=rep)
+    raise TypeError(f"unknown cache type {type(cache_shape)}")
+
+
+def train_state_sharding(state_shape, mesh: Mesh, rules):
+    """TrainState: opt state mirrors param shardings; step replicated."""
+    from repro.training.train_state import TrainState
+    from repro.training.optimizer import OptState
+
+    p_sh = params_sharding(state_shape.params, mesh, rules)
+    return TrainState(
+        params=p_sh,
+        opt=OptState(
+            m=params_sharding(state_shape.opt.m, mesh, rules),
+            v=params_sharding(state_shape.opt.v, mesh, rules),
+            step=NamedSharding(mesh, P()),
+        ),
+        error_buf=(
+            params_sharding(state_shape.error_buf, mesh, rules)
+            if state_shape.error_buf is not None
+            else None
+        ),
+    )

@@ -1,0 +1,234 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv audio frontend is a STUB: inputs are precomputed frame embeddings
+[B, enc_len, d] (what the 2x strided conv1d stem would produce). Whisper uses
+absolute positions; we use on-the-fly sinusoidal embeddings (parameter-free)
+so decoder shape cells beyond the original 448-token max are well-defined.
+Pre-LN LayerNorm blocks with biases, GELU MLPs, MHA (kv == heads).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.partitioning import shard
+from repro.models import layers as L
+from repro.models.transformer import chunked_ce_loss
+
+Params = Dict[str, Any]
+
+
+class EncDecCache(NamedTuple):
+    k: jax.Array  # [L, B, S, h, dh] decoder self-attn
+    v: jax.Array
+    ck: jax.Array  # [L, B, enc_len, h, dh] cross-attn (static after prefill)
+    cv: jax.Array
+    pos: jax.Array
+
+
+def sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """positions [...,] -> [..., d] sinusoidal embedding (fp32)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _ln_params(d, dt):
+    return {"w": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)}
+
+
+def _ln(x, p, eps):
+    return L.layer_norm(x, p["w"], p["b"], eps)
+
+
+def init_enc_layer(rng, cfg) -> Params:
+    k1, k2 = jax.random.split(rng)
+    d = cfg.d_model
+    return {
+        "attn_norm": _ln_params(d, cfg.pdtype),
+        "attn": L.init_attention(k1, cfg),
+        "mlp_norm": _ln_params(d, cfg.pdtype),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def init_dec_layer(rng, cfg) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = cfg.d_model
+    return {
+        "attn_norm": _ln_params(d, cfg.pdtype),
+        "attn": L.init_attention(k1, cfg),
+        "cross_norm": _ln_params(d, cfg.pdtype),
+        "cross": L.init_attention(k2, cfg),
+        "mlp_norm": _ln_params(d, cfg.pdtype),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init_params(rng, cfg) -> Params:
+    ks = jax.random.split(rng, 4)
+    ekeys = jax.random.split(ks[0], cfg.encoder_layers)
+    dkeys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": L.embed_init(ks[2], cfg.vocab_size, cfg.d_model, cfg.pdtype),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(ekeys),
+        "enc_norm": _ln_params(cfg.d_model, cfg.pdtype),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dkeys),
+        "final_norm": _ln_params(cfg.d_model, cfg.pdtype),
+    }
+
+
+# --------------------------------------------------------------------------- encoder
+def encode(params: Params, enc_embeds: jax.Array, cfg, *, remat="block") -> jax.Array:
+    """enc_embeds: [B, T, d] stub frontend output."""
+    B, T, d = enc_embeds.shape
+    x = enc_embeds.astype(cfg.cdtype) + sinusoid(jnp.arange(T), d).astype(cfg.cdtype)
+    x = shard(x, "batch", "enc_seq", None)
+
+    def body(h, lp):
+        a = _ln(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], a, cfg)
+        o = L.blocked_attention(q, k, v, causal=False)
+        h = h + o.reshape(B, T, -1) @ lp["attn"]["w_o"]
+        m = _ln(h, lp["mlp_norm"], cfg.norm_eps)
+        h = h + L.mlp(lp["mlp"], m, cfg)
+        return h, None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _ln(x, params["enc_norm"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------- decoder
+def _dec_layer_full(lp, x, enc_out, cfg, B, Sq):
+    a = _ln(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = L.qkv_project(lp["attn"], a, cfg)
+    o = L.blocked_attention(q, k, v, causal=True)
+    x = x + o.reshape(B, Sq, -1) @ lp["attn"]["w_o"]
+    c = _ln(x, lp["cross_norm"], cfg.norm_eps)
+    qc, _, _ = L.qkv_project(lp["cross"], c, cfg)
+    _, kc, vc = L.qkv_project(lp["cross"], enc_out, cfg)
+    oc = L.blocked_attention(qc, kc, vc, causal=False)
+    x = x + oc.reshape(B, Sq, -1) @ lp["cross"]["w_o"]
+    m = _ln(x, lp["mlp_norm"], cfg.norm_eps)
+    return x + L.mlp(lp["mlp"], m, cfg)
+
+
+def loss_fn(params: Params, batch, cfg, *, remat: str = "block"):
+    """batch: enc_embeds [B, T, d], tokens [B, S], labels [B, S]."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, Sq = tokens.shape
+    enc_out = encode(params, batch["enc_embeds"], cfg, remat=remat)
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    x = x + sinusoid(jnp.arange(Sq), cfg.d_model).astype(cfg.cdtype)
+    x = shard(x, "batch", "seq", None)
+
+    def body(h, lp):
+        return _dec_layer_full(lp, h, enc_out, cfg, B, Sq), None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T  # whisper ties output head to embedding
+    tot, cnt = chunked_ce_loss(x, head, labels, cfg)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"ce": loss, "aux": jnp.zeros(()), "tokens": cnt}
+
+
+# --------------------------------------------------------------------------- decode
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> EncDecCache:
+    dt = dtype or cfg.cdtype
+    Ld = cfg.num_layers
+    h, dh = cfg.num_kv_heads, cfg.d_head
+    T = cfg.max_encoder_len
+    return EncDecCache(
+        k=jnp.zeros((Ld, batch, max_len, h, dh), dt),
+        v=jnp.zeros((Ld, batch, max_len, h, dh), dt),
+        ck=jnp.zeros((Ld, batch, T, h, dh), dt),
+        cv=jnp.zeros((Ld, batch, T, h, dh), dt),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill_cross(params: Params, enc_embeds: jax.Array, cfg, max_len: int) -> EncDecCache:
+    """Encode + precompute per-layer cross-attn K/V."""
+    enc_out = encode(params, enc_embeds, cfg, remat="none")
+    B = enc_out.shape[0]
+
+    def per_layer(lp):
+        _, kc, vc = L.qkv_project(lp["cross"], enc_out, cfg)
+        return kc.astype(cfg.cdtype), vc.astype(cfg.cdtype)
+
+    ck, cv = jax.vmap(per_layer)(params["dec_layers"])  # [L, B, T, h, dh]
+    base = init_cache(cfg, B, max_len)
+    return base._replace(ck=ck, cv=cv)
+
+
+def prefill(params: Params, enc_embeds: jax.Array, tokens: jax.Array, cfg, max_len: int):
+    """Encoder + teacher-forced decoder prefill: builds the full EncDecCache."""
+    enc_out = encode(params, enc_embeds, cfg, remat="none")
+    B, Sq = tokens.shape
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    x = x + sinusoid(jnp.arange(Sq), cfg.d_model).astype(cfg.cdtype)
+    x = shard(x, "batch", "seq", None)
+
+    def body(h, lp):
+        a = _ln(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], a, cfg)
+        o = L.blocked_attention(q, k, v, causal=True)
+        h = h + o.reshape(B, Sq, -1) @ lp["attn"]["w_o"]
+        c = _ln(h, lp["cross_norm"], cfg.norm_eps)
+        qc, _, _ = L.qkv_project(lp["cross"], c, cfg)
+        _, kc, vc = L.qkv_project(lp["cross"], enc_out, cfg)
+        oc = L.blocked_attention(qc, kc, vc, causal=False)
+        h = h + oc.reshape(B, Sq, -1) @ lp["cross"]["w_o"]
+        m = _ln(h, lp["mlp_norm"], cfg.norm_eps)
+        h = h + L.mlp(lp["mlp"], m, cfg)
+        return h, (k.astype(cfg.cdtype), v.astype(cfg.cdtype),
+                   kc.astype(cfg.cdtype), vc.astype(cfg.cdtype))
+
+    x, (k, v, ck, cv) = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["embed"].T).astype(jnp.float32)
+    logits = shard(logits, "batch", "vocab")
+    pad = max_len - Sq
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits, EncDecCache(k=k, v=v, ck=ck, cv=cv, pos=jnp.asarray(Sq, jnp.int32))
+
+
+def decode_step(params: Params, token: jax.Array, cache: EncDecCache, cfg):
+    B = token.shape[0]
+    pos = cache.pos
+    x = params["embed"][token[:, None]].astype(cfg.cdtype)
+    x = x + sinusoid(jnp.full((1,), pos), cfg.d_model).astype(cfg.cdtype)
+
+    def body(h, inp):
+        lp, kc, vc, cck, ccv = inp
+        a = _ln(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], a, cfg)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+        o = L.decode_attention(q, kc, vc, pos + 1)
+        h = h + o.reshape(B, 1, -1) @ lp["attn"]["w_o"]
+        c = _ln(h, lp["cross_norm"], cfg.norm_eps)
+        qc, _, _ = L.qkv_project(lp["cross"], c, cfg)
+        oc = L.decode_attention(qc, cck, ccv, cck.shape[1])
+        h = h + oc.reshape(B, 1, -1) @ lp["cross"]["w_o"]
+        m = _ln(h, lp["mlp_norm"], cfg.norm_eps)
+        return h + L.mlp(lp["mlp"], m, cfg), (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache.k, cache.v, cache.ck, cache.cv)
+    )
+    x = _ln(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["embed"].T).astype(jnp.float32)
+    logits = shard(logits, "batch", "vocab")
+    return logits, cache._replace(k=k_new, v=v_new, pos=pos + 1)

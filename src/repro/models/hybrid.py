@@ -1,0 +1,251 @@
+"""Zamba2-style hybrid: Mamba2 trunk + one *shared* (weight-tied) attention
+block invoked after every ``cfg.attn_every`` SSM layers [arXiv:2411.15242].
+
+Simplifications vs the released checkpoints (noted in DESIGN.md): the shared
+block consumes the hidden state directly (no concat-with-embedding re-
+projection, no per-invocation LoRA deltas). The shared attention runs with a
+sliding window (cfg.sliding_window) so long_500k decode stays sub-quadratic.
+
+Layer layout for L=38, attn_every=6:
+  6 groups x (6 mamba layers -> shared attn+mlp) + 2 tail mamba layers.
+Each shared-attn invocation has its own KV cache (weights shared, state not).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.partitioning import shard
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import (
+    block_decode,
+    block_full,
+    chunked_ce_loss,
+    lm_head_weight,
+)
+
+Params = Dict[str, Any]
+
+
+class HybridCache(NamedTuple):
+    group_ssm: S.SSMCache  # leading dims [G, per_group]
+    tail_ssm: S.SSMCache  # leading dim [n_tail]
+    k: jax.Array  # [G, B, S, nkv, dh]
+    v: jax.Array
+    pos: jax.Array  # [] int32
+
+
+def _layout(cfg) -> Tuple[int, int, int]:
+    groups = cfg.attn_invocations
+    per_group = cfg.attn_every
+    tail = cfg.num_layers - groups * per_group
+    return groups, per_group, tail
+
+
+def init_mamba_layer(rng, cfg) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {"norm": jnp.ones((cfg.d_model,), cfg.pdtype), "ssm": S.init_ssm(k2, cfg)}
+
+
+def init_params(rng, cfg) -> Params:
+    groups, per_group, tail = _layout(cfg)
+    ks = jax.random.split(rng, 4)
+    gkeys = jax.random.split(ks[0], groups * per_group).reshape(groups, per_group, 2)
+    p: Params = {
+        "embed": L.embed_init(ks[1], cfg.vocab_size, cfg.d_model, cfg.pdtype),
+        "mamba_groups": jax.vmap(jax.vmap(lambda k: init_mamba_layer(k, cfg)))(gkeys),
+        "shared_attn": {
+            "attn_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "attn": L.init_attention(ks[2], cfg),
+            "mlp_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "mlp": L.init_mlp(ks[3], cfg),
+        },
+        "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+    }
+    if tail:
+        tkeys = jax.random.split(jax.random.fold_in(rng, 7), tail)
+        p["mamba_tail"] = jax.vmap(lambda k: init_mamba_layer(k, cfg))(tkeys)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(jax.random.fold_in(rng, 9), cfg.d_model, cfg.vocab_size, cfg.pdtype)
+    return p
+
+
+def _mamba_layer(lp: Params, x: jax.Array, cfg, cache=None):
+    h = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+    out, new_cache = S.ssm_forward(lp["ssm"], h, cfg, cache)
+    return x + out, new_cache
+
+
+# --------------------------------------------------------------------------- train
+def forward_hidden(params: Params, x: jax.Array, cfg, positions, *, remat="block",
+                   collect_kv: bool = False):
+    groups, per_group, tail = _layout(cfg)
+    shared = params["shared_attn"]
+
+    def layer_body(h, lp):
+        h, _ = _mamba_layer(lp, h, cfg)
+        return h, None
+
+    def group_body(h, gp):
+        h, _ = jax.lax.scan(layer_body, h, gp)
+        h, _, kv = block_full(shared, h, cfg, positions)
+        return h, kv if collect_kv else None
+
+    if remat != "none":
+        layer_body = jax.checkpoint(layer_body, prevent_cse=False)
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+
+    x, kv = jax.lax.scan(group_body, x, params["mamba_groups"])
+    if tail:
+        x, _ = jax.lax.scan(layer_body, x, params["mamba_tail"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32), kv
+
+
+def loss_fn(params: Params, batch, cfg, *, remat: str = "block"):
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, Sq = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    x = shard(x, "batch", "seq", None)
+    h, aux, _ = forward_hidden(params, x, cfg, positions, remat=remat)
+    tot, cnt = chunked_ce_loss(h, lm_head_weight(params, cfg), labels, cfg)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + aux, {"ce": loss, "aux": aux, "tokens": cnt}
+
+
+def prefill(params: Params, tokens: jax.Array, cfg, max_len: int = 0):
+    """Full-prompt forward; builds SSM states + ring-buffer attention KV.
+
+    The ring buffer stores key position p at slot p % window, matching
+    decode_step's write pattern."""
+    B, Sq = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    x = shard(x, "batch", "seq", None)
+    groups, per_group, tail = _layout(cfg)
+    shared = params["shared_attn"]
+
+    from repro.models import ssm as S_mod
+
+    def layer_body(h, inp):
+        lp, c = inp
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        out, c2 = S_mod.ssm_forward(lp["ssm"], hn, cfg, cache=c)
+        return h + out, c2
+
+    cache0 = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (per_group,) + a.shape),
+        S_mod.init_ssm_cache(cfg, B),
+    )
+    g_cache0 = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (groups,) + a.shape), cache0
+    )
+
+    def group_body(h, inp):
+        gp, gc = inp
+        h, gc2 = jax.lax.scan(layer_body, h, (gp, gc))
+        h, _, kv = block_full(shared, h, cfg, positions)
+        return h, (gc2, kv)
+
+    x, (g_ssm, kv) = jax.lax.scan(group_body, x, (params["mamba_groups"], g_cache0))
+    tail_ssm = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (max(tail, 1),) + a.shape),
+        S_mod.init_ssm_cache(cfg, B),
+    )
+    if tail:
+        x, tail_ssm = jax.lax.scan(layer_body, x, (params["mamba_tail"], tail_ssm))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ lm_head_weight(params, cfg)).astype(jnp.float32)
+    logits = shard(logits, "batch", "vocab")
+
+    # pack the last `window` keys into ring-buffer order. The ring geometry
+    # must match init_cache's (min(max_len, sliding_window)) or the slot
+    # mapping diverges after handoff to decode_step.
+    k_full, v_full = kv  # [G, B, Sq, nkv, dh]
+    max_len = max(max_len, Sq)
+    window = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    keep = min(Sq, window)
+    lo = Sq - keep
+    slots = (jnp.arange(lo, Sq)) % window
+    kc = jnp.zeros(
+        (groups, B, window, cfg.num_kv_heads, cfg.d_head), cfg.cdtype
+    ).at[:, :, slots].set(k_full[:, :, lo:Sq].astype(cfg.cdtype))
+    vc = jnp.zeros_like(kc).at[:, :, slots].set(v_full[:, :, lo:Sq].astype(cfg.cdtype))
+    cache = HybridCache(
+        group_ssm=g_ssm, tail_ssm=tail_ssm, k=kc, v=vc,
+        pos=jnp.asarray(Sq, jnp.int32),
+    )
+    return logits, cache
+
+
+# --------------------------------------------------------------------------- decode
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> HybridCache:
+    groups, per_group, tail = _layout(cfg)
+    dt = dtype or cfg.cdtype
+    one = S.init_ssm_cache(cfg, batch)
+
+    def stack(n, tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+    kv_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv_shape = (groups, batch, kv_len, cfg.num_kv_heads, cfg.d_head)
+    return HybridCache(
+        group_ssm=stack(groups, stack(per_group, one)),
+        tail_ssm=stack(max(tail, 1), one),
+        k=jnp.zeros(kv_shape, dt),
+        v=jnp.zeros(kv_shape, dt),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(params: Params, token: jax.Array, cache: HybridCache, cfg):
+    """One decode step. token: [B]. Sliding-window KV: position pos is written
+    at slot pos % window (ring buffer), attention masks by recency."""
+    groups, per_group, tail = _layout(cfg)
+    B = token.shape[0]
+    x = params["embed"][token[:, None]].astype(cfg.cdtype)
+    pos = cache.pos
+    shared = params["shared_attn"]
+    window = cache.k.shape[2]
+    slot = pos % window
+
+    def layer_body(h, inp):
+        lp, c = inp
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        out, c2 = S.ssm_decode_step(lp["ssm"], hn, c, cfg)
+        return h + out, c2
+
+    def group_body(h, inp):
+        gp, gc, kc, vc = inp
+        h, gc2 = jax.lax.scan(layer_body, h, (gp, gc))
+        # shared attention with ring-buffer KV
+        hn = L.rms_norm(h, shared["attn_norm"], cfg.norm_eps)
+        q, k, v = L.qkv_project(shared["attn"], hn, cfg)
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
+        n_valid = jnp.minimum(pos + 1, window)
+        o = L.decode_attention(q, kc, vc, n_valid)  # ring: all written slots valid
+        h = h + o.reshape(B, 1, -1) @ shared["attn"]["w_o"]
+        hn = L.rms_norm(h, shared["mlp_norm"], cfg.norm_eps)
+        h = h + L.mlp(shared["mlp"], hn, cfg)
+        return h, (gc2, kc, vc)
+
+    x, (g_ssm, k_new, v_new) = jax.lax.scan(
+        group_body, x, (params["mamba_groups"], cache.group_ssm, cache.k, cache.v)
+    )
+    tail_ssm = cache.tail_ssm
+    if tail:
+        x, tail_ssm = jax.lax.scan(layer_body, x, (params["mamba_tail"], cache.tail_ssm))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ lm_head_weight(params, cfg)).astype(jnp.float32)
+    logits = shard(logits, "batch", "vocab")
+    return logits, HybridCache(
+        group_ssm=g_ssm, tail_ssm=tail_ssm, k=k_new, v=v_new, pos=pos + 1
+    )

@@ -1,0 +1,250 @@
+"""Mamba2 / SSD (state-space duality) layer [arXiv:2405.21060].
+
+Chunked SSD algorithm for training/prefill (within-chunk quadratic attention-
+like form + inter-chunk linear recurrence via lax.scan), and the O(1)-state
+recurrent form for decode. Pure JAX; reductions in fp32.
+
+Decay exponents are sums of negative terms, so every ``exp`` here is <= 1 —
+numerically safe without max-subtraction.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import tuning
+from repro.models.layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # [B, W-1, conv_dim] most recent inputs
+    state: jax.Array  # [B, H, P, N] fp32
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = cfg.ssm_n_groups
+    conv_dim = di + 2 * G * N
+    return d, di, H, P, N, G, conv_dim
+
+
+def init_ssm(rng, cfg) -> Params:
+    d, di, H, P, N, G, conv_dim = _dims(cfg)
+    assert G == 1, "ssm_n_groups > 1 not implemented"
+    ks = jax.random.split(rng, 6)
+    dt = cfg.pdtype
+    d_in_proj = 2 * di + 2 * G * N + H
+    # dt bias: softplus(dt_bias) ~ Uniform(log 1e-3, log 1e-1) exp
+    dt0 = jnp.exp(
+        jax.random.uniform(ks[0], (H,), jnp.float32)
+        * (math.log(1e-1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    return {
+        "in_proj": dense_init(ks[1], d, d_in_proj, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv_width, conv_dim), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv_width)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (H,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_w": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[4], di, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d as shift-and-multiply. x: [B, L, C], w: [W, C].
+
+    W is tiny (4): unrolled shifts keep FLOPs at 2·W·B·L·C and — unlike
+    ``lax.conv_general_dilated`` with feature groups — the filter gradient
+    stays depthwise instead of exploding into a full [C, C] cross-correlation
+    (XLA lowers grouped-conv grads without batch_group_count; measured 100x
+    FLOP blowup in the dry-run, see EXPERIMENTS.md §Dry-run)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    L = x.shape[1]
+    out = b
+    for i in range(W):
+        out = out + xp[:, i : i + L, :] * w[i]
+    return out
+
+
+def ssd_scan(
+    xh: jax.Array,  # [B, L, H, P]  (pre-dt)
+    dt: jax.Array,  # [B, L, H]     (post-softplus)
+    A_log: jax.Array,  # [H]
+    Bm: jax.Array,  # [B, L, N]
+    Cm: jax.Array,  # [B, L, N]
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # [B, H, P, N] fp32
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B, L, H, P], final_state [B, H, P, N])."""
+    Bsz, L, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // Q
+
+    A = -jnp.exp(A_log.astype(jnp.float32))  # [H], negative
+    dA = dt.astype(jnp.float32) * A  # [B, Lp, H] log-decay increments (<=0)
+    xdt = (xh * dt[..., None]).astype(xh.dtype)  # discretized input
+
+    # chunked views
+    dAc = dA.reshape(Bsz, nc, Q, H)
+    ac = jnp.cumsum(dAc, axis=2)  # [B,c,Q,H] fp32
+    xc = xdt.reshape(Bsz, nc, Q, H, P)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    # 1) within-chunk (diagonal) term
+    seg = ac[:, :, :, None, :] - ac[:, :, None, :, :]  # [B,c,Q(i),Q(j),H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)  # fp32
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc, preferred_element_type=jnp.float32)
+    W = (CB[..., None] * Lmat).astype(xh.dtype)  # [B,c,Q,Q,H]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", W, xc, preferred_element_type=jnp.float32)
+
+    # 2) end-of-chunk states from within-chunk inputs
+    decay_states = jnp.exp(ac[:, :, -1:, :] - ac)  # [B,c,Q,H]
+    states = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchpn",
+        Bc.astype(jnp.float32),
+        decay_states,
+        xc.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )  # [B,c,H,P,N]
+
+    # 3) inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(ac[:, :, -1, :])  # [B,c,H]
+    h0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+
+    def step(h, inp):
+        s_c, g_c = inp  # [B,H,P,N], [B,H]
+        h_new = h * g_c[:, :, None, None] + s_c
+        return h_new, h  # emit state *entering* the chunk
+
+    final_state, h_prev = jax.lax.scan(
+        step,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # [B,c,H,P,N]
+
+    # 4) contribution of entering state to outputs
+    state_decay = jnp.exp(ac)  # [B,c,Q,H]
+    y_off = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp",
+        Cc.astype(jnp.float32),
+        h_prev,
+        state_decay,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_diag + y_off).reshape(Bsz, Lp, H, P)[:, :L]
+    return y.astype(xh.dtype), final_state
+
+
+def ssm_forward(
+    params: Params,
+    x: jax.Array,  # [B, L, d]
+    cfg,
+    cache: Optional[SSMCache] = None,
+) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """Full-sequence Mamba2 layer (train/prefill)."""
+    d, di, H, P, N, G, conv_dim = _dims(cfg)
+    B, L, _ = x.shape
+    zxbcdt = x @ params["in_proj"]  # [B, L, 2di + 2N + H]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + conv_dim]
+    dt = zxbcdt[..., di + conv_dim :]
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"], params["conv_b"]))
+    xs = xBC[..., :di].reshape(B, L, H, P)
+    Bm = xBC[..., di : di + N]
+    Cm = xBC[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B, L, H]
+
+    chunk = tuning.FLAGS.ssd_chunk or cfg.ssm_chunk
+    y, final_state = ssd_scan(xs, dt, params["A_log"], Bm, Cm, chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, L, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+
+    new_cache = None
+    if cache is not None:
+        Wd = cfg.ssm_conv_width
+        # conv state: last W-1 raw xBC inputs (pre-conv)
+        raw = zxbcdt[..., di : di + conv_dim]
+        tail = raw[:, -(Wd - 1) :, :]
+        pad = (Wd - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        new_cache = SSMCache(conv=tail, state=final_state)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int) -> SSMCache:
+    d, di, H, P, N, G, conv_dim = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), cfg.cdtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def ssm_decode_step(
+    params: Params, x: jax.Array, cache: SSMCache, cfg
+) -> Tuple[jax.Array, SSMCache]:
+    """One-token recurrent step. x: [B, 1, d]."""
+    d, di, H, P, N, G, conv_dim = _dims(cfg)
+    B = x.shape[0]
+    zxbcdt = (x @ params["in_proj"])[:, 0]  # [B, ...]
+    z = zxbcdt[:, :di]
+    xBC_new = zxbcdt[:, di : di + conv_dim]
+    dt = zxbcdt[:, di + conv_dim :]
+
+    # causal conv over (state ++ new)
+    win = jnp.concatenate([cache.conv, xBC_new[:, None, :]], axis=1)  # [B, W, C]
+    conv_out = jnp.einsum("bwc,wc->bc", win, params["conv_w"]) + params["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    xs = xBC[:, :di].reshape(B, H, P)
+    Bm = xBC[:, di : di + N]
+    Cm = xBC[:, di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B, H]
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    g = jnp.exp(dt * A)  # [B, H]
+    delta = (
+        dt[:, :, None, None]
+        * xs.astype(jnp.float32)[:, :, :, None]
+        * Bm.astype(jnp.float32)[:, None, None, :]
+    )  # [B,H,P,N]
+    h = cache.state * g[:, :, None, None] + delta
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]  # [B, 1, d]
+    return out, SSMCache(conv=win[:, 1:], state=h)

@@ -1,0 +1,111 @@
+"""Pure Mamba2 LM (mamba2-130m): embed -> N SSD layers -> norm -> logits."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.partitioning import shard
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import chunked_ce_loss, lm_head_weight
+
+Params = Dict[str, Any]
+
+
+class SSMLMCache(NamedTuple):
+    layers: S.SSMCache  # leading dim [L]
+    pos: jax.Array
+
+
+def init_params(rng, cfg) -> Params:
+    ks = jax.random.split(rng, 3)
+    lkeys = jax.random.split(ks[0], cfg.num_layers)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm": jnp.ones((cfg.d_model,), cfg.pdtype), "ssm": S.init_ssm(k2, cfg)}
+
+    p: Params = {
+        "embed": L.embed_init(ks[1], cfg.vocab_size, cfg.d_model, cfg.pdtype),
+        "layers": jax.vmap(one)(lkeys),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab_size, cfg.pdtype)
+    return p
+
+
+def forward_hidden(params: Params, x: jax.Array, cfg, positions=None, *, remat="block",
+                   collect_kv: bool = False):
+    def body(h, lp):
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        out, _ = S.ssm_forward(lp["ssm"], hn, cfg)
+        return h + out, None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32), None
+
+
+def loss_fn(params: Params, batch, cfg, *, remat: str = "block"):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    x = shard(x, "batch", "seq", None)
+    h, aux, _ = forward_hidden(params, x, cfg, remat=remat)
+    tot, cnt = chunked_ce_loss(h, lm_head_weight(params, cfg), labels, cfg)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"ce": loss, "aux": aux, "tokens": cnt}
+
+
+def prefill(params: Params, tokens: jax.Array, cfg, max_len: int = 0):
+    """Full-prompt forward, returning (last_logits, SSMLMCache)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    x = shard(x, "batch", "seq", None)
+    init = S_init = None
+
+    from repro.models import ssm as S_mod
+
+    def body(h, inp):
+        lp, c = inp
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        out, c2 = S_mod.ssm_forward(lp["ssm"], hn, cfg, cache=c)
+        return h + out, c2
+
+    cache0 = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape),
+        S_mod.init_ssm_cache(cfg, B),
+    )
+    x, caches = jax.lax.scan(body, x, (params["layers"], cache0))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ lm_head_weight(params, cfg)).astype(jnp.float32)
+    logits = shard(logits, "batch", "vocab")
+    return logits, SSMLMCache(layers=caches, pos=jnp.asarray(S, jnp.int32))
+
+
+def init_cache(cfg, batch: int, max_len: int = 0, dtype=None) -> SSMLMCache:
+    one = S.init_ssm_cache(cfg, batch)
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one
+    )
+    return SSMLMCache(layers=stacked, pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: Params, token: jax.Array, cache: SSMLMCache, cfg):
+    x = params["embed"][token[:, None]].astype(cfg.cdtype)
+
+    def body(h, inp):
+        lp, c = inp
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        out, c2 = S.ssm_decode_step(lp["ssm"], hn, c, cfg)
+        return h + out, c2
+
+    x, new_layers = jax.lax.scan(body, x, (params["layers"], cache.layers))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ lm_head_weight(params, cfg)).astype(jnp.float32)
+    logits = shard(logits, "batch", "vocab")
+    return logits, SSMLMCache(layers=new_layers, pos=cache.pos + 1)

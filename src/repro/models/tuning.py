@@ -1,0 +1,74 @@
+"""Perf-tuning flags (§Perf hillclimb knobs).
+
+A process-global mutable config consulted at TRACE time by the model code.
+The dry-run/hillclimb harness sets flags, lowers, measures, resets. Defaults
+reproduce the paper-faithful baseline recorded in EXPERIMENTS.md §Roofline.
+
+This is deliberately not part of ModelConfig: architecture configs are
+immutable published facts; these are implementation/schedule choices.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class TuningFlags:
+    # attention: dtype of materialized score/probability tensors in the
+    # XLA (non-Pallas) blocked-attention path. fp32 = baseline.
+    attn_score_f32: bool = True
+    # attention block sizes for the blocked path
+    q_block: int = 512
+    kv_block: int = 1024
+    # residual stream sharded over the model axis between layers
+    # (Megatron-style sequence parallelism; XLA inserts ag/rs at boundaries).
+    # Applied to non-MoE blocks only (conflicts with moe_shardmap's in_specs).
+    seq_parallel_activations: bool = True
+    # MoE: shard the dispatch buffer's capacity dim over the data axes so the
+    # scatter stays shard-local (baseline: expert dim sharded => XLA
+    # materializes the GLOBAL [E, C, d] buffer per device)
+    moe_shard_capacity: bool = False
+    # MoE: 2-D dispatch buffer sharding (E over model AND C over data)
+    moe_shard_both: bool = False
+    # MoE: scatter into a C-sharded buffer, then explicitly re-anchor to the
+    # E-sharded layout before the expert GEMM (forces a real all-to-all
+    # instead of leaving the resharding choice to the partitioner)
+    moe_explicit_a2a: bool = False
+    # MoE: token-motion-free shard_map expert parallelism (see moe.py)
+    moe_shardmap: bool = True
+    # decode: read-only cache in the layer scan; new k/v committed in ONE
+    # small DUS after the scan (avoids XLA's per-layer full-cache f32
+    # round-trip — measured 68x the physical cache traffic). Exact math via
+    # online-softmax merge of the current token.
+    decode_deferred_commit: bool = True
+    # serving: replicate weights across the data axes (no FSDP gathers per
+    # decode step; weights are TP-sharded only — standard inference layout)
+    serve_resident_weights: bool = True
+    # MoE capacity factor override (baseline: cfg.capacity_factor = 1.25)
+    capacity_factor: Optional[float] = None
+    # chunked CE loss: logits compute dtype (False = fp32 baseline)
+    loss_logits_bf16: bool = False
+    # SSD chunk length override (0 = cfg.ssm_chunk). Within-chunk quadratic
+    # work scales with Q; inter-chunk state materialization with L/Q.
+    ssd_chunk: int = 0
+    # rms_norm: keep only the variance/scale in fp32 (the [B,S,1] factor);
+    # the full-width multiply stays in compute dtype. Baseline: full fp32.
+    norm_bf16_apply: bool = False
+
+
+FLAGS = TuningFlags()  # consumers: `from repro.models import tuning` then
+# `tuning.FLAGS.<attr>` at trace time (one shared object, mutated in place)
+
+
+@contextlib.contextmanager
+def tuned(**kw):
+    prev = {k: getattr(FLAGS, k) for k in kw}
+    for k, v in kw.items():
+        setattr(FLAGS, k, v)
+    try:
+        yield FLAGS
+    finally:
+        for k, v in prev.items():
+            setattr(FLAGS, k, v)

@@ -1,0 +1,135 @@
+"""Fault-tolerance runtime: heartbeats, elastic restart, straggler mitigation.
+
+On a real multi-pod deployment these hooks ride on the cluster scheduler
+(GKE/Borg preemption signals, jax.distributed heartbeats). The control logic
+here is the deployable part; liveness signals are injected (testable with
+fake clocks, and wirable to real signals on a cluster).
+
+Recovery contract (exercised by tests + launch/train.py):
+  1. HeartbeatTracker declares a host dead after ``timeout`` silence
+  2. the coordinator picks the new world (alive hosts), halving the data-
+     parallel axis if needed to keep the mesh rectangular
+  3. TrainState restores from the last checkpoint with the NEW shardings
+     (Checkpointer.restore(shardings=...)) and the data pipeline replays
+     from the checkpointed step — bitwise-identical stream (see data/)
+  4. training resumes; the step clock never goes backwards more than one
+     checkpoint interval
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_beat: float
+    alive: bool = True
+    step_times: List[float] = dataclasses.field(default_factory=list)
+
+
+class HeartbeatTracker:
+    def __init__(self, host_ids: Sequence[int], timeout: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.timeout = timeout
+        now = clock()
+        self.hosts: Dict[int, HostState] = {
+            h: HostState(host_id=h, last_beat=now) for h in host_ids
+        }
+
+    def beat(self, host_id: int) -> None:
+        self.hosts[host_id].last_beat = self.clock()
+
+    def check(self) -> List[int]:
+        """Returns newly-dead host ids."""
+        now = self.clock()
+        dead = []
+        for h in self.hosts.values():
+            if h.alive and now - h.last_beat > self.timeout:
+                h.alive = False
+                dead.append(h.host_id)
+        return dead
+
+    def alive_hosts(self) -> List[int]:
+        return [h.host_id for h in self.hosts.values() if h.alive]
+
+
+class StragglerDetector:
+    """Per-host step-time EWMA; hosts slower than ``ratio`` x median are
+    stragglers. Mitigations: re-shard its data (elastic), or issue backup
+    steps (speculative execution) — the detector only decides."""
+
+    def __init__(self, host_ids: Sequence[int], ewma: float = 0.3, ratio: float = 1.8):
+        self.ewma = ewma
+        self.ratio = ratio
+        self.times: Dict[int, Optional[float]] = {h: None for h in host_ids}
+
+    def record(self, host_id: int, step_seconds: float) -> None:
+        prev = self.times.get(host_id)
+        self.times[host_id] = (
+            step_seconds if prev is None else self.ewma * step_seconds + (1 - self.ewma) * prev
+        )
+
+    def stragglers(self) -> List[int]:
+        vals = [t for t in self.times.values() if t is not None]
+        if len(vals) < 2:
+            return []
+        med = sorted(vals)[len(vals) // 2]
+        return [h for h, t in self.times.items() if t is not None and t > self.ratio * med]
+
+
+def plan_elastic_mesh(alive_hosts: int, chips_per_host: int,
+                      model_parallel: int) -> Tuple[int, int]:
+    """Largest rectangular (data, model) mesh from the surviving hosts.
+
+    model_parallel is fixed (weights are sharded that way); the data axis
+    shrinks to the largest power-of-two of full rows that still divides the
+    global batch. Returns (data_size, model_size)."""
+    total = alive_hosts * chips_per_host
+    if total < model_parallel:
+        raise RuntimeError("not enough chips for the model-parallel axis")
+    rows = total // model_parallel
+    # largest power of two <= rows keeps batch divisibility simple
+    data = 1 << (rows.bit_length() - 1)
+    return data, model_parallel
+
+
+class ElasticRunner:
+    """Drives a step function with checkpoint/restart on injected failures.
+
+    The step callable raises HostFailure to simulate a lost host; the runner
+    restores from the checkpointer and continues with the shrunken world.
+    """
+
+    def __init__(self, checkpointer, make_step, save_every: int = 10):
+        self.ckpt = checkpointer
+        self.make_step = make_step  # (world_size) -> (step_fn, state)
+        self.save_every = save_every
+        self.restarts = 0
+
+    def run(self, state, world_size: int, n_steps: int, fail_at=()):
+        step_fn = self.make_step(world_size)
+        fail_at = set(fail_at)
+        step = 0
+        while step < n_steps:
+            if step % self.save_every == 0:
+                self.ckpt.save(step, state, meta={"world": world_size}, blocking=True)
+            if step in fail_at:
+                fail_at.discard(step)
+                self.restarts += 1
+                world_size = max(world_size // 2, 1)
+                step_fn = self.make_step(world_size)
+                last = self.ckpt.latest_step()
+                state, meta = self.ckpt.restore(state, step=last)
+                step = last
+                continue
+            state = step_fn(state, step)
+            step += 1
+        return state, world_size
+
+
+class HostFailure(RuntimeError):
+    pass

@@ -1,0 +1,277 @@
+"""Multi-tenant serving engine over the tiered paged KV cache.
+
+Continuous batching: requests from multiple tenants (each with its own MaxMem
+``t_miss`` target) share one fixed decode batch. Every step:
+
+  1. admit queued requests into free batch lanes (dense prefill -> pages)
+  2. one batched paged-decode step (Quest top-k page selection)
+  3. report the selected-page access stream to the central manager
+  4. on page-boundary crossings, first-touch allocate new pages
+  5. every ``epoch_steps`` decode steps: run the MaxMem epoch and execute the
+     migration plan on the pools (Pallas page_copy)
+  6. finished sequences free their pages back to the tiered pool
+
+A step-latency model (HBM vs host-DMA page reads) attributes per-tenant
+decode latency so QoS benchmarks can measure p50/p99 per tenant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.manager import CentralManager, TenantHandle
+from repro.core.types import TIER_FAST
+from repro.kvcache.paged import TieredPagedKV
+from repro.models.model import get_model
+from repro.serving.paged_model import PagedPools, paged_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tenant: str
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int
+    # runtime
+    generated: List[int] = dataclasses.field(default_factory=list)
+    lane: int = -1
+    pages: List[int] = dataclasses.field(default_factory=list)
+    submit_step: int = 0
+    finish_step: int = -1
+
+
+@dataclasses.dataclass
+class StepLatency:
+    fast_pages: int
+    slow_pages: int
+    seconds: float
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg,
+        params,
+        manager: CentralManager,
+        kv: TieredPagedKV,
+        *,
+        max_batch: int = 8,
+        pages_per_seq: int = 16,
+        quest_pages: int = 4,
+        epoch_steps: int = 8,
+        fast_page_s: float = 1e-6,
+        slow_page_s: float = 20e-6,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.manager = manager
+        self.kv = kv
+        self.api = get_model(cfg)
+        self.max_batch = max_batch
+        self.n_p = pages_per_seq
+        self.quest_pages = quest_pages
+        self.epoch_steps = epoch_steps
+        self.fast_page_s = fast_page_s
+        self.slow_page_s = slow_page_s
+
+        self.tenant_handles: Dict[str, TenantHandle] = {}
+        self.queue: Deque[Request] = deque()
+        self.lanes: List[Optional[Request]] = [None] * max_batch
+        self.tables = np.full((max_batch, pages_per_seq), -1, np.int32)
+        self.positions = np.zeros(max_batch, np.int32)
+        self.step_count = 0
+        self._rid = 0
+        self._latencies: Dict[str, List[float]] = {}
+        self._migrated_pages = 0
+        self._epoch_log: List[dict] = []
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------- tenants
+    def add_tenant(self, name: str, t_miss: float) -> None:
+        self.tenant_handles[name] = self.manager.register(t_miss)
+        self._latencies[name] = []
+
+    def set_target(self, name: str, t_miss: float) -> None:
+        self.manager.set_target(self.tenant_handles[name], t_miss)
+
+    # ------------------------------------------------------------- requests
+    def submit(self, tenant: str, prompt: np.ndarray, max_new_tokens: int) -> int:
+        self._rid += 1
+        self.queue.append(
+            Request(
+                rid=self._rid,
+                tenant=tenant,
+                prompt=np.asarray(prompt, np.int32),
+                max_new_tokens=max_new_tokens,
+                submit_step=self.step_count,
+            )
+        )
+        return self._rid
+
+    # ------------------------------------------------------------- admission
+    def _admit(self) -> None:
+        for lane in range(self.max_batch):
+            if self.lanes[lane] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            S = len(req.prompt)
+            h = self.tenant_handles[req.tenant]
+            n_pages = (S + self.kv.page - 1) // self.kv.page
+            try:
+                pages = self.manager.allocate(h, n_pages)
+            except MemoryError:
+                self.queue.appendleft(req)
+                return
+            req.pages = list(map(int, pages))
+            req.lane = lane
+            self.lanes[lane] = req
+            self.tables[lane, :] = -1
+            self.tables[lane, :n_pages] = req.pages
+            self.positions[lane] = S - 1  # next decode writes position S-1+1?  see below
+            # Prefill: dense forward collecting KV, then scatter into pages.
+            logits, cache = self.api.prefill(
+                self.params, jnp.asarray(req.prompt[None, :]), S
+            )
+            k, v = cache.k, cache.v  # [L, 1, S, nkv, dh]
+            self.kv.write_tokens(
+                (k, v), np.asarray([req.pages], np.int32), start_pos=0
+            )
+            # prefill accesses: every page of the prompt touched once
+            counts = np.zeros(self.manager.num_pages, np.int64)
+            counts[req.pages] += 1
+            self.manager.record_access(counts)
+            first = int(np.argmax(np.asarray(logits[0])))
+            req.generated.append(first)
+            self.positions[lane] = S  # next token index to write
+
+    # ------------------------------------------------------------- stepping
+    def _ensure_page(self, lane: int) -> bool:
+        """Allocate the page for the position about to be written."""
+        req = self.lanes[lane]
+        p_idx = int(self.positions[lane]) // self.kv.page
+        if p_idx >= self.n_p:
+            return False  # out of table space: finish the request
+        if self.tables[lane, p_idx] >= 0:
+            return True
+        h = self.tenant_handles[req.tenant]
+        try:
+            pages = self.manager.allocate(h, 1)
+        except MemoryError:
+            return False
+        self.tables[lane, p_idx] = int(pages[0])
+        req.pages.append(int(pages[0]))
+        return True
+
+    def step(self) -> Dict[str, StepLatency]:
+        self._admit()
+        active_mask = np.array([r is not None for r in self.lanes])
+        if not active_mask.any():
+            self.step_count += 1
+            return {}
+        for lane, req in enumerate(self.lanes):
+            if req is not None and not self._ensure_page(lane):
+                self._finish(lane)
+                active_mask[lane] = False
+        if not active_mask.any():
+            self.step_count += 1
+            return {}
+
+        tokens = np.array(
+            [
+                (r.generated[-1] if r is not None and r.generated else 0)
+                for r in self.lanes
+            ],
+            np.int32,
+        )
+        slot_tables = np.where(self.tables >= 0, self.kv.slot_of[np.maximum(self.tables, 0)], -1)
+        logits, pools, counts = paged_decode_step(
+            self.params,
+            jnp.asarray(tokens),
+            jnp.asarray(self.positions),
+            jnp.asarray(slot_tables.astype(np.int32)),
+            jnp.asarray(self.tables),
+            jnp.asarray(active_mask),
+            PagedPools(self.kv.k_pool, self.kv.v_pool, self.kv.k_max, self.kv.k_min),
+            num_logical_pages=self.manager.num_pages,
+            cfg=self.cfg,
+            quest_pages=self.quest_pages,
+        )
+        self.kv.k_pool, self.kv.v_pool = pools.k, pools.v
+        self.kv.k_max, self.kv.k_min = pools.kmax, pools.kmin
+        counts_np = np.asarray(counts, np.int64)
+        self.manager.record_access(counts_np)
+
+        # ---- latency attribution: page tiers touched this step -------------
+        lat: Dict[str, StepLatency] = {}
+        touched = np.flatnonzero(counts_np > 0)
+        tier = self.manager.tier_of(touched) if len(touched) else np.array([])
+        owner = np.asarray(self.manager.pages.owner)
+        for name, h in self.tenant_handles.items():
+            mine = touched[(owner[touched] == int(h))] if len(touched) else touched
+            nf = int((self.manager.tier_of(mine) == TIER_FAST).sum()) if len(mine) else 0
+            ns = len(mine) - nf
+            sec = nf * self.fast_page_s + ns * self.slow_page_s
+            if len(mine):
+                lat[name] = StepLatency(fast_pages=nf, slow_pages=ns, seconds=sec)
+                self._latencies[name].append(sec)
+
+        # ---- token bookkeeping ---------------------------------------------
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        for lane, req in enumerate(self.lanes):
+            if req is None or not active_mask[lane]:
+                continue
+            req.generated.append(int(greedy[lane]))
+            self.positions[lane] += 1
+            if len(req.generated) >= req.max_new_tokens:
+                self._finish(lane)
+
+        self.step_count += 1
+        # ---- MaxMem epoch ----------------------------------------------------
+        if self.step_count % self.epoch_steps == 0:
+            res = self.manager.run_epoch()
+            moved = self.kv.migrate(res.plan, self.manager)
+            self._migrated_pages += moved
+            self._epoch_log.append(
+                {
+                    "step": self.step_count,
+                    "moved": moved,
+                    "fmmr": {
+                        n: float(self.manager.fmmr_of(h))
+                        for n, h in self.tenant_handles.items()
+                    },
+                }
+            )
+        return lat
+
+    def _finish(self, lane: int) -> None:
+        req = self.lanes[lane]
+        req.finish_step = self.step_count
+        h = self.tenant_handles[req.tenant]
+        if req.pages:
+            self.manager.free(h, np.asarray(req.pages, np.int32))
+        self.tables[lane, :] = -1
+        self.positions[lane] = 0
+        self.lanes[lane] = None
+        self.finished.append(req)
+
+    def run(self, n_steps: int) -> None:
+        for _ in range(n_steps):
+            self.step()
+
+    # ------------------------------------------------------------- telemetry
+    def latency_percentiles(self, tenant: str):
+        xs = np.asarray(self._latencies.get(tenant, []))
+        if len(xs) == 0:
+            return {}
+        return {
+            "p50": float(np.percentile(xs, 50)),
+            "p90": float(np.percentile(xs, 90)),
+            "p99": float(np.percentile(xs, 99)),
+            "mean": float(xs.mean()),
+        }

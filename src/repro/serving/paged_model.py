@@ -1,0 +1,148 @@
+"""Jitted batched decode over the tiered paged KV cache.
+
+Per layer and step:
+  1. project q/k/v for the new token; write k/v into the current page slot
+  2. update the page's Quest summaries (key min/max)
+  3. score all pages of each sequence with the Quest upper bound
+         score(p) = sum_h sum_d max(q_hd * kmax_pd, q_hd * kmin_pd)
+     and select the top-``quest_pages`` pages (current page force-included)
+  4. gather ONLY the selected pages and run masked decode attention
+  5. emit the selected logical page ids -> per-page access counts
+
+The per-page access counts are the PEBS-analogue stream MaxMem samples: with
+top-k selection, page touches are heat-skewed, which is exactly what makes
+tiering profitable (hot pages earn fast-tier residency).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import moe_mlp
+from repro.models.transformer import lm_head_weight
+
+NEG_INF = -1e30
+
+
+class PagedPools(NamedTuple):
+    k: jax.Array  # [L, n_slots, page, nkv, dh]
+    v: jax.Array
+    kmax: jax.Array  # [L, n_slots, nkv, dh] f32
+    kmin: jax.Array
+
+
+@partial(jax.jit, static_argnames=("cfg", "quest_pages", "num_logical_pages"))
+def paged_decode_step(
+    params,
+    tokens: jax.Array,  # [B] int32
+    positions: jax.Array,  # [B] int32 (index of the token being generated)
+    slot_tables: jax.Array,  # [B, n_p] int32 physical slots (-1 = no page)
+    logical_tables: jax.Array,  # [B, n_p] int32 logical page ids (-1 = none)
+    active: jax.Array,  # [B] bool
+    pools: PagedPools,
+    num_logical_pages: int = 0,
+    cfg=None,
+    quest_pages: int = 4,
+):
+    """Returns (logits [B, V], pools', access_counts [P_logical] i32)."""
+    B = tokens.shape[0]
+    page = pools.k.shape[2]
+    n_p = slot_tables.shape[1]
+    nkv, dh, nh = cfg.num_kv_heads, cfg.d_head, cfg.num_heads
+    g = nh // nkv
+
+    x = params["embed"][tokens[:, None]].astype(cfg.cdtype)  # [B, 1, d]
+    pos_b = positions  # [B]
+    cur_p = pos_b // page
+    cur_off = pos_b % page
+    cur_slot = jnp.take_along_axis(slot_tables, cur_p[:, None], axis=1)[:, 0]
+    cur_slot = jnp.maximum(cur_slot, 0)
+    seq_lens = jnp.where(active, pos_b + 1, 0)
+
+    k_sel_n = min(quest_pages, n_p)
+    P_logical = num_logical_pages
+
+    def layer_fn(carry, xs):
+        x, counts = carry
+        lp, kp, vp, kmx, kmn = xs  # per-layer pools
+        h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], h, cfg)  # q [B,1,nh,dh]
+        rope_pos = pos_b[:, None]
+        q = L.apply_rope(q, rope_pos, cfg.rope_theta)
+        k = L.apply_rope(k, rope_pos, cfg.rope_theta)
+
+        # ---- write new token into its page slot -------------------------
+        kp = kp.at[cur_slot, cur_off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[cur_slot, cur_off].set(v[:, 0].astype(vp.dtype))
+        kmx = kmx.at[cur_slot].max(k[:, 0].astype(jnp.float32))
+        kmn = kmn.at[cur_slot].min(k[:, 0].astype(jnp.float32))
+
+        # ---- Quest page scores -------------------------------------------
+        st = jnp.maximum(slot_tables, 0)
+        kmx_t = kmx[st]  # [B, n_p, nkv, dh]
+        kmn_t = kmn[st]
+        qg = q.reshape(B, nkv, g, dh).astype(jnp.float32)
+        hi = jnp.einsum("bngd,bpnd->bpng", qg, kmx_t)
+        lo = jnp.einsum("bngd,bpnd->bpng", qg, kmn_t)
+        score = jnp.maximum(hi, lo).sum(axis=(2, 3))  # [B, n_p]
+        valid_page = (slot_tables >= 0) & (
+            jnp.arange(n_p)[None, :] * page < seq_lens[:, None]
+        )
+        score = jnp.where(valid_page, score, NEG_INF)
+        # force-include the current page
+        score = jnp.where(
+            jnp.arange(n_p)[None, :] == cur_p[:, None], jnp.inf, score
+        )
+        _, sel = jax.lax.top_k(score, k_sel_n)  # [B, k_sel] table positions
+
+        # ---- gather selected pages + attention ---------------------------
+        sel_slots = jnp.take_along_axis(st, sel, axis=1)  # [B, k_sel]
+        k_sel = kp[sel_slots]  # [B, k_sel, page, nkv, dh]
+        v_sel = vp[sel_slots]
+        tok_pos = sel[:, :, None] * page + jnp.arange(page)[None, None, :]
+        tok_valid = (tok_pos < seq_lens[:, None, None]) & jnp.take_along_axis(
+            valid_page | (jnp.arange(n_p)[None, :] == cur_p[:, None]), sel, axis=1
+        )[:, :, None]
+        kk = k_sel.reshape(B, k_sel_n * page, nkv, dh)
+        vv = v_sel.reshape(B, k_sel_n * page, nkv, dh)
+        mask = tok_valid.reshape(B, k_sel_n * page)
+        s = jnp.einsum(
+            "bngd,bknd->bngk", q.reshape(B, nkv, g, dh), kk,
+            preferred_element_type=jnp.float32,
+        ) / math.sqrt(dh)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        p_att = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum(
+            "bngk,bknd->bngd", p_att.astype(vv.dtype), vv,
+            preferred_element_type=jnp.float32,
+        ).reshape(B, 1, nh * dh).astype(x.dtype)
+        x = x + o @ lp["attn"]["w_o"]
+
+        h2 = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.is_moe:
+            m, _ = moe_mlp(lp["moe"], h2, cfg)
+        else:
+            m = L.mlp(lp["mlp"], h2, cfg)
+        x = x + m
+
+        # ---- access accounting (selected logical pages) -------------------
+        sel_logical = jnp.take_along_axis(logical_tables, sel, axis=1)  # [B,k]
+        ok = (sel_logical >= 0) & active[:, None]
+        idx = jnp.where(ok, sel_logical, P_logical)
+        counts = counts.at[idx.reshape(-1)].add(1, mode="drop")
+        return (x, counts), (kp, vp, kmx, kmn)
+
+    counts0 = jnp.zeros((int(P_logical) + 1,), jnp.int32)
+    (x, counts), new_pools = jax.lax.scan(
+        layer_fn,
+        (x, counts0),
+        (params["layers"], pools.k, pools.v, pools.kmax, pools.kmin),
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ lm_head_weight(params, cfg)).astype(jnp.float32)
+    return logits, PagedPools(*new_pools), counts[:-1]

@@ -1,0 +1,111 @@
+"""Unit + property tests for hotness bins and lazy cooling (paper §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bins
+from repro.core.types import TIER_FAST, TIER_SLOW, PageState, TenantState
+
+
+def test_bin_of_exponential_classes():
+    counts = jnp.array([0, 1, 2, 3, 4, 7, 8, 15, 16, 31, 32, 1000], jnp.uint32)
+    got = bins.bin_of(counts, 6)
+    # bin k >= 1 holds [2^(k-1), 2^k): neighbor bins differ ~2x in heat
+    expect = [0, 1, 2, 2, 3, 3, 4, 4, 5, 5, 5, 5]
+    assert got.tolist() == expect
+
+
+def test_cool_threshold_is_2_pow_5_for_6_bins():
+    assert int(bins.cool_threshold(6)) == 32  # paper: 2^5 with 6 bins
+
+
+def _mk_state(P=8, T=2):
+    pages = PageState.create(P)
+    pages = pages._replace(
+        owner=jnp.zeros((P,), jnp.int32),
+        tier=jnp.full((P,), TIER_SLOW, jnp.int8),
+    )
+    tenants = TenantState.create(T)
+    tenants = tenants._replace(active=tenants.active.at[0].set(True))
+    return pages, tenants
+
+
+def test_cooling_fires_once_and_halves():
+    pages, tenants = _mk_state()
+    sampled = jnp.array([40, 2, 0, 0, 0, 0, 0, 0], jnp.uint32)  # page0 over 2^5
+    pages2, tenants2, cooled = bins.accumulate_samples(pages, tenants, sampled, 6)
+    assert bool(cooled[0])
+    assert int(tenants2.cool_epoch[0]) == 1
+    # page 0 and page 1 were touched -> materialized halving
+    assert int(pages2.count[0]) == 20
+    assert int(pages2.count[1]) == 1
+
+
+def test_lazy_cooling_applies_on_next_read():
+    pages, tenants = _mk_state()
+    # page1 has stale count from before 2 cooling events
+    pages = pages._replace(count=pages.count.at[1].set(12))
+    tenants = tenants._replace(cool_epoch=tenants.cool_epoch.at[0].set(2))
+    eff = bins.effective_count(pages, tenants)
+    assert int(eff[1]) == 3  # 12 >> 2
+
+
+def test_heat_histogram_groups_by_tenant_and_bin():
+    pages, tenants = _mk_state(P=6, T=2)
+    pages = pages._replace(
+        owner=jnp.array([0, 0, 0, 1, 1, 1], jnp.int32),
+        count=jnp.array([0, 1, 16, 2, 2, 31], jnp.uint32),
+    )
+    tenants = tenants._replace(active=jnp.array([True, True]))
+    hist = bins.heat_histogram(pages, tenants, 6, 2)
+    assert hist.shape == (2, 6)
+    assert hist[0].tolist() == [1, 1, 0, 0, 0, 1]
+    assert hist[1].tolist() == [0, 0, 2, 0, 0, 1]
+    assert int(hist.sum()) == 6
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    counts=st.lists(st.integers(0, 2**20), min_size=4, max_size=64),
+    cools=st.integers(0, 10),
+)
+def test_property_effective_count_monotone_in_cooling(counts, cools):
+    """More pending cooling events never increase effective counts."""
+    P = len(counts)
+    pages = PageState.create(P)._replace(
+        owner=jnp.zeros((P,), jnp.int32),
+        tier=jnp.full((P,), TIER_SLOW, jnp.int8),
+        count=jnp.array(counts, jnp.uint32),
+    )
+    tenants = TenantState.create(1)._replace(active=jnp.array([True]))
+    eff0 = bins.effective_count(pages, tenants)
+    tenants2 = tenants._replace(cool_epoch=tenants.cool_epoch + cools)
+    eff1 = bins.effective_count(pages, tenants2)
+    assert np.all(np.asarray(eff1) <= np.asarray(eff0))
+    # exact: count >> cools
+    assert np.all(np.asarray(eff1) == (np.asarray(counts, np.uint32) >> min(cools, 31)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    sampled=st.lists(st.integers(0, 100), min_size=8, max_size=32),
+)
+def test_property_bins_ordering_preserved(sampled):
+    """Accumulation preserves heat ordering: hotter page -> bin >= colder's."""
+    P = len(sampled)
+    pages = PageState.create(P)._replace(
+        owner=jnp.zeros((P,), jnp.int32), tier=jnp.full((P,), TIER_SLOW, jnp.int8)
+    )
+    tenants = TenantState.create(1)._replace(active=jnp.array([True]))
+    pages2, tenants2, _ = bins.accumulate_samples(
+        pages, tenants, jnp.array(sampled, jnp.uint32), 6
+    )
+    eff = np.asarray(bins.effective_count(pages2, tenants2))
+    b = np.asarray(bins.bin_of(jnp.asarray(eff), 6))
+    order = np.argsort(np.asarray(sampled))
+    assert np.all(np.diff(b[order]) >= 0) or np.all(
+        np.diff(eff[order].astype(np.int64)) >= 0
+    )

@@ -1,0 +1,180 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose vs ref.py oracles.
+
+Kernels run in interpret mode (CPU container); the oracle is pure jnp.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hot_bins import hot_bins
+from repro.kernels.page_copy import page_copy
+from repro.kernels.paged_attention import paged_attention
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dt):
+    return TOL[dt]
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,nh,nkv,Sq,Skv,dh", [
+        (2, 4, 2, 128, 128, 64),
+        (1, 8, 8, 96, 96, 128),   # MHA, non-multiple of block
+        (2, 4, 1, 64, 192, 64),   # MQA, Sq < Skv
+        (1, 2, 2, 300, 300, 64),  # ragged padding path
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_sweep(self, B, nh, nkv, Sq, Skv, dh, dtype, causal):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, nh, Sq, dh), dtype)
+        k = jax.random.normal(ks[1], (B, nkv, Skv, dh), dtype)
+        v = jax.random.normal(ks[2], (B, nkv, Skv, dh), dtype)
+        out = flash_attention(q, k, v, causal=causal, q_blk=64, kv_blk=64)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            atol=_tol(dtype), rtol=_tol(dtype),
+        )
+
+    def test_sliding_window(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, sliding_window=64, q_blk=64, kv_blk=64)
+        want = ref.flash_attention_ref(q, k, v, causal=True, sliding_window=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+    def test_block_size_invariance(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (1, 2, 128, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.float32)
+        a = flash_attention(q, k, v, q_blk=32, kv_blk=32)
+        b = flash_attention(q, k, v, q_blk=128, kv_blk=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("B,nh,nkv,dh,P,page,n_p", [
+        (2, 4, 2, 64, 16, 8, 4),
+        (3, 8, 1, 128, 32, 16, 6),
+        (1, 4, 4, 64, 8, 8, 2),
+        (4, 16, 2, 128, 64, 32, 8),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, B, nh, nkv, dh, P, page, n_p, dtype):
+        rng = np.random.default_rng(B * 131 + P)
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        q = jax.random.normal(ks[0], (B, nh, dh), dtype)
+        kp = jax.random.normal(ks[1], (P, page, nkv, dh), dtype)
+        vp = jax.random.normal(ks[2], (P, page, nkv, dh), dtype)
+        tables = np.full((B, n_p), -1, np.int32)
+        lens = np.zeros((B,), np.int32)
+        for b in range(B):
+            used = rng.integers(1, n_p + 1)
+            tables[b, :used] = rng.choice(P, used, replace=False)
+            lens[b] = rng.integers(1, used * page + 1)
+        out = paged_attention(q, kp, vp, jnp.asarray(tables), jnp.asarray(lens))
+        want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(tables), jnp.asarray(lens))
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            atol=_tol(dtype), rtol=_tol(dtype),
+        )
+
+    def test_single_token_context(self):
+        """seq_len=1: only the first slot of the first page is valid."""
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (1, 2, 64), jnp.float32)
+        kp = jax.random.normal(ks[1], (4, 8, 2, 64), jnp.float32)
+        vp = jax.random.normal(ks[2], (4, 8, 2, 64), jnp.float32)
+        tables = jnp.asarray([[2, -1]], jnp.int32)
+        lens = jnp.asarray([1], jnp.int32)
+        out = paged_attention(q, kp, vp, tables, lens)
+        # attention over a single key = that key's value
+        np.testing.assert_allclose(
+            np.asarray(out[0, 0]), np.asarray(vp[2, 0, 0]), atol=1e-5, rtol=1e-5
+        )
+
+
+class TestHotBins:
+    @pytest.mark.parametrize("N,P,tile", [(100, 64, 64), (1000, 512, 128), (257, 130, 64), (64, 4096, 512)])
+    def test_sweep(self, N, P, tile):
+        rng = np.random.default_rng(N + P)
+        ids = rng.integers(-1, P, N).astype(np.int32)
+        cin = rng.integers(0, 40, P).astype(np.int32)
+        c, b = hot_bins(jnp.asarray(ids), jnp.asarray(cin), tile=tile, n_chunk=128)
+        cr, br = ref.hot_bins_ref(jnp.asarray(ids), jnp.asarray(cin), 6)
+        assert (np.asarray(c) == np.asarray(cr)).all()
+        assert (np.asarray(b) == np.asarray(br)).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        ids=st.lists(st.integers(-1, 63), min_size=1, max_size=200),
+        seed=st.integers(0, 100),
+    )
+    def test_property_matches_numpy_bincount(self, ids, seed):
+        P = 64
+        rng = np.random.default_rng(seed)
+        cin = rng.integers(0, 10, P).astype(np.int32)
+        ids_np = np.asarray(ids, np.int32)
+        c, _ = hot_bins(jnp.asarray(ids_np), jnp.asarray(cin), tile=64, n_chunk=64)
+        expect = cin + np.bincount(ids_np[ids_np >= 0], minlength=P).astype(np.int32)
+        assert (np.asarray(c) == expect).all()
+
+
+class TestPageCopy:
+    @pytest.mark.parametrize("Ps,Pd,E,M", [(16, 16, 128, 5), (8, 32, 256, 8), (4, 4, 64, 1)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+    def test_sweep(self, Ps, Pd, E, M, dtype):
+        rng = np.random.default_rng(Ps * 7 + M)
+        if dtype == jnp.int32:
+            src = jnp.asarray(rng.integers(0, 100, (Ps, E)), dtype)
+            dst = jnp.asarray(rng.integers(0, 100, (Pd, E)), dtype)
+        else:
+            src = jnp.asarray(rng.normal(size=(Ps, E)), dtype)
+            dst = jnp.asarray(rng.normal(size=(Pd, E)), dtype)
+        sid = jnp.asarray(rng.choice(Ps, M, replace=True), jnp.int32)
+        did = jnp.asarray(rng.choice(Pd - 1, M, replace=False), jnp.int32)
+        want = ref.page_copy_ref(src, dst, sid, did)
+        out = page_copy(src, jnp.copy(dst), sid, did)
+        assert (np.asarray(out) == np.asarray(want)).all()
+
+    def test_untouched_rows_preserved(self):
+        src = jnp.ones((4, 32), jnp.float32)
+        dst = jnp.zeros((8, 32), jnp.float32)
+        out = page_copy(src, jnp.copy(dst), jnp.asarray([1], jnp.int32), jnp.asarray([3], jnp.int32))
+        assert float(out[3].sum()) == 32.0
+        assert float(out.sum()) == 32.0  # only one row written
+
+
+class TestPageMove:
+    def test_intra_pool_moves_match_ref(self):
+        from repro.kernels.page_copy import page_move
+
+        rng = np.random.default_rng(5)
+        pool = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+        sid = jnp.asarray([0, 1, 2], jnp.int32)
+        did = jnp.asarray([8, 9, 10], jnp.int32)
+        want = ref.page_move_ref(pool, sid, did)
+        out = page_move(jnp.copy(pool), sid, did)
+        assert (np.asarray(out) == np.asarray(want)).all()
+
+    def test_write_after_read_is_safe(self):
+        """A plan may WRITE a row that an earlier step READ (slot reuse)."""
+        from repro.kernels.page_copy import page_move
+
+        pool = jnp.asarray(np.arange(8 * 4).reshape(8, 4), jnp.float32)
+        # demote: row1 -> row6 (reads 1), promote: row5 -> row1 (writes 1)
+        sid = jnp.asarray([1, 5], jnp.int32)
+        did = jnp.asarray([6, 1], jnp.int32)
+        out = page_move(jnp.copy(pool), sid, did)
+        assert (np.asarray(out[6]) == np.asarray(pool[1])).all()
+        assert (np.asarray(out[1]) == np.asarray(pool[5])).all()

@@ -1,0 +1,145 @@
+"""Serving engine integration: tiered paged KV + MaxMem QoS end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.manager import CentralManager
+from repro.core.types import TIER_FAST
+from repro.kvcache.paged import TieredPagedKV
+from repro.models.model import get_model
+from repro.serving.engine import ServingEngine
+from repro.serving.paged_model import PagedPools, paged_decode_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("yi-6b").smoke()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mk_engine(cfg, params, n_fast=8, n_slow=56, page=4, **kw):
+    manager = CentralManager(
+        num_pages=n_fast + n_slow,
+        fast_capacity=n_fast,
+        migration_budget=kw.pop("budget", 8),
+        max_tenants=4,
+        sample_period=1,
+        exact_sampling=True,
+    )
+    kv = TieredPagedKV(cfg, n_fast, n_slow, page_tokens=page)
+    return ServingEngine(
+        cfg, params, manager, kv,
+        max_batch=kw.pop("max_batch", 2),
+        pages_per_seq=kw.pop("pages_per_seq", 8),
+        quest_pages=kw.pop("quest_pages", 3),
+        epoch_steps=kw.pop("epoch_steps", 4),
+    )
+
+
+class TestPagedDecodeEquivalence:
+    def test_paged_matches_dense_decode(self, setup):
+        """With quest_pages >= all pages, paged decode == dense decode."""
+        cfg, params = setup
+        api = get_model(cfg)
+        B, S_prompt, page, n_p = 1, 6, 4, 4
+        prompt = jnp.asarray(np.arange(1, S_prompt + 1)[None, :], jnp.int32)
+
+        # dense path
+        logits_d, cache = api.prefill(params, prompt, S_prompt + 4)
+        tok = jnp.argmax(logits_d[:, -1], axis=-1).astype(jnp.int32)
+        dense_logits, cache = api.decode(params, tok, cache)
+
+        # paged path
+        kv = TieredPagedKV(cfg, n_fast_slots=8, n_slow_slots=8, page_tokens=page)
+        k, v = cache.k[:, :, : S_prompt], cache.v[:, :, : S_prompt]
+        pages = np.array([[0, 1, 2, 3]], np.int32)
+        kv.write_tokens((k, v), pages, start_pos=0)
+        slot_tables = kv.slot_of[pages].astype(np.int32)
+        logits_p, pools, counts = paged_decode_step(
+            params,
+            tok,
+            jnp.asarray([S_prompt], jnp.int32),
+            jnp.asarray(slot_tables),
+            jnp.asarray(pages),
+            jnp.asarray([True]),
+            PagedPools(kv.k_pool, kv.v_pool, kv.k_max, kv.k_min),
+            num_logical_pages=16,
+            cfg=cfg,
+            quest_pages=n_p,  # select ALL pages -> exact attention
+        )
+        np.testing.assert_allclose(
+            np.asarray(dense_logits), np.asarray(logits_p), atol=2e-3, rtol=2e-3
+        )
+        assert counts.sum() > 0  # access stream emitted
+
+
+class TestEngine:
+    def test_requests_complete_and_pages_freed(self, setup):
+        cfg, params = setup
+        eng = _mk_engine(cfg, params)
+        eng.add_tenant("a", t_miss=0.5)
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            eng.submit("a", rng.integers(1, cfg.vocab_size, 5), max_new_tokens=6)
+        eng.run(40)
+        assert len(eng.finished) == 3
+        for r in eng.finished:
+            assert len(r.generated) >= 6
+        # all pages freed
+        assert (np.asarray(eng.manager.pages.owner) == -1).all()
+
+    def test_accesses_reach_manager_and_epochs_fire(self, setup):
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, epoch_steps=2)
+        eng.add_tenant("a", t_miss=0.2)
+        eng.submit("a", np.arange(1, 9), max_new_tokens=12)
+        eng.run(20)
+        assert len(eng._epoch_log) >= 5
+        assert any(e["fmmr"]["a"] > 0 or e["moved"] >= 0 for e in eng._epoch_log)
+
+    def test_hot_pages_migrate_to_fast_tier(self, setup):
+        """Quest-skewed access stream drives hot pages into the fast tier."""
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, n_fast=4, n_slow=60, page=4,
+                         pages_per_seq=16, quest_pages=2, epoch_steps=2, budget=8)
+        eng.add_tenant("ls", t_miss=0.1)
+        eng.submit("ls", np.arange(1, 25), max_new_tokens=30)  # 24-token prompt
+        eng.run(34)
+        # the engine's selected (hot) pages should be fast-resident more often
+        # than cold pages by the end
+        log = eng._epoch_log
+        assert eng._migrated_pages > 0, "no migrations happened"
+
+    def test_two_tenant_qos_preference(self, setup):
+        """LS tenant's touched pages get fast residency over BE tenant's."""
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, n_fast=6, n_slow=58, page=4,
+                         max_batch=2, pages_per_seq=12, quest_pages=2,
+                         epoch_steps=2, budget=12)
+        eng.add_tenant("ls", t_miss=0.1)
+        eng.add_tenant("be", t_miss=1.0)
+        rng = np.random.default_rng(1)
+        eng.submit("be", rng.integers(1, cfg.vocab_size, 16), max_new_tokens=40)
+        eng.submit("ls", rng.integers(1, cfg.vocab_size, 16), max_new_tokens=40)
+        eng.run(44)
+        owner = np.asarray(eng.manager.pages.owner)
+        tier = np.asarray(eng.manager.pages.tier)
+        h_ls = int(eng.tenant_handles["ls"])
+        h_be = int(eng.tenant_handles["be"])
+        ls_fast = int(((owner == h_ls) & (tier == TIER_FAST)).sum())
+        be_fast = int(((owner == h_be) & (tier == TIER_FAST)).sum())
+        assert ls_fast >= be_fast, f"LS {ls_fast} < BE {be_fast} fast pages"
+
+    def test_slot_mapping_stays_permutation(self, setup):
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, epoch_steps=2)
+        eng.add_tenant("a", t_miss=0.1)
+        eng.submit("a", np.arange(1, 13), max_new_tokens=20)
+        for _ in range(24):
+            eng.step()
+            s = np.sort(eng.kv.slot_of)
+            assert (s == np.arange(eng.kv.n_slots)).all(), "slot_of not a permutation"

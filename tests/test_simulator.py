@@ -1,0 +1,146 @@
+"""Colocation-simulator tests: the paper's §5.1 dynamics at reduced scale."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import AutoNUMALike, HeMemStatic, TwoLM
+from repro.core.manager import CentralManager
+from repro.core.simulator import OPTANE, ColocationSim, WorkloadSpec
+
+
+def _maxmem(num_pages=512, fast=128, budget=64, **kw):
+    return CentralManager(
+        num_pages=num_pages,
+        fast_capacity=fast,
+        migration_budget=budget,
+        max_tenants=8,
+        sample_period=kw.pop("sample_period", 10),
+        **kw,
+    )
+
+
+def test_single_tenant_converges_to_hot_set():
+    """GUPS with hot(60%)/warm(30%)/cold(10%) sets: hot set -> fast tier."""
+    mgr = _maxmem(num_pages=512, fast=128, budget=64)
+    sim = ColocationSim(mgr, OPTANE, seed=0)
+    # hot = 1/7 of pages (64), warm 2/7 (128): hot+warm > fast capacity
+    spec = WorkloadSpec(
+        "gups", n_pages=448, t_miss=0.1, threads=4,
+        sets=((1 / 7, 0.6), (2 / 7, 0.3)),
+    )
+    sim.add_tenant(spec)
+    sim.run(40)
+    rec = sim.history[-1]
+    # heat gradient keeps the hot set resident: miss ratio ~ warm+cold share
+    assert rec.fmmr_true["gups"] < 0.45
+    # and throughput beats an all-slow placement by construction
+    assert rec.throughput["gups"] > 0
+
+
+def test_heat_gradient_beats_threshold_when_oversubscribed():
+    """Paper Fig. 3 (256 GB point): MaxMem ~3.3x HeMem throughput."""
+    def scenario(backend):
+        sim = ColocationSim(backend, OPTANE, seed=1)
+        spec = WorkloadSpec(
+            "gups", n_pages=448, t_miss=0.1, threads=4,
+            sets=((1 / 7, 0.6), (2 / 7, 0.3)),
+        )
+        sim.add_tenant(spec)
+        sim.run(50)
+        return np.mean([r.throughput["gups"] for r in sim.history[-10:]])
+
+    mm = scenario(_maxmem(num_pages=512, fast=128, budget=64))
+    he = HeMemStatic(num_pages=512, fast_capacity=128, hot_threshold=4,
+                     migration_budget=64, partitions={0: 128})
+    ht = scenario(he)
+    assert mm > 1.2 * ht, f"MaxMem {mm:.0f} ops/s vs HeMem {ht:.0f}"
+
+
+def test_colocation_all_targets_met():
+    """Five LS tenants (t=0.1) + one BE (t=1.0): a_miss <= t_miss after
+    convergence (paper Fig. 4 steady state)."""
+    mgr = _maxmem(num_pages=2048, fast=640, budget=128)
+    sim = ColocationSim(mgr, OPTANE, seed=2)
+    sim.add_tenant(WorkloadSpec("be", n_pages=256, t_miss=1.0, threads=2))
+    for i in range(5):
+        sim.add_tenant(
+            WorkloadSpec(
+                f"ls{i}", n_pages=256, t_miss=0.1, threads=2,
+                sets=((0.45, 0.9),),  # 115-page hot set, 90% of accesses
+            )
+        )
+    sim.run(60)
+    rec = sim.history[-1]
+    for i in range(5):
+        assert rec.fmmr_true[f"ls{i}"] <= 0.15, (
+            f"ls{i} fmmr {rec.fmmr_true[f'ls{i}']:.3f} misses target"
+        )
+
+
+def test_dynamic_arrival_reallocates():
+    """A late-arriving LS tenant pulls fast memory from the BE tenant."""
+    mgr = _maxmem(num_pages=1024, fast=256, budget=128)
+    sim = ColocationSim(mgr, OPTANE, seed=3)
+    sim.add_tenant(WorkloadSpec("be", n_pages=512, t_miss=1.0, threads=4))
+    sim.run(10)
+    be_fast_before = sim.history[-1].fast_pages["be"]
+    sim.add_tenant(
+        WorkloadSpec("ls", n_pages=384, t_miss=0.1, threads=4, sets=((0.5, 0.95),))
+    )
+    sim.run(40)
+    rec = sim.history[-1]
+    assert rec.fast_pages["ls"] > 100
+    assert rec.fast_pages["be"] < be_fast_before
+    assert rec.fmmr_true["ls"] <= 0.15
+
+
+def test_hot_set_growth_detected_and_served():
+    """Paper Fig. 4 event 5: hot set grows 50% -> FMMR spike -> reconverge."""
+    mgr = _maxmem(num_pages=1024, fast=320, budget=128)
+    sim = ColocationSim(mgr, OPTANE, seed=4)
+    sim.add_tenant(
+        WorkloadSpec("ls", n_pages=512, t_miss=0.1, threads=4, sets=((0.4, 0.9),))
+    )
+    sim.add_tenant(WorkloadSpec("be", n_pages=384, t_miss=1.0, threads=2))
+    sim.run(30)
+    fmmr_before = sim.history[-1].fmmr_true["ls"]
+    sim.tenants["ls"].resize_set(0, 0.6)  # +50% hot pages
+    sim.run(1)
+    spike = max(r.fmmr_true["ls"] for r in sim.history[-1:])
+    sim.run(40)
+    fmmr_after = sim.history[-1].fmmr_true["ls"]
+    assert spike > fmmr_before + 0.02, "growth not visible in FMMR"
+    assert fmmr_after <= 0.15, f"did not reconverge: {fmmr_after:.3f}"
+
+
+def test_baselines_no_qos_interference():
+    """AutoNUMA/2LM: BE tenant steals fast memory from the LS tenant."""
+    for Backend in (AutoNUMALike, TwoLM):
+        be_name = Backend.__name__
+        backend = Backend(num_pages=1024, fast_capacity=256)
+        sim = ColocationSim(backend, OPTANE, seed=5)
+        sim.add_tenant(
+            WorkloadSpec("ls", n_pages=384, t_miss=0.1, threads=2, sets=((0.5, 0.9),))
+        )
+        sim.add_tenant(WorkloadSpec("be", n_pages=512, t_miss=1.0, threads=8))
+        sim.run(40)
+        rec = sim.history[-1]
+        assert rec.fmmr_true["ls"] > 0.15, (
+            f"{be_name}: LS unexpectedly met QoS without support"
+        )
+
+
+def test_maxmem_vs_baselines_ls_qos():
+    """Colocation: MaxMem meets the LS target where baselines do not."""
+    def run(backend):
+        sim = ColocationSim(backend, OPTANE, seed=6)
+        sim.add_tenant(
+            WorkloadSpec("ls", n_pages=384, t_miss=0.1, threads=2, sets=((0.5, 0.9),))
+        )
+        sim.add_tenant(WorkloadSpec("be", n_pages=512, t_miss=1.0, threads=8))
+        sim.run(50)
+        return sim.history[-1]
+
+    mm = run(_maxmem(num_pages=1024, fast=256, budget=128))
+    an = run(AutoNUMALike(num_pages=1024, fast_capacity=256))
+    assert mm.fmmr_true["ls"] < an.fmmr_true["ls"]
+    assert mm.p99["ls"] <= an.p99["ls"]

@@ -1,0 +1,247 @@
+"""Training stack tests: optimizer, train loop, data determinism, checkpoint
+restart equivalence, grad compression, fault-tolerance runtime."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, PrefetchIterator, SyntheticTokens
+from repro.runtime.fault_tolerance import (
+    HeartbeatTracker,
+    StragglerDetector,
+    plan_elastic_mesh,
+)
+from repro.training import grad_compression as gc
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+from repro.training.train_state import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def smoke_cfg():
+    return get_config("qwen2.5-3b").smoke()
+
+
+def _batch(cfg, seed=0, B=2, S=16):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+
+
+class TestOptimizer:
+    def test_lr_schedule_shape(self):
+        cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+        lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(5e-4)
+        assert lrs[2] == pytest.approx(1e-3)
+        assert lrs[3] < lrs[2]
+        assert lrs[4] == pytest.approx(1e-4, rel=1e-2)
+
+    def test_loss_decreases(self, smoke_cfg):
+        cfg = smoke_cfg
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)))
+        batch = _batch(cfg)  # overfit one batch
+        losses = []
+        for _ in range(15):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.2, f"no learning: {losses[0]:.3f}->{losses[-1]:.3f}"
+        assert np.isfinite(losses).all()
+
+    def test_grad_clipping_bounds_update(self, smoke_cfg):
+        cfg = smoke_cfg
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        step = make_train_step(cfg, AdamWConfig(lr=1e-3, grad_clip=1e-9))
+        s2, m = jax.jit(step)(state, _batch(cfg))
+        # with a vanishing clip the params barely move
+        d = max(
+            float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(s2.params))
+        )
+        assert d < 1e-2
+
+
+class TestGradCompression:
+    def test_error_feedback_preserves_sum(self):
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)), jnp.float32)}
+        e = gc.init_error_buf(g)
+        total_deq = jnp.zeros_like(g["w"])
+        for _ in range(30):
+            deq, e = gc.compress_decompress(g, e)
+            total_deq = total_deq + deq["w"]
+        # error feedback: sum of dequantized grads ~= 30 * g
+        err = float(jnp.max(jnp.abs(total_deq / 30 - g["w"])))
+        assert err < 0.02, f"error feedback drift {err}"
+
+    def test_compressed_training_still_learns(self, smoke_cfg):
+        cfg = smoke_cfg
+        state = init_train_state(cfg, jax.random.PRNGKey(0), compress_grads=True)
+        step = jax.jit(
+            make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=2), compress_grads=True)
+        )
+        batch = _batch(cfg)
+        losses = []
+        for _ in range(12):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.1
+
+
+class TestData:
+    def test_determinism_across_shardings(self):
+        cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=8, seed=7)
+        whole = SyntheticTokens(cfg, shard=0, num_shards=1).batch_at(3)
+        parts = [SyntheticTokens(cfg, shard=s, num_shards=4).batch_at(3) for s in range(4)]
+        merged = np.concatenate([p["tokens"] for p in parts], axis=0)
+        assert (merged == whole["tokens"]).all(), "elastic resharding changes the stream"
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2, seed=1)
+        b = SyntheticTokens(cfg).batch_at(0)
+        assert b["tokens"].shape == (2, 16)
+        assert (b["tokens"][:, 1:] == b["labels"][:, :-1]).all()
+
+    def test_prefetch_matches_direct(self):
+        cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2, seed=2)
+        src = SyntheticTokens(cfg)
+        it = PrefetchIterator(src, start_step=0, depth=2)
+        try:
+            for want_step in range(3):
+                step, batch = next(it)
+                assert step == want_step
+                ref = src.batch_at(step)
+                assert (batch["tokens"] == ref["tokens"]).all()
+        finally:
+            it.close()
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path, smoke_cfg):
+        cfg = smoke_cfg
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        ck = Checkpointer(str(tmp_path), keep=2)
+        ck.save(0, state, meta={"data_step": 0}, blocking=True)
+        restored, meta = ck.restore(state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert meta["data_step"] == 0
+
+    def test_restart_equivalence(self, tmp_path, smoke_cfg):
+        """Train 6 steps straight == train 3, checkpoint, restore, train 3."""
+        cfg = smoke_cfg
+        opt = AdamWConfig(lr=1e-3, warmup_steps=2)
+        step = jax.jit(make_train_step(cfg, opt))
+        data = SyntheticTokens(DataConfig(cfg.vocab_size, 16, 2, seed=3))
+
+        def run(state, start, n):
+            for s in range(start, start + n):
+                b = data.batch_at(s)
+                state, _ = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+            return state
+
+        s_direct = run(init_train_state(cfg, jax.random.PRNGKey(0)), 0, 6)
+
+        s_a = run(init_train_state(cfg, jax.random.PRNGKey(0)), 0, 3)
+        ck = Checkpointer(str(tmp_path))
+        ck.save(3, s_a, blocking=True)
+        s_b, _ = ck.restore(s_a)
+        s_b = run(s_b, 3, 3)
+        for a, b in zip(jax.tree.leaves(s_direct.params), jax.tree.leaves(s_b.params)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6
+            )
+
+    def test_atomicity_prunes_and_latest(self, tmp_path, smoke_cfg):
+        state = init_train_state(smoke_cfg, jax.random.PRNGKey(0))
+        ck = Checkpointer(str(tmp_path), keep=2)
+        for s in [0, 10, 20]:
+            ck.save(s, state, blocking=True)
+        assert ck.all_steps() == [10, 20]
+        assert ck.latest_step() == 20
+        assert not any(d.startswith("tmp.") for d in os.listdir(tmp_path))
+
+
+class TestFaultTolerance:
+    def test_heartbeat_detects_death(self):
+        t = [0.0]
+        hb = HeartbeatTracker([0, 1, 2], timeout=5.0, clock=lambda: t[0])
+        t[0] = 3.0
+        hb.beat(0)
+        hb.beat(1)
+        t[0] = 7.0
+        dead = hb.check()
+        assert dead == [2]
+        assert hb.alive_hosts() == [0, 1]
+
+    def test_straggler_detection(self):
+        sd = StragglerDetector([0, 1, 2, 3], ratio=1.5)
+        for _ in range(5):
+            for h in range(3):
+                sd.record(h, 1.0)
+            sd.record(3, 3.0)
+        assert sd.stragglers() == [3]
+
+    def test_elastic_mesh_plan(self):
+        assert plan_elastic_mesh(32, 8, 16) == (16, 16)
+        assert plan_elastic_mesh(31, 8, 16) == (8, 16)  # shrink to pow2 rows
+        with pytest.raises(RuntimeError):
+            plan_elastic_mesh(1, 8, 16)
+
+    def test_elastic_runner_restores_and_continues(self, tmp_path, smoke_cfg):
+        from repro.runtime.fault_tolerance import ElasticRunner
+
+        cfg = smoke_cfg
+        opt = AdamWConfig(lr=1e-3)
+        data = SyntheticTokens(DataConfig(cfg.vocab_size, 16, 2, seed=5))
+        tstep = jax.jit(make_train_step(cfg, opt))
+
+        def make_step(world_size):
+            def fn(state, step):
+                b = data.batch_at(step)
+                state, _ = tstep(state, {k: jnp.asarray(v) for k, v in b.items()})
+                return state
+            return fn
+
+        ck = Checkpointer(str(tmp_path))
+        runner = ElasticRunner(ck, make_step, save_every=4)
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        final, world = runner.run(state, world_size=8, n_steps=12, fail_at=[6])
+        assert runner.restarts == 1
+        assert world == 4
+        assert int(final.opt.step) >= 12 - 4  # resumed from step 4 checkpoint
+
+
+class TestMicrobatching:
+    def test_grad_accumulation_matches_full_batch(self, smoke_cfg):
+        """K-microbatch accumulation == full-batch step (same data)."""
+        cfg = smoke_cfg
+        opt = AdamWConfig(lr=1e-3, warmup_steps=2)
+        batch = _batch(cfg, seed=9, B=4, S=16)
+        s0 = init_train_state(cfg, jax.random.PRNGKey(0))
+        s_full, m_full = jax.jit(make_train_step(cfg, opt))(s0, batch)
+        s_mb, m_mb = jax.jit(make_train_step(cfg, opt, microbatch=2))(s0, batch)
+        # loss is the mean over microbatches == full-batch mean (equal sizes)
+        assert float(m_mb["loss"]) == pytest.approx(float(m_full["loss"]), rel=1e-4)
+        for a, b in zip(jax.tree.leaves(s_full.params), jax.tree.leaves(s_mb.params)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=5e-5, rtol=5e-4,
+            )
+
+    def test_microbatch_still_learns(self, smoke_cfg):
+        cfg = smoke_cfg
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3), microbatch=2))
+        batch = _batch(cfg, B=4, S=16)
+        losses = []
+        for _ in range(10):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.1
