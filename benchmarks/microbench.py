@@ -14,11 +14,19 @@ import numpy as np
 
 from benchmarks.common import Rows
 from repro.core import policy
+from repro.core.manager import CentralManager
 from repro.core.types import PageState, PolicyParams, TenantState, TIER_FAST, TIER_SLOW
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hot_bins import hot_bins
 from repro.kernels.page_copy import page_move
 from repro.kernels.paged_attention import paged_attention
+
+# Seed-commit (c35e7fc, lexsort ranks + W=4096 window) measurement of
+# micro_policy_epoch_64k_pages on the reference CI host — the fixed baseline
+# BENCH_policy.json tracks the counting-rank engine against across PRs.
+SEED_POLICY_EPOCH_64K_US = 78321.0
+
+_POLICY_BENCH_CACHE = None
 
 
 def _time(fn, n=10, warmup=2) -> float:
@@ -30,12 +38,17 @@ def _time(fn, n=10, warmup=2) -> float:
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run() -> Rows:
-    rows = Rows()
-    rng = np.random.default_rng(0)
+def _time_wall(fn, n=3, warmup=1) -> float:
+    """Wall time for host-side loops (already synchronous)."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
 
-    # policy epoch at production scale: 64k pages (128 GB @ 2 MB), 16 tenants
-    P, T, R = 65536, 16, 2048
+
+def _policy_state(rng, P, T):
     pages = PageState.create(P)._replace(
         owner=jnp.asarray(rng.integers(0, T, P), jnp.int32),
         tier=jnp.asarray(np.where(rng.random(P) < 0.25, TIER_FAST, TIER_SLOW), jnp.int8),
@@ -45,14 +58,113 @@ def run() -> Rows:
         t_miss=jnp.asarray(rng.uniform(0.05, 1.0, T), jnp.float32),
         arrival=jnp.arange(T, dtype=jnp.int32),
     )
-    params = PolicyParams(
-        fast_capacity=jnp.int32(P // 4), migration_budget=jnp.int32(R),
-        sample_period=jnp.int32(100),
+    return pages, tenants
+
+
+def _bench_manager(P, T, R, counts, k=16):
+    """(singles_total_us, scan_total_us): k policy ticks through the
+    CentralManager API — per-epoch record_access + run_epoch versus one
+    fused run_epochs scan dispatch."""
+    def mk():
+        mgr = CentralManager(
+            num_pages=P, fast_capacity=P // 4, migration_budget=R,
+            max_tenants=T, sample_period=100,
+        )
+        for _ in range(T):
+            h = mgr.register(t_miss=0.5)
+            mgr.allocate(h, P // T)
+        return mgr
+
+    mgr_a = mk()
+
+    def singles():
+        for _ in range(k):
+            mgr_a.record_access(counts)
+            mgr_a.run_epoch()
+
+    singles_us = _time_wall(singles)
+
+    mgr_b = mk()
+
+    def scan():
+        mgr_b.run_epochs(k, counts=counts)
+
+    scan_us = _time_wall(scan)
+    return singles_us, scan_us
+
+
+def policy_bench() -> dict:
+    """Policy-engine timings for BENCH_policy.json (cached per process)."""
+    global _POLICY_BENCH_CACHE
+    if _POLICY_BENCH_CACHE is not None:
+        return _POLICY_BENCH_CACHE
+    rng = np.random.default_rng(0)
+    T, R, k = 16, 2048, 16
+    out = {
+        "seed_reference": {
+            "micro_policy_epoch_64k_pages_us": SEED_POLICY_EPOCH_64K_US,
+            "commit": "c35e7fc (lexsort ranks, W=4096 victim window)",
+        },
+        "policy_epoch": {},
+        "run_epochs_k16": {},
+    }
+    for P in (65536, 262144):
+        pages, tenants = _policy_state(rng, P, T)
+        params = PolicyParams(
+            fast_capacity=jnp.int32(P // 4), migration_budget=jnp.int32(R),
+            sample_period=jnp.int32(100),
+        )
+        sampled = jnp.asarray(rng.poisson(2, P), jnp.uint32)
+        n_rep = 10 if P <= 65536 else 5
+        epoch_us = _time(lambda: policy.policy_epoch(
+            pages, tenants, sampled, params, max_tenants=T, plan_size=R), n=n_rep)
+        entry = {"us": epoch_us, "epochs_per_sec": 1e6 / epoch_us}
+        if P == 65536:
+            entry["speedup_vs_seed"] = SEED_POLICY_EPOCH_64K_US / epoch_us
+        out["policy_epoch"][str(P)] = entry
+
+        counts = rng.poisson(200, P).astype(np.int64)
+        singles_us, scan_us = _bench_manager(P, T, R, counts, k=k)
+        out["run_epochs_k16"][str(P)] = {
+            "singles_total_us": singles_us,
+            "scan_total_us": scan_us,
+            "singles_per_epoch_us": singles_us / k,
+            "scan_per_epoch_us": scan_us / k,
+            "scan_epochs_per_sec": k * 1e6 / scan_us,
+            "scan_speedup_vs_singles": singles_us / scan_us,
+        }
+    _POLICY_BENCH_CACHE = out
+    return out
+
+
+def run() -> Rows:
+    rows = Rows()
+    rng = np.random.default_rng(0)
+
+    # policy engine at production scale: 64k pages (128 GB @ 2 MB), 16
+    # tenants, plus the 256k-page and fused-scan variants
+    pb = policy_bench()
+    P, T, R = 65536, 16, 2048
+    rows.add(
+        "micro_policy_epoch_64k_pages", pb["policy_epoch"]["65536"]["us"],
+        f"pages=65536;tenants={T};budget={R};"
+        f"speedup_vs_seed={pb['policy_epoch']['65536']['speedup_vs_seed']:.2f}",
     )
-    sampled = jnp.asarray(rng.poisson(2, P), jnp.uint32)
-    us = _time(lambda: policy.policy_epoch(
-        pages, tenants, sampled, params, max_tenants=T, plan_size=R))
-    rows.add("micro_policy_epoch_64k_pages", us, f"pages={P};tenants={T};budget={R}")
+    rows.add(
+        "micro_policy_epoch_256k_pages", pb["policy_epoch"]["262144"]["us"],
+        f"pages=262144;tenants={T};budget={R}",
+    )
+    for p_key, label in (("65536", "64k"), ("262144", "256k")):
+        d = pb["run_epochs_k16"][p_key]
+        rows.add(
+            f"micro_policy_multi_epoch_k16_{label}_pages", d["scan_total_us"],
+            f"per_epoch_us={d['scan_per_epoch_us']:.0f};"
+            f"speedup_vs_singles={d['scan_speedup_vs_singles']:.2f}",
+        )
+        rows.add(
+            f"micro_policy_single_epochs_k16_{label}_pages", d["singles_total_us"],
+            f"per_epoch_us={d['singles_per_epoch_us']:.0f}",
+        )
 
     # hot_bins kernel (interpret mode)
     ids = jnp.asarray(rng.integers(0, 4096, 2048), jnp.int32)

@@ -11,9 +11,22 @@ for the exact paper claim it reproduces):
   engine_qos_* tiering benefit on the REAL serving stack      (beyond paper)
   roofline_* 40-cell dry-run roofline table                   (scale deliverable)
   micro_*  host-side primitive timings
+
+Also writes ``BENCH_policy.json`` (policy-engine epochs/sec + per-epoch µs,
+single-step vs fused-scan, against the fixed seed baseline) so the perf
+trajectory is tracked across PRs.
 """
+import json
 import sys
 import time
+
+
+def write_policy_json(path: str = "BENCH_policy.json") -> None:
+    from benchmarks import microbench
+
+    with open(path, "w") as f:
+        json.dump(microbench.policy_bench(), f, indent=2)
+    print(f"wrote {path}")
 
 
 def main() -> None:
@@ -49,6 +62,11 @@ def main() -> None:
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
             print(f"section_{name}_FAILED,0,{e!r}")
+    try:
+        write_policy_json()
+    except Exception as e:
+        failures += 1
+        print(f"section_policy_json_FAILED,0,{e!r}")
     if failures:
         sys.exit(1)
 

@@ -85,6 +85,13 @@ class _BaselineBase:
     def record_access(self, counts: np.ndarray) -> None:
         self._pending += counts
 
+    # telemetry surface shared with CentralManager (simulator batch reads)
+    def tiers(self) -> np.ndarray:
+        return self.pages.tier
+
+    def owners(self) -> np.ndarray:
+        return self.pages.owner
+
     def fmmr_of(self, h: int) -> float:
         return self._ewma.get(h, 0.0)
 

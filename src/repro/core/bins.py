@@ -47,19 +47,24 @@ def effective_count(pages: PageState, tenants: TenantState) -> jax.Array:
     return jnp.where(pages.owner >= 0, eff, jnp.uint32(0))
 
 
-def accumulate_samples(
+def accumulate_and_count(
     pages: PageState,
     tenants: TenantState,
     sampled: jax.Array,  # u32[P] sampled accesses this epoch
     num_bins,
-) -> Tuple[PageState, TenantState, jax.Array]:
+    owner_onehot: jax.Array = None,  # bool[T, P] (owner == t), built if None
+) -> Tuple[PageState, TenantState, jax.Array, jax.Array]:
     """Fold one epoch of samples into the counters; fire cooling if needed.
 
-    Returns (pages, tenants, cooled[T] bool). Lazy-cooling bookkeeping: pages
-    touched this epoch materialize their pending shifts; untouched pages keep
-    their stale counts + stamps (materialized on their next touch or read via
-    ``effective_count``).
+    Returns (pages, tenants, cooled[T] bool, eff u32[P]) where ``eff`` is the
+    post-accumulation effective count (what ``effective_count`` would return
+    on the new state) — computed here for free so the policy hot path does not
+    need a second cooling-materialization pass. Lazy-cooling bookkeeping:
+    pages touched this epoch materialize their pending shifts; untouched
+    pages keep their stale counts + stamps (materialized on their next touch
+    or read via ``effective_count``).
     """
+    T = tenants.cool_epoch.shape[0]
     eff = effective_count(pages, tenants)
     new_count = eff + sampled.astype(jnp.uint32)
     touched = sampled > 0
@@ -68,14 +73,13 @@ def accumulate_samples(
     count1 = jnp.where(touched, new_count, pages.count)
     last1 = jnp.where(touched, tenants.cool_epoch[owner], pages.last_cool)
 
-    # cooling: any page of tenant t reaching the top-bin threshold halves all
+    # cooling: any page of tenant t reaching the top-bin threshold halves all.
+    # Max-reduce over an owner one-hot instead of a serial scatter-max.
     thresh = cool_threshold(num_bins)
     over = touched & (new_count >= thresh) & (pages.owner >= 0)
-    cooled = (
-        jnp.zeros_like(tenants.cool_epoch, dtype=bool)
-        .at[owner]
-        .max(over, mode="drop")
-    )
+    if owner_onehot is None:
+        owner_onehot = pages.owner[None, :] == jnp.arange(T, dtype=jnp.int32)[:, None]
+    cooled = (owner_onehot & over[None, :]).any(axis=1)
     cool_epoch2 = tenants.cool_epoch + cooled.astype(jnp.int32)
 
     # materialize the new cooling event for touched pages immediately
@@ -85,7 +89,45 @@ def accumulate_samples(
 
     pages2 = pages._replace(count=count2, last_cool=last2)
     tenants2 = tenants._replace(cool_epoch=cool_epoch2)
+    # effective count on the NEW state: touched pages are fully materialized;
+    # untouched pages halve once more if their tenant cooled this epoch.
+    eff_new = jnp.where(do_halve, count1 >> 1, jnp.where(touched, count1, eff))
+    eff_new = jnp.where(~touched & cooled[owner], eff_new >> 1, eff_new)
+    eff_new = jnp.where(pages.owner >= 0, eff_new, jnp.uint32(0))
+    return pages2, tenants2, cooled, eff_new
+
+
+def accumulate_samples(
+    pages: PageState,
+    tenants: TenantState,
+    sampled: jax.Array,  # u32[P] sampled accesses this epoch
+    num_bins,
+) -> Tuple[PageState, TenantState, jax.Array]:
+    """Compatibility wrapper around :func:`accumulate_and_count`; returns
+    (pages, tenants, cooled[T] bool)."""
+    pages2, tenants2, cooled, _ = accumulate_and_count(pages, tenants, sampled, num_bins)
     return pages2, tenants2, cooled
+
+
+def count_histogram(
+    values: jax.Array,  # i32/u32[P] per-page bucket keys (clamped to num_buckets-1)
+    owner: jax.Array,  # i32[P] tenant slot; entries with mask=False ignored
+    mask: jax.Array,  # bool[P] which pages participate
+    num_buckets: int,
+    max_tenants: int,
+) -> jax.Array:
+    """[T, num_buckets] page counts per (tenant, bucket).
+
+    The generic form of the paper's per-bin lists: one scatter-add builds the
+    whole (tenant, bucket) occupancy table in O(P); cumulative sums over the
+    bucket axis then give exact victim *ranks* without any sort (DESIGN.md §2).
+    """
+    key = jnp.minimum(values.astype(jnp.int32), num_buckets - 1)
+    flat = jnp.where(mask, owner * num_buckets + key, max_tenants * num_buckets)
+    hist = jnp.zeros((max_tenants * num_buckets + 1,), jnp.int32).at[flat].add(
+        1, mode="drop"
+    )
+    return hist[:-1].reshape(max_tenants, num_buckets)
 
 
 def heat_histogram(
@@ -94,7 +136,4 @@ def heat_histogram(
     """[T, num_bins] page counts per (tenant, bin) — the heat gradient."""
     eff = effective_count(pages, tenants)
     b = bin_of(eff, num_bins)
-    owner = pages.owner
-    flat = jnp.where(owner >= 0, owner * num_bins + b, max_tenants * num_bins)
-    hist = jnp.zeros((max_tenants * num_bins + 1,), jnp.int32).at[flat].add(1)
-    return hist[:-1].reshape(max_tenants, num_bins)
+    return count_histogram(b, pages.owner, pages.owner >= 0, num_bins, max_tenants)

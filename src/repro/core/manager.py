@@ -8,12 +8,22 @@ exposes the libMaxMem-analogue surface:
     pages = mgr.allocate(h, n_pages)      # mmap/page-fault analogue
     mgr.record_access(counts)             # engine reports page accesses
     stats = mgr.run_epoch()               # policy thread tick
+    res = mgr.run_epochs(k, counts)       # k ticks in ONE device dispatch
     mgr.set_target(h, 0.5)                # dynamic QoS update
     mgr.free(h, pages); mgr.unregister(h) # process exit
 
 Allocation follows §3.1: fast first, slow if fast exhausted, error if both
 exhausted. On tenant exit, memory returns to the free pool and is granted to
 needers on the next epoch.
+
+All hot-path state (pages, tenants, the un-sampled access backlog, the PRNG
+key) lives on device in one ``PolicyState`` pytree: ``record_access`` folds
+reports with a jitted add, ``run_epoch`` is one fused dispatch
+(``policy.epoch_step``), and ``run_epochs`` scans k epochs in one dispatch
+(``policy.multi_epoch``). Telemetry reads go through a cached host snapshot
+so a burst of ``fast_pages_of``/``tier_of`` calls costs one transfer.
+Control-plane operations (register/allocate/free) stay host-side — they are
+rare and inherently serial.
 """
 from __future__ import annotations
 
@@ -25,7 +35,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import policy
-from repro.core.sampler import sample_accesses
 from repro.core.types import (
     TIER_FAST,
     TIER_NONE,
@@ -34,6 +43,7 @@ from repro.core.types import (
     MigrationPlan,
     PageState,
     PolicyParams,
+    PolicyState,
     TenantState,
 )
 
@@ -42,14 +52,48 @@ class TenantHandle(int):
     """Opaque tenant slot id (the libMaxMem connection analogue)."""
 
 
+@jax.jit
+def _fold_counts(pending: jax.Array, counts: jax.Array) -> jax.Array:
+    return pending + counts
+
+
 @dataclasses.dataclass
 class EpochResult:
     stats: EpochStats
-    plan: MigrationPlan
+    plan: Optional[MigrationPlan]
     flags: np.ndarray  # bool[T] tenants that could not be served
 
     def fmmr(self, h: int) -> float:
         return float(self.stats.fmmr_ewma[h])
+
+
+@dataclasses.dataclass
+class MultiEpochResult:
+    """Stacked output of ``run_epochs``: every array has a leading k axis."""
+
+    stats: EpochStats  # [k, T] leaves
+    plans: Optional[MigrationPlan]  # [k, R] leaves, None if not collected
+    flags: np.ndarray  # bool[k, T]
+
+    def __len__(self) -> int:
+        return self.flags.shape[0]
+
+    def unstack(self) -> List[EpochResult]:
+        k = len(self)
+        return [
+            EpochResult(
+                stats=jax.tree.map(lambda a: a[i], self.stats),
+                plan=None if self.plans is None else jax.tree.map(lambda a: a[i], self.plans),
+                flags=self.flags[i],
+            )
+            for i in range(k)
+        ]
+
+    @property
+    def migrated_per_epoch(self) -> np.ndarray:
+        """i64[k] pages moved each epoch (from the exact stats telemetry)."""
+        moved = np.asarray(self.stats.promoted) + np.asarray(self.stats.demoted)
+        return moved.sum(axis=1)
 
 
 class CentralManager:
@@ -78,13 +122,37 @@ class CentralManager:
             fair_mode=fair_mode,
         )
         self.plan_size = int(migration_budget)
-        self.pages = PageState.create(num_pages)
-        self.tenants = TenantState.create(max_tenants)
+        self._state = PolicyState.create(num_pages, max_tenants, seed=seed)
         self._arrival_seq = 0
-        self._rng = jax.random.PRNGKey(seed)
-        self._pending = np.zeros((num_pages,), np.int64)  # un-sampled accesses
         self.exact_sampling = exact_sampling
         self.epoch_index = 0
+        self._snap: Optional[Dict[str, np.ndarray]] = None
+
+    # --------------------------------------------------------- state views
+    @property
+    def pages(self) -> PageState:
+        return self._state.pages
+
+    @pages.setter
+    def pages(self, value: PageState) -> None:
+        self._state = self._state._replace(pages=value)
+        self._snap = None
+
+    @property
+    def tenants(self) -> TenantState:
+        return self._state.tenants
+
+    @tenants.setter
+    def tenants(self, value: TenantState) -> None:
+        self._state = self._state._replace(tenants=value)
+
+    def _snapshot(self) -> Dict[str, np.ndarray]:
+        """Host copy of the page metadata; ONE batched transfer per epoch no
+        matter how many telemetry reads follow."""
+        if self._snap is None:
+            tier, owner = jax.device_get((self._state.pages.tier, self._state.pages.owner))
+            self._snap = {"tier": tier, "owner": owner}
+        return self._snap
 
     # ------------------------------------------------------------- tenants
     def register(self, t_miss: float) -> TenantHandle:
@@ -113,7 +181,7 @@ class CentralManager:
         )
 
     def unregister(self, h: TenantHandle) -> None:
-        owned = np.flatnonzero(np.asarray(self.pages.owner) == int(h))
+        owned = np.flatnonzero(self._snapshot()["owner"] == int(h))
         if len(owned):
             self.free(h, owned)
         t = self.tenants
@@ -122,8 +190,9 @@ class CentralManager:
     # ------------------------------------------------------------- memory
     def allocate(self, h: TenantHandle, n_pages: int) -> np.ndarray:
         """First-touch allocation: fast while available, then slow (§3.1)."""
-        tier = np.asarray(self.pages.tier)
-        owner = np.asarray(self.pages.owner)
+        snap = self._snapshot()
+        tier = snap["tier"]
+        owner = snap["owner"]
         unalloc = np.flatnonzero(tier == TIER_NONE)
         if len(unalloc) < n_pages:
             raise MemoryError(
@@ -146,59 +215,104 @@ class CentralManager:
 
     def free(self, h: TenantHandle, page_ids: Sequence[int]) -> None:
         ids = np.asarray(page_ids, np.int32)
-        owner = np.asarray(self.pages.owner)
+        snap = self._snapshot()
+        owner = snap["owner"]
         if not np.all(owner[ids] == int(h)):
             raise PermissionError("tenant freeing pages it does not own")
-        tier = np.asarray(self.pages.tier).copy()
+        tier = snap["tier"].copy()
         owner = owner.copy()
         tier[ids] = TIER_NONE
         owner[ids] = -1
         count = np.asarray(self.pages.count).copy()
         count[ids] = 0
+        # reset the cooling stamp too: a freed slot must not leak the previous
+        # owner's cool_epoch, or a tenant that reuses it would see its counts
+        # spuriously halved (stale last_cool > 0 vs a fresh tenant's epoch 0
+        # is no halving, but a RE-registered slot restarts cool_epoch at 0
+        # while a stale stamp could be arbitrarily high — keep them paired).
+        last_cool = np.asarray(self.pages.last_cool).copy()
+        last_cool[ids] = 0
         self.pages = self.pages._replace(
-            tier=jnp.asarray(tier), owner=jnp.asarray(owner), count=jnp.asarray(count)
+            tier=jnp.asarray(tier),
+            owner=jnp.asarray(owner),
+            count=jnp.asarray(count),
+            last_cool=jnp.asarray(last_cool),
         )
-        self._pending[ids] = 0
+        pending = np.asarray(self._state.pending).copy()
+        pending[ids] = 0
+        self._state = self._state._replace(pending=jnp.asarray(pending))
 
     # ------------------------------------------------------------- accesses
     def record_access(self, counts: np.ndarray) -> None:
         """Engine-side access report: exact per-page access counts since the
-        last call (the instrumented attention/GUPS stream)."""
-        self._pending += np.asarray(counts, np.int64)
+        last call (the instrumented attention/GUPS stream). Folded into the
+        on-device backlog with a jitted add — no host-side accumulator."""
+        c = jnp.asarray(np.asarray(counts).astype(np.uint32, copy=False))
+        self._state = self._state._replace(
+            pending=_fold_counts(self._state.pending, c)
+        )
 
     # ------------------------------------------------------------- epoch
     def run_epoch(self) -> EpochResult:
-        """Policy-thread tick: sample -> policy -> migrate metadata."""
-        self._rng, sub = jax.random.split(self._rng)
-        sampled = sample_accesses(
-            sub,
-            jnp.asarray(self._pending, jnp.uint32),
-            int(self.params.sample_period),
-            exact=self.exact_sampling,
-        )
-        self._pending[:] = 0
-        pages, tenants, plan, stats = policy.policy_epoch(
-            self.pages,
-            self.tenants,
-            sampled,
+        """Policy-thread tick: sample -> policy -> migrate, one dispatch."""
+        self._state, plan, stats = policy.epoch_step(
+            self._state,
             self.params,
             max_tenants=self.max_tenants,
             plan_size=self.plan_size,
+            exact_sampling=self.exact_sampling,
         )
-        pages = policy.apply_plan(pages, plan)
-        self.pages, self.tenants = pages, tenants
         self.epoch_index += 1
-        return EpochResult(stats=stats, plan=plan, flags=np.asarray(tenants.flagged))
+        self._snap = None
+        return EpochResult(stats=stats, plan=plan, flags=np.asarray(self._state.tenants.flagged))
+
+    def run_epochs(
+        self,
+        k: int,
+        counts: Optional[np.ndarray] = None,
+        collect_plans: bool = False,
+    ) -> MultiEpochResult:
+        """Run ``k`` policy epochs in ONE device dispatch (``lax.scan``).
+
+        ``counts``: None (consume the recorded backlog, then idle), [P]
+        (replayed every epoch — steady-state workload), or [k, P]. With the
+        default ``collect_plans=False`` the per-epoch page-id lists are not
+        materialized (the per-tenant promoted/demoted telemetry in ``stats``
+        is still exact); pass True when a DMA driver needs the ids.
+        """
+        c = None
+        if counts is not None:
+            c = jnp.asarray(np.asarray(counts).astype(np.uint32, copy=False))
+        self._state, plans, stats, flagged = policy.multi_epoch(
+            self._state,
+            self.params,
+            c,
+            k=k,
+            max_tenants=self.max_tenants,
+            plan_size=self.plan_size,
+            exact_sampling=self.exact_sampling,
+            collect_plans=collect_plans,
+        )
+        self.epoch_index += k
+        self._snap = None
+        return MultiEpochResult(stats=stats, plans=plans, flags=np.asarray(flagged))
 
     # ------------------------------------------------------------- telemetry
+    def tiers(self) -> np.ndarray:
+        """i8[P] tier of every page (cached host snapshot)."""
+        return self._snapshot()["tier"]
+
+    def owners(self) -> np.ndarray:
+        """i32[P] owner of every page (cached host snapshot)."""
+        return self._snapshot()["owner"]
+
     def fast_pages_of(self, h: TenantHandle) -> int:
-        m = (np.asarray(self.pages.owner) == int(h)) & (
-            np.asarray(self.pages.tier) == TIER_FAST
-        )
+        snap = self._snapshot()
+        m = (snap["owner"] == int(h)) & (snap["tier"] == TIER_FAST)
         return int(m.sum())
 
     def tier_of(self, page_ids) -> np.ndarray:
-        return np.asarray(self.pages.tier)[np.asarray(page_ids)]
+        return self._snapshot()["tier"][np.asarray(page_ids)]
 
     def fmmr_of(self, h: TenantHandle) -> float:
         return float(self.tenants.a_miss[int(h)])

@@ -9,19 +9,31 @@ Pipeline per epoch (cf. Figure 1 of the paper):
      / demote coldest-fast pairs where it strictly improves FMMR
   5. emit a bounded MigrationPlan (page id lists) + telemetry
 
-Victim selection uses the dense heat gradient: per-tenant rank of every page
-within its (owner, tier) group by effective count — a composite-key argsort
-replaces the paper's per-bin linked lists (TPU adaptation, DESIGN.md §2).
+Victim selection is O(P) and *exact*: instead of sorting, each (tenant, tier)
+candidate group is histogrammed by clamped effective count, and prefix sums
+over the count axis yield a per-tenant cutoff count plus a residual for the
+bucket the quota lands in — the paper's per-bin lists restated as cumulative
+offsets at count granularity (DESIGN.md §2). Ties within a count bucket break
+by lowest page id, matching the stable lexsort the seed used, and there is no
+candidate window: selection is exact for any number of candidates per tenant.
+
+Entry points:
+  * ``policy_epoch``  — one epoch on explicit (pages, tenants, sampled).
+  * ``epoch_step``    — fused sample -> policy -> apply on a ``PolicyState``
+                        (single dispatch; buffers donated off-CPU).
+  * ``multi_epoch``   — ``lax.scan`` of the epoch across k epochs in one
+                        dispatch, with stacked per-epoch telemetry.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
+from functools import lru_cache, partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bins, fmmr
+from repro.core.sampler import sample_accesses
 from repro.core.types import (
     TIER_FAST,
     TIER_SLOW,
@@ -29,8 +41,22 @@ from repro.core.types import (
     MigrationPlan,
     PageState,
     PolicyParams,
+    PolicyState,
     TenantState,
 )
+
+# Effective counts at or above this value share one histogram bucket (their
+# relative order becomes a tie). Cooling (§3.2) keeps steady-state counts
+# below 2 * 2^(num_bins-1) = 64 with the paper's 6 bins, so 4096 leaves two
+# orders of magnitude of headroom for bursty epochs.
+COUNT_CLAMP = 4096
+
+# Buffer donation saves a copy of the O(P) state arrays on accelerators; the
+# CPU backend cannot donate and would warn on every call. The decision is
+# made per call (not at import) so configuring the platform after importing
+# this module still does the right thing.
+def _donate_state() -> bool:
+    return jax.default_backend() != "cpu"
 
 
 def _per_tenant_pages(pages: PageState, max_tenants: int) -> Tuple[jax.Array, jax.Array]:
@@ -41,34 +67,148 @@ def _per_tenant_pages(pages: PageState, max_tenants: int) -> Tuple[jax.Array, ja
     return fast[:-1], slow[:-1]
 
 
-@partial(jax.jit, static_argnames=("max_tenants", "plan_size"))
-def policy_epoch(
+def _select_victims(
+    key,  # i32[P] clamped effective counts
+    owner,  # i32[P] owner clamped to >= 0
+    slow_cand,  # bool[P] promotion candidates
+    fast_cand,  # bool[P] demotion candidates
+    hist_slow,  # i32[T,C]
+    hist_fast,  # i32[T,C]
+    cum_slow,  # i32[T,C] inclusive prefix sums of the histograms
+    cum_fast,
+    pq,  # i32[T] promote quota
+    dq,  # i32[T] demote quota
+    owner_onehot,  # bool[T,P]
+):
+    """(promote_mask, demote_mask) bool[P]: per tenant, exactly the ``pq[t]``
+    HOTTEST slow candidates and ``dq[t]`` COLDEST fast candidates.
+
+    Counting-rank selection from the [T, C] candidate histograms: buckets
+    strictly beyond a per-tenant cutoff count are taken whole; the single
+    bucket each quota lands in is filled in page-id order (stable, matching
+    the seed's lexsort tie-break). The two in-bucket position counters are
+    packed into one u32 prefix sum (promote low 16 bits, demote high 16) —
+    sound for P <= 65536 because the only overflow case (65536 same-count
+    members in one tenant) forces the other side's quota to zero.
+    """
+    T, C = hist_slow.shape
+    P = key.shape[0]
+
+    # hot side: smallest count whose whole bucket fits under the quota
+    total_slow = cum_slow[:, -1:]
+    geq = total_slow - cum_slow + hist_slow  # [T,C] candidates with count >= c
+    c_full = C - (geq <= pq[:, None]).sum(axis=1)  # [T]; == C when none fit
+    above = jnp.take_along_axis(geq, jnp.clip(c_full, 0, C - 1)[:, None], axis=1)[:, 0]
+    above = jnp.where(c_full < C, above, 0)  # candidates already taken whole
+    r_p = pq - above  # residual from the straddling bucket c_full - 1
+    member_p = slow_cand & (key == (c_full - 1)[owner]) & (r_p[owner] > 0)
+
+    # cold side: largest count whose whole bucket fits (cum_fast increasing)
+    n_full = (cum_fast <= dq[:, None]).sum(axis=1)  # buckets taken whole: c < n_full
+    below = jnp.take_along_axis(cum_fast, jnp.clip(n_full - 1, 0, C - 1)[:, None], axis=1)[:, 0]
+    below = jnp.where(n_full > 0, below, 0)
+    r_d = dq - below  # residual from the straddling bucket n_full
+    member_d = fast_cand & (key == n_full[owner]) & (r_d[owner] > 0)
+
+    args = (member_p, member_d, owner, owner_onehot)
+    if P <= 65536:
+        # member counts are bounded by P <= 2^16, and the single possible
+        # wrap (one tenant, all 2^16 pages in one bucket) is healed inside
+        # _occ_packed — no runtime branch needed
+        occ_p, occ_d = _occ_packed(*args)
+    else:
+        # a 16-bit field wraps iff one tenant has >= 2^16 members in its
+        # straddling bucket (mid-pool wraps also corrupt the carry, so the
+        # in-packed healing is not enough here); bucket sizes are known, so
+        # branch at runtime — the slow two-pass path only ever executes on
+        # degenerate states
+        safe = jnp.maximum(hist_slow.max(), hist_fast.max()) < (1 << 16)
+        occ_p, occ_d = jax.lax.cond(safe, _occ_packed, _occ_twopass, *args)
+
+    promote = (slow_cand & (key >= c_full[owner])) | (member_p & (occ_p <= r_p[owner]))
+    demote = (fast_cand & (key < n_full[owner])) | (member_d & (occ_d <= r_d[owner]))
+    return promote, demote
+
+
+def _occ_packed(member_p, member_d, owner, owner_onehot):
+    """In-bucket page-id-order positions (1-based) for both member sets via
+    ONE per-tenant prefix sum: promote occupancy in the low 16 bits, demote
+    in the high 16 (the sets are disjoint, so fields never interact)."""
+    P = member_p.shape[0]
+    packed = member_p.astype(jnp.uint32) + (member_d.astype(jnp.uint32) << 16)
+    cum = jnp.cumsum(
+        jnp.where(owner_onehot, packed[None, :], 0), axis=1, dtype=jnp.uint32
+    )[owner, jnp.arange(P)]
+    occ_p = (cum & 0xFFFF).astype(jnp.int32)
+    occ_d = (cum >> 16).astype(jnp.int32)
+    # members have 1-based positions, so a 0 field can only mean the value
+    # wrapped at exactly 2^16 members (one tenant owning every page of a
+    # 2^16-page pool in one bucket): restore the true position. The +1 the
+    # wrap carries into the high field is unreachable — it would require a
+    # demote member after the last page.
+    occ_p = jnp.where(member_p & (occ_p == 0), 1 << 16, occ_p)
+    occ_d = jnp.where(member_d & (occ_d == 0), 1 << 16, occ_d)
+    return occ_p, occ_d
+
+
+def _occ_twopass(member_p, member_d, owner, owner_onehot):
+    """Wrap-proof fallback: one int32 prefix sum per member set."""
+    P = member_p.shape[0]
+    idx = jnp.arange(P)
+    occ_p = jnp.cumsum(
+        (owner_onehot & member_p[None, :]).astype(jnp.int8), axis=1, dtype=jnp.int32
+    )[owner, idx]
+    occ_d = jnp.cumsum(
+        (owner_onehot & member_d[None, :]).astype(jnp.int8), axis=1, dtype=jnp.int32
+    )[owner, idx]
+    return occ_p, occ_d
+
+
+def _pair_count(cum_slow, cum_fast, give, take, cap):
+    """i32[T]: number of strictly-improving (hottest-slow, coldest-fast)
+    rebalance pairs after skipping the reallocation victims.
+
+    With hot counts descending and cold counts ascending the improving pairs
+    form a prefix, and its length has a closed form over the count domain:
+    pair m-1 improves iff some count c separates it, i.e.
+
+        max_c min(#slow_hotter_than(c) - give, #fast_at_most(c) - take)
+
+    — two cumulative sums and a max, no per-rank gathers and no window.
+    """
+    hotter = cum_slow[:, -1:] - cum_slow
+    m = jnp.minimum(hotter - give[:, None], cum_fast - take[:, None])
+    return jnp.clip(m.max(axis=1), 0, cap).astype(jnp.int32)
+
+
+def _epoch_core(
     pages: PageState,
     tenants: TenantState,
     sampled: jax.Array,  # u32[P] sampled accesses this epoch (PEBS analogue)
     params: PolicyParams,
-    *,
     max_tenants: int,
     plan_size: int,
+    count_clamp: int,
+    collect_plan: bool,
 ):
-    """Returns (pages', tenants', MigrationPlan, EpochStats)."""
+    """One policy epoch; trace-time body shared by all jitted entry points.
+
+    Returns (pages, tenants, promote_mask, demote_mask, plan | None, stats).
+    ``pages`` still carries pre-migration tiers; callers apply the masks (or
+    the plan) themselves so data movement can be scheduled separately.
+    """
     P = pages.owner.shape[0]
     T = max_tenants
+    C = count_clamp
+    oh = pages.owner[None, :] == jnp.arange(T, dtype=jnp.int32)[:, None]  # [T,P]
 
     # ---- 1. per-tenant fast/slow sample counts (tier *before* migration) ----
-    owner_c = jnp.where(pages.owner >= 0, pages.owner, T)
-    s_fast = (
-        jnp.zeros((T + 1,), jnp.uint32)
-        .at[owner_c]
-        .add(jnp.where(pages.tier == TIER_FAST, sampled, 0))[:-1]
-    )
-    s_slow = (
-        jnp.zeros((T + 1,), jnp.uint32)
-        .at[owner_c]
-        .add(jnp.where(pages.tier == TIER_SLOW, sampled, 0))[:-1]
-    )
-    pages, tenants, cooled = bins.accumulate_samples(
-        pages, tenants, sampled, params.num_bins
+    is_fast = pages.tier == TIER_FAST
+    is_slow = pages.tier == TIER_SLOW
+    s_fast = jnp.where(oh & is_fast[None, :], sampled[None, :], 0).sum(axis=1)
+    s_slow = jnp.where(oh & is_slow[None, :], sampled[None, :], 0).sum(axis=1)
+    pages, tenants, cooled, eff = bins.accumulate_and_count(
+        pages, tenants, sampled, params.num_bins, owner_onehot=oh
     )
 
     # ---- 2. FMMR update ------------------------------------------------------
@@ -77,12 +217,33 @@ def policy_epoch(
     ewma = jnp.where(tenants.active, ewma, 0.0)
     tenants = tenants._replace(a_miss=ewma)
 
+    # ---- per-(tenant, tier, clamped count) candidate histograms --------------
+    # ONE P-element scatter; everything below — holdings, candidate totals,
+    # rebalance pair counts, victim cutoffs — reads off these two tables and
+    # their prefix sums.
+    is_owned = pages.owner >= 0
+    owner = jnp.maximum(pages.owner, 0)
+    slow_cand = is_owned & is_slow
+    fast_cand = is_owned & is_fast
+    key = jnp.minimum(eff.astype(jnp.int32), C - 1)
+    flat = jnp.where(
+        slow_cand,
+        owner * C + key,
+        jnp.where(fast_cand, T * C + owner * C + key, 2 * T * C),
+    )
+    hist2 = jnp.zeros((2 * T * C + 1,), jnp.int32).at[flat].add(1, mode="drop")
+    hist_slow = hist2[: T * C].reshape(T, C)
+    hist_fast = hist2[T * C : 2 * T * C].reshape(T, C)
+    cum_slow = jnp.cumsum(hist_slow, axis=1)  # [T,C] candidates with count <= c
+    cum_fast = jnp.cumsum(hist_fast, axis=1)
+    n_slow_cand = cum_slow[:, -1]  # == per-tenant slow-page holdings
+    n_fast_cand = cum_fast[:, -1]  # == per-tenant fast-page holdings
+
     # ---- 3. proportional reallocation (budget R/2) ---------------------------
-    fast_pages, slow_pages = _per_tenant_pages(pages, T)
-    free_fast = params.fast_capacity - fast_pages.sum()
+    free_fast = params.fast_capacity - n_fast_cand.sum()
     realloc_budget = params.migration_budget // 2
     ra = fmmr.reallocate(
-        tenants, fast_pages, free_fast, realloc_budget,
+        tenants, n_fast_cand, free_fast, realloc_budget,
         fair_mode=params.fair_mode, hysteresis=params.hysteresis,
     )
     tenants = tenants._replace(flagged=ra.flagged)
@@ -101,111 +262,101 @@ def policy_epoch(
     ra = ra._replace(give=give2, take=take2)
 
     # ---- 4. intra-tenant rebalance (budget R/2; each pair = 2 moves) ---------
-    eff = bins.effective_count(pages, tenants).astype(jnp.int32)  # [P]
     n_active = jnp.maximum(tenants.active.sum(), 1)
     rebal_share = (params.migration_budget - realloc_budget) // (2 * n_active)
-
-    is_owned = pages.owner >= 0
-    owner = jnp.maximum(pages.owner, 0)
-    slow_cand = is_owned & (pages.tier == TIER_SLOW)
-    fast_cand = is_owned & (pages.tier == TIER_FAST)
-
-    # per-tenant rank by heat: composite sort key (tenant-major), then rank
-    # within the (tenant, tier) segment. hot ranks: descending count.
-    def _ranks(cand, descending):
-        sign = -1 if descending else 1
-        t_key = jnp.where(cand, owner, T).astype(jnp.int32)
-        count_key = sign * jnp.where(cand, eff, 0).astype(jnp.int32)
-        # lexsort: last key is primary -> grouped by tenant, heat-ordered within
-        order = jnp.lexsort((count_key, t_key))
-        sorted_t = t_key[order]
-        idx = jnp.arange(P, dtype=jnp.int32)
-        first = (
-            jnp.full((T + 1,), jnp.iinfo(jnp.int32).max, jnp.int32)
-            .at[sorted_t]
-            .min(idx, mode="drop")
-        )
-        rank_sorted = idx - first[sorted_t]
-        rank = jnp.full((P,), jnp.iinfo(jnp.int32).max, jnp.int32).at[order].set(rank_sorted)
-        return jnp.where(cand, rank, jnp.iinfo(jnp.int32).max)
-
-    hot_rank = _ranks(slow_cand, descending=True)  # 0 = hottest slow page
-    cold_rank = _ranks(fast_cand, descending=False)  # 0 = coldest fast page
-
-    # rebalance pair count n_t: compare i-th hottest slow vs i-th coldest fast
-    def _sorted_counts(rank, cand, descending):
-        vals = jnp.full((T, min(P, 4096)), -1, jnp.int32)
-        # gather counts by (tenant, rank) for rank < window
-        window = vals.shape[1]
-        ok = cand & (rank < window)
-        flat = jnp.where(ok, owner * window + rank, T * window)
-        out = jnp.full((T * window + 1,), -1, jnp.int32).at[flat].max(
-            jnp.where(ok, eff, -1), mode="drop"
-        )
-        return out[:-1].reshape(T, window)
-
-    W = min(P, 4096)
-    rebal_share = jnp.minimum(rebal_share, W)
-    hot_counts = _sorted_counts(hot_rank, slow_cand, True)  # [T, W] desc
-    cold_counts = _sorted_counts(cold_rank, fast_cand, False)  # [T, W] asc
 
     # Reallocation consumes the first `give` hottest-slow / `take` coldest-fast
     # victims; the i-th REBALANCE pair is (hot[give+i], cold[take+i]). Pairs
     # must fit the remaining candidates on BOTH sides so promote/demote stay
-    # 1:1 per tenant (capacity invariant).
-    n_slow_cand = jnp.zeros((T + 1,), jnp.int32).at[owner_c].add(slow_cand)[:-1]
-    n_fast_cand = jnp.zeros((T + 1,), jnp.int32).at[owner_c].add(fast_cand)[:-1]
+    # 1:1 per tenant (capacity invariant) — _pair_count enforces this.
     give_eff = jnp.minimum(ra.give, n_slow_cand)
     take_eff = jnp.minimum(ra.take, n_fast_cand)
-    max_pairs = jnp.clip(
-        jnp.minimum(n_fast_cand - take_eff, n_slow_cand - give_eff), 0, rebal_share
-    )
-    i_idx = jnp.arange(W, dtype=jnp.int32)
-    hot_i = jnp.take_along_axis(
-        hot_counts, jnp.minimum(give_eff[:, None] + i_idx[None, :], W - 1), axis=1
-    )
-    cold_i = jnp.take_along_axis(
-        cold_counts, jnp.minimum(take_eff[:, None] + i_idx[None, :], W - 1), axis=1
-    )
-    improves = (
-        (hot_i > cold_i)
-        & (hot_i >= 0)
-        & (cold_i >= 0)
-        & (i_idx[None, :] < max_pairs[:, None])
-    )
-    n_rebal = improves.sum(axis=1).astype(jnp.int32)  # [T]
+    n_rebal = _pair_count(cum_slow, cum_fast, give_eff, take_eff, rebal_share)
     n_rebal = jnp.where(tenants.active, n_rebal, 0)
 
-    # ---- 5. quotas -> plan ----------------------------------------------------
+    # ---- 5. quotas -> victim masks -> plan -----------------------------------
     promote_quota = give_eff + n_rebal  # <= n_slow_cand by construction
     demote_quota = take_eff + n_rebal  # <= n_fast_cand by construction
 
-    promote_mask = slow_cand & (hot_rank < promote_quota[owner])
-    demote_mask = fast_cand & (cold_rank < demote_quota[owner])
+    promote_mask, demote_mask = _select_victims(
+        key, owner, slow_cand, fast_cand, hist_slow, hist_fast,
+        cum_slow, cum_fast, promote_quota, demote_quota, oh,
+    )
 
-    promote_ids = jnp.nonzero(promote_mask, size=plan_size, fill_value=-1)[0].astype(jnp.int32)
-    demote_ids = jnp.nonzero(demote_mask, size=plan_size, fill_value=-1)[0].astype(jnp.int32)
-    plan = MigrationPlan(promote=promote_ids, demote=demote_ids)
+    plan = None
+    if collect_plan:
+        # both id lists from one P-element scatter (positions are disjoint)
+        if P < 65536:
+            # selection totals are < 2^16: one packed position prefix sum
+            packed = promote_mask.astype(jnp.uint32) + (
+                demote_mask.astype(jnp.uint32) << 16
+            )
+            cum = jnp.cumsum(packed, dtype=jnp.uint32)
+            pos_p = (cum & 0xFFFF).astype(jnp.int32) - 1
+            pos_d = (cum >> 16).astype(jnp.int32) - 1
+        else:
+            pos_p = jnp.cumsum(promote_mask) - 1
+            pos_d = jnp.cumsum(demote_mask) - 1
+        idx = jnp.where(
+            promote_mask & (pos_p < plan_size),
+            pos_p,
+            jnp.where(demote_mask & (pos_d < plan_size), plan_size + pos_d, 2 * plan_size),
+        )
+        ids = (
+            jnp.full((2 * plan_size + 1,), -1, jnp.int32)
+            .at[idx]
+            .set(jnp.arange(P, dtype=jnp.int32), mode="drop")
+        )
+        plan = MigrationPlan(promote=ids[:plan_size], demote=ids[plan_size : 2 * plan_size])
 
     # ---- stats ---------------------------------------------------------------
-    promoted = jnp.zeros((T + 1,), jnp.int32).at[owner_c].add(promote_mask)[:-1]
-    demoted = jnp.zeros((T + 1,), jnp.int32).at[owner_c].add(demote_mask)[:-1]
+    # selection takes exactly min(quota, candidates) pages per tenant, so the
+    # per-tenant promoted/demoted telemetry needs no extra reduction.
+    promoted = jnp.minimum(promote_quota, n_slow_cand)
+    demoted = jnp.minimum(demote_quota, n_fast_cand)
     stats = EpochStats(
         fmmr_now=now,
         fmmr_ewma=ewma,
-        fast_pages=fast_pages,
-        slow_pages=slow_pages,
+        fast_pages=n_fast_cand,
+        slow_pages=n_slow_cand,
         promoted=promoted,
         demoted=demoted,
         cooled=cooled,
     )
+    return pages, tenants, promote_mask, demote_mask, plan, stats
+
+
+def _apply_masks(pages: PageState, promote_mask, demote_mask) -> PageState:
+    """Metadata migration via the victim masks — one fused elementwise pass."""
+    tier = jnp.where(
+        promote_mask,
+        jnp.int8(TIER_FAST),
+        jnp.where(demote_mask, jnp.int8(TIER_SLOW), pages.tier),
+    )
+    return pages._replace(tier=tier)
+
+
+@partial(jax.jit, static_argnames=("max_tenants", "plan_size", "count_clamp"))
+def policy_epoch(
+    pages: PageState,
+    tenants: TenantState,
+    sampled: jax.Array,  # u32[P] sampled accesses this epoch (PEBS analogue)
+    params: PolicyParams,
+    *,
+    max_tenants: int,
+    plan_size: int,
+    count_clamp: int = COUNT_CLAMP,
+):
+    """Returns (pages', tenants', MigrationPlan, EpochStats). Tiers in
+    ``pages'`` are pre-migration; use :func:`apply_plan` to commit the plan."""
+    pages, tenants, _pm, _dm, plan, stats = _epoch_core(
+        pages, tenants, sampled, params, max_tenants, plan_size, count_clamp,
+        collect_plan=True,
+    )
     return pages, tenants, plan, stats
 
 
-@jax.jit
-def apply_plan(pages: PageState, plan: MigrationPlan) -> PageState:
-    """Execute a migration plan on the metadata (data movement is the
-    caller's job — pools + Pallas page_copy kernel, or DMA on real HW)."""
+def _apply_plan_core(pages: PageState, plan: MigrationPlan) -> PageState:
     P = pages.tier.shape[0]
     # -1 padding would wrap to P-1: remap to P so mode="drop" discards it
     promote = jnp.where(plan.promote >= 0, plan.promote, P)
@@ -214,3 +365,162 @@ def apply_plan(pages: PageState, plan: MigrationPlan) -> PageState:
     tier = tier.at[promote].set(jnp.int8(TIER_FAST), mode="drop")
     tier = tier.at[demote].set(jnp.int8(TIER_SLOW), mode="drop")
     return pages._replace(tier=tier)
+
+
+@jax.jit
+def apply_plan(pages: PageState, plan: MigrationPlan) -> PageState:
+    """Execute a migration plan on the metadata (data movement is the
+    caller's job — pools + Pallas page_copy kernel, or DMA on real HW)."""
+    return _apply_plan_core(pages, plan)
+
+
+def _epoch_step_impl(
+    state: PolicyState,
+    params: PolicyParams,
+    *,
+    max_tenants: int,
+    plan_size: int,
+    exact_sampling: bool,
+    count_clamp: int,
+):
+    rng, sub = jax.random.split(state.rng)
+    sampled = sample_accesses(sub, state.pending, params.sample_period, exact=exact_sampling)
+    pages, tenants, pm, dm, plan, stats = _epoch_core(
+        state.pages, state.tenants, sampled, params, max_tenants, plan_size,
+        count_clamp, collect_plan=True,
+    )
+    pages = _apply_masks(pages, pm, dm)
+    new_state = PolicyState(
+        pages=pages, tenants=tenants,
+        pending=jnp.zeros_like(state.pending), rng=rng,
+    )
+    return new_state, plan, stats
+
+
+@lru_cache(maxsize=None)
+def _jitted_epoch_step(donate: bool):
+    return jax.jit(
+        _epoch_step_impl,
+        static_argnames=("max_tenants", "plan_size", "exact_sampling", "count_clamp"),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+def epoch_step(
+    state: PolicyState,
+    params: PolicyParams,
+    *,
+    max_tenants: int,
+    plan_size: int,
+    exact_sampling: bool = False,
+    count_clamp: int = COUNT_CLAMP,
+):
+    """Fused policy tick: sample -> policy -> migrate, one dispatch.
+
+    Consumes ``state.pending`` (the access backlog) and the PRNG key carried
+    in the state; returns (state', plan, stats) with ``pending`` zeroed and
+    the migration already applied to the metadata. The state buffers are
+    donated on accelerator backends — do not reuse the argument there.
+    """
+    return _jitted_epoch_step(_donate_state())(
+        state, params, max_tenants=max_tenants, plan_size=plan_size,
+        exact_sampling=exact_sampling, count_clamp=count_clamp,
+    )
+
+
+def _multi_epoch_impl(
+    state: PolicyState,
+    params: PolicyParams,
+    counts: Optional[jax.Array],
+    *,
+    k: int,
+    max_tenants: int,
+    plan_size: int,
+    exact_sampling: bool,
+    count_clamp: int,
+    collect_plans: bool,
+):
+    P = state.pending.shape[0]
+    per_epoch = None
+    xs_counts = None
+    if counts is not None:
+        counts = jnp.asarray(counts, jnp.uint32)
+        if counts.ndim == 1:
+            per_epoch = counts
+        else:
+            xs_counts = counts  # [k, P]
+
+    # Pre-draw all sampling noise in one batched call (the per-epoch PRNG
+    # split chain still advances identically to k epoch_step calls, so the
+    # exact-sampling path is bit-identical to single-stepping).
+    xs_z = None
+    if not exact_sampling:
+        xs_z = jax.random.normal(jax.random.fold_in(state.rng, 0x5A), (k, P), jnp.float32)
+
+    def step(st: PolicyState, x):
+        x_counts, z = x
+        pending = st.pending
+        if per_epoch is not None:
+            pending = pending + per_epoch
+        if x_counts is not None:
+            pending = pending + x_counts
+        rng, sub = jax.random.split(st.rng)
+        sampled = sample_accesses(
+            sub, pending, params.sample_period, exact=exact_sampling, z=z
+        )
+        pages, tenants, pm, dm, plan, stats = _epoch_core(
+            st.pages, st.tenants, sampled, params, max_tenants, plan_size,
+            count_clamp, collect_plan=collect_plans,
+        )
+        pages = _apply_masks(pages, pm, dm)
+        st2 = PolicyState(
+            pages=pages, tenants=tenants,
+            pending=jnp.zeros_like(pending), rng=rng,
+        )
+        return st2, (plan, stats, tenants.flagged)
+
+    state, (plans, stats, flagged) = jax.lax.scan(step, state, (xs_counts, xs_z), length=k)
+    return state, plans, stats, flagged
+
+
+@lru_cache(maxsize=None)
+def _jitted_multi_epoch(donate: bool):
+    return jax.jit(
+        _multi_epoch_impl,
+        static_argnames=(
+            "k", "max_tenants", "plan_size", "exact_sampling", "count_clamp",
+            "collect_plans",
+        ),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+def multi_epoch(
+    state: PolicyState,
+    params: PolicyParams,
+    counts: Optional[jax.Array] = None,
+    *,
+    k: int,
+    max_tenants: int,
+    plan_size: int,
+    exact_sampling: bool = False,
+    count_clamp: int = COUNT_CLAMP,
+    collect_plans: bool = True,
+):
+    """Scan the fused epoch across ``k`` epochs in ONE dispatch.
+
+    ``counts`` feeds the access stream: ``None`` consumes the backlog already
+    in ``state.pending`` (epoch 1) and runs the rest idle; ``[P]`` replays the
+    same exact counts every epoch (steady-state workload); ``[k, P]`` gives
+    each epoch its own counts. Returns (state', plans, stats, flagged) with
+    every per-epoch output stacked on a leading k axis; ``plans`` is None
+    when ``collect_plans=False`` (metadata-only simulation — the per-tenant
+    promoted/demoted telemetry in ``stats`` is still exact). The state
+    buffers are donated on accelerator backends — do not reuse the argument
+    there.
+    """
+    return _jitted_multi_epoch(_donate_state())(
+        state, params, counts, k=k, max_tenants=max_tenants, plan_size=plan_size,
+        exact_sampling=exact_sampling, count_clamp=count_clamp,
+        collect_plans=collect_plans,
+    )

@@ -16,17 +16,33 @@ import jax.numpy as jnp
 def sample_accesses(
     rng: jax.Array,
     counts: jax.Array,  # u32[P] exact accesses this epoch
-    sample_period: int,
+    sample_period,  # int or traced i32 scalar (PolicyParams.sample_period)
     *,
     exact: bool = False,
+    z: jax.Array = None,  # optional pre-drawn f32[P] standard normals
 ) -> jax.Array:
-    """Returns u32[P] sampled access counts."""
-    if exact or sample_period <= 1:
+    """Returns u32[P] sampled access counts.
+
+    ``sample_period`` may be a traced scalar so the whole epoch (including
+    sampling) can live inside one jitted/scanned program; only ``exact`` must
+    be static. Callers scanning many epochs can pre-draw all normals in one
+    batched call and pass rows via ``z`` (``rng`` is then unused).
+    """
+    if exact:
         return counts.astype(jnp.uint32)
-    p = 1.0 / float(sample_period)
+    period = jnp.asarray(sample_period, jnp.float32)
+    p = 1.0 / jnp.maximum(period, 1.0)
     n = counts.astype(jnp.float32)
-    # Binomial(n, p) ~ Normal(np, np(1-p)) for large n; exact Bernoulli sum is
-    # wasteful under jit. Poisson(np) is the standard PEBS model; clamp at n.
+    # Poisson(np) is the standard PEBS model. jax.random.poisson is a
+    # rejection sampler (20x the cost of the whole policy epoch on CPU), so
+    # draw Normal(np, np) rounded and clamped to [0, n] instead: identical
+    # mean/variance, and FMMR only consumes per-tenant aggregates of
+    # thousands of pages where the CLT washes out the per-page shape.
     lam = n * p
-    draw = jax.random.poisson(rng, lam, dtype=jnp.int32).astype(jnp.float32)
-    return jnp.minimum(draw, n).astype(jnp.uint32)
+    if z is None:
+        z = jax.random.normal(rng, lam.shape, jnp.float32)
+    draw = jnp.round(lam + jnp.sqrt(lam) * z)
+    sampled = jnp.clip(draw, 0.0, n).astype(jnp.uint32)
+    # period <= 1 means "no subsampling": return the exact integer counts
+    # (not the f32 round-trip, which loses counts above 2^24)
+    return jnp.where(period <= 1.0, counts.astype(jnp.uint32), sampled)

@@ -119,7 +119,18 @@ class EpochRecord:
 
 
 class ColocationSim:
-    """Closed-loop multi-tenant simulation against a placement backend."""
+    """Closed-loop multi-tenant simulation against a placement backend.
+
+    The cost model is vectorized over a tenant axis (prob-matrix [n, P]):
+    miss ratios, the 4-iteration latency fixed point and the access-count
+    scatter are single array expressions, so simulator overhead stays flat
+    as tenants are added. With ``policy_chunk > 1`` and a backend exposing
+    ``run_epochs`` (CentralManager), steady-state stretches run k policy
+    epochs per device dispatch via the ``lax.scan`` fast path; chunked
+    epochs approximate intermediate miss ratios with the backend's sampled
+    FMMR telemetry and do not model migration stalls (chunk boundaries
+    always re-measure exactly).
+    """
 
     def __init__(
         self,
@@ -128,6 +139,7 @@ class ColocationSim:
         epoch_seconds: float = 1.0,
         seed: int = 0,
         access_noise: bool = True,
+        policy_chunk: int = 1,
     ):
         self.backend = backend
         self.machine = machine
@@ -137,6 +149,7 @@ class ColocationSim:
         self.handles: Dict[str, int] = {}
         self.history: List[EpochRecord] = []
         self.access_noise = access_noise
+        self.policy_chunk = policy_chunk
         self._stall_epochs = 0.0
 
     # ----------------------------------------------------------- lifecycle
@@ -160,77 +173,121 @@ class ColocationSim:
         )
 
     # ----------------------------------------------------------- cost model
+    def _arrays(self):
+        """(names, prob_matrix [n,P], page_mask [n,P], threads [n], bpo [n]).
+
+        Rebuilt per epoch (cheap at simulator scale) so hot-set resizes and
+        tenant churn are always reflected."""
+        names = list(self.tenants)
+        P = self.backend.num_pages
+        n = len(names)
+        M = np.zeros((n, P))
+        page_mask = np.zeros((n, P), bool)
+        threads = np.empty(n)
+        bpo = np.empty(n)
+        for i, nm in enumerate(names):
+            t = self.tenants[nm]
+            M[i, t.page_ids] = t.probs
+            page_mask[i, t.page_ids] = True
+            threads[i] = t.spec.threads
+            bpo[i] = max(t.spec.value_bytes, self.machine.access_bytes)
+        return names, M, page_mask, threads, bpo
+
     def _latencies(
-        self, misses: Dict[str, float], migration_bytes: float
-    ) -> Tuple[Dict[str, float], Dict[str, float]]:
-        """Fixed-point closed-loop: returns (avg_latency_s, slow_op_lat_s).
+        self, miss: np.ndarray, migration_bytes: float, threads: np.ndarray, bpo: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fixed-point closed-loop: returns (avg_latency_s [n], slow_op_lat_s [n]).
 
         Per-op latency = tier latency + value transfer at the tier's
-        (contention-scaled) bandwidth; bandwidth contention couples tenants."""
+        (contention-scaled) bandwidth; bandwidth contention couples tenants
+        through the demand sums, so the iteration runs on whole arrays."""
         m = self.machine
         lat_f = m.fast.latency_ns * 1e-9
         lat_s0 = m.slow.latency_ns * 1e-9
         slow_cap = m.slow.bandwidth_GBps * 1e9
         fast_cap = m.fast.bandwidth_GBps * 1e9
 
-        def op_lat(ms, bytes_per_op, sf=1.0, ss=1.0):
-            f = lat_f + bytes_per_op / (fast_cap / sf)
-            s = lat_s0 * ss + bytes_per_op / (slow_cap / ss)
-            return f * (1 - ms) + s * ms, s
+        def op_lat(sf=1.0, ss=1.0):
+            f = lat_f + bpo / (fast_cap / sf)
+            s = lat_s0 * ss + bpo / (slow_cap / ss)
+            return f * (1.0 - miss) + s * miss, s
 
-        lat = {}
-        slow_op = {}
-        for n, t in self.tenants.items():
-            lat[n], slow_op[n] = op_lat(misses[n], max(t.spec.value_bytes, m.access_bytes))
+        lat, slow_op = op_lat()
         for _ in range(4):
-            demand_slow = migration_bytes / self.epoch_s
-            demand_fast = migration_bytes / self.epoch_s
-            for n, t in self.tenants.items():
-                tput = t.spec.threads / lat[n]
-                bytes_per_op = max(t.spec.value_bytes, m.access_bytes)
-                demand_slow += tput * misses[n] * bytes_per_op
-                demand_fast += tput * (1 - misses[n]) * bytes_per_op
+            tput = threads / lat
+            demand_slow = migration_bytes / self.epoch_s + (tput * miss * bpo).sum()
+            demand_fast = migration_bytes / self.epoch_s + (tput * (1.0 - miss) * bpo).sum()
             scale_s = max(1.0, demand_slow / slow_cap)
             scale_f = max(1.0, demand_fast / fast_cap)
-            for n, t in self.tenants.items():
-                lat[n], slow_op[n] = op_lat(
-                    misses[n], max(t.spec.value_bytes, m.access_bytes),
-                    scale_f, scale_s,
-                )
+            lat, slow_op = op_lat(scale_f, scale_s)
         return lat, slow_op
 
     @staticmethod
     def _mixture_quantile(q: float, miss: float, lat_fast: float, lat_slow: float) -> float:
         return lat_slow if miss > (1.0 - q) else lat_fast
 
+    def _sample_counts(self, M: np.ndarray, ops: np.ndarray) -> np.ndarray:
+        """i64[P] access counts reported to the backend this epoch."""
+        expect = M * ops[:, None]
+        if self.access_noise:
+            drawn = self.rng.poisson(np.maximum(expect, 0))
+        else:
+            drawn = expect
+        return drawn.astype(np.int64).sum(axis=0)
+
+    def _record(
+        self, names, miss, tput, measured, fast_pages, mig_frac, fast_op, slow_op,
+        migrated, stalled,
+    ) -> EpochRecord:
+        """Assemble the per-epoch telemetry dicts from the tenant-axis arrays."""
+        quant = {}
+        for qq in (0.50, 0.90, 0.99):
+            quant[qq] = {
+                nm: self._mixture_quantile(qq, miss[i] + mig_frac, fast_op[i], slow_op[i])
+                for i, nm in enumerate(names)
+            }
+        rec = EpochRecord(
+            epoch=len(self.history),
+            throughput={nm: float(tput[i]) for i, nm in enumerate(names)},
+            fmmr_true={nm: float(miss[i]) for i, nm in enumerate(names)},
+            fmmr_measured={nm: float(measured[i]) for i, nm in enumerate(names)},
+            fast_pages={nm: int(fast_pages[i]) for i, nm in enumerate(names)},
+            p50=quant[0.50],
+            p90=quant[0.90],
+            p99=quant[0.99],
+            migrated_pages=int(migrated),
+            stalled=stalled,
+        )
+        self.history.append(rec)
+        return rec
+
+    def _measured_fmmr(self, names) -> np.ndarray:
+        backend = self.backend
+        if hasattr(backend, "tenants") and hasattr(backend.tenants, "a_miss"):
+            a_miss = np.asarray(backend.tenants.a_miss)  # one batched transfer
+            return np.array([a_miss[self.handles[nm]] for nm in names])
+        if hasattr(backend, "fmmr_of"):
+            return np.array([backend.fmmr_of(self.handles[nm]) for nm in names])
+        return np.zeros(len(names))
+
     # ----------------------------------------------------------- epoch
     def run_epoch(self) -> EpochRecord:
         m = self.machine
-        tier = np.asarray(self.backend.pages.tier)
-        misses = {n: t.miss_ratio(tier) for n, t in self.tenants.items()}
+        names, M, page_mask, threads, bpo = self._arrays()
+        tier = np.asarray(self.backend.tiers())
+        miss = (M * (tier == TIER_SLOW)[None, :]).sum(axis=1)
 
         # migration traffic of the PREVIOUS epoch's plan affects this epoch's
         # latency; simpler: compute after policy and charge within this epoch.
-        lat, _slow0 = self._latencies(misses, migration_bytes=0.0)
-        ops = {
-            n: t.spec.threads / lat[n] * self.epoch_s for n, t in self.tenants.items()
-        }
-
-        # report accesses
-        counts = np.zeros(self.backend.num_pages, np.int64)
-        for n, t in self.tenants.items():
-            expect = t.probs * ops[n]
-            if self.access_noise:
-                expect = self.rng.poisson(np.maximum(expect, 0))
-            counts[t.page_ids] += expect.astype(np.int64)
-        self.backend.record_access(counts)
+        lat, _slow0 = self._latencies(miss, 0.0, threads, bpo)
+        ops = threads / lat * self.epoch_s
+        self.backend.record_access(self._sample_counts(M, ops))
 
         # policy tick (may be stalled by over-requested migration, Fig. 9)
         stalled = self._stall_epochs >= 1.0
         migrated = 0
         if stalled:
             self._stall_epochs -= 1.0
-            result = None
         else:
             result = self.backend.run_epoch()
             migrated = int(result.plan.num_promote) + int(result.plan.num_demote)
@@ -241,48 +298,63 @@ class ColocationSim:
 
         # recompute latency including migration interference
         mig_bytes = migrated * m.page_bytes
-        lat, slow_op = self._latencies(misses, migration_bytes=mig_bytes)
-
-        def fast_op(n):
-            b = max(self.tenants[n].spec.value_bytes, m.access_bytes)
-            return m.fast.latency_ns * 1e-9 + b / (m.fast.bandwidth_GBps * 1e9)
+        lat, slow_op = self._latencies(miss, mig_bytes, threads, bpo)
+        fast_op = m.fast.latency_ns * 1e-9 + bpo / (m.fast.bandwidth_GBps * 1e9)
         # write-protect stall term: fraction of accesses landing on in-flight
         # pages pay the slow-tier copy latency
         mig_frac = min(mig_bytes / max(m.page_bytes, 1) / max(self.backend.num_pages, 1), 1.0)
 
-        tput = {n: t.spec.threads / lat[n] for n, t in self.tenants.items()}
-        measured = {}
-        for n in self.tenants:
-            h = self.handles[n]
-            measured[n] = (
-                float(self.backend.fmmr_of(h)) if hasattr(self.backend, "fmmr_of") else misses[n]
-            )
-        fast_pages = {
-            n: int(
-                (
-                    (np.asarray(self.backend.pages.owner)[self.tenants[n].page_ids] >= 0)
-                    & (np.asarray(self.backend.pages.tier)[self.tenants[n].page_ids] == TIER_FAST)
-                ).sum()
-            )
-            for n in self.tenants
-        }
-        q = lambda qq, n: self._mixture_quantile(
-            qq, misses[n] + mig_frac, fast_op(n), slow_op[n]
+        tput = threads / lat
+        measured = self._measured_fmmr(names)
+        tier = np.asarray(self.backend.tiers())
+        owner = np.asarray(self.backend.owners())
+        fast_pages = (page_mask & (owner >= 0)[None, :] & (tier == TIER_FAST)[None, :]).sum(axis=1)
+        return self._record(
+            names, miss, tput, measured, fast_pages, mig_frac, fast_op, slow_op,
+            migrated, stalled,
         )
-        rec = EpochRecord(
-            epoch=len(self.history),
-            throughput=tput,
-            fmmr_true=misses,
-            fmmr_measured=measured,
-            fast_pages=fast_pages,
-            p50={n: q(0.50, n) for n in self.tenants},
-            p90={n: q(0.90, n) for n in self.tenants},
-            p99={n: q(0.99, n) for n in self.tenants},
-            migrated_pages=migrated,
-            stalled=stalled,
-        )
-        self.history.append(rec)
-        return rec
+
+    def run_chunk(self, k: int) -> List[EpochRecord]:
+        """Run k epochs through the backend's fused ``lax.scan`` path.
+
+        The access distribution is frozen at the chunk entry (steady-state
+        assumption); intermediate miss ratios come from the backend's sampled
+        FMMR telemetry, the final epoch re-measures placement exactly.
+        Migration stalls are not modeled inside a chunk.
+        """
+        m = self.machine
+        names, M, page_mask, threads, bpo = self._arrays()
+        tier = np.asarray(self.backend.tiers())
+        miss0 = (M * (tier == TIER_SLOW)[None, :]).sum(axis=1)
+        lat, _ = self._latencies(miss0, 0.0, threads, bpo)
+        ops = threads / lat * self.epoch_s
+        res = self.backend.run_epochs(k, counts=self._sample_counts(M, ops))
+
+        handles = [self.handles[nm] for nm in names]
+        fmmr_now = np.asarray(res.stats.fmmr_now)[:, handles]  # [k, n]
+        # stats.fast_pages is the holding BEFORE that epoch's migration; add
+        # the epoch's own moves so chunked records match the single-step
+        # path's post-migration read (ownership is static within a chunk)
+        fastp = (
+            np.asarray(res.stats.fast_pages)
+            + np.asarray(res.stats.promoted)
+            - np.asarray(res.stats.demoted)
+        )[:, handles]
+        migrated = res.migrated_per_epoch
+        measured_k = np.asarray(res.stats.fmmr_ewma)[:, handles]
+        tier_end = np.asarray(self.backend.tiers())
+        miss_end = (M * (tier_end == TIER_SLOW)[None, :]).sum(axis=1)
+        fast_op = m.fast.latency_ns * 1e-9 + bpo / (m.fast.bandwidth_GBps * 1e9)
+        for i in range(k):
+            miss = miss_end if i == k - 1 else fmmr_now[i]
+            mig_bytes = migrated[i] * m.page_bytes
+            lat, slow_op = self._latencies(miss, mig_bytes, threads, bpo)
+            mig_frac = min(mig_bytes / max(m.page_bytes, 1) / max(self.backend.num_pages, 1), 1.0)
+            self._record(
+                names, miss, threads / lat, measured_k[i], fastp[i], mig_frac,
+                fast_op, slow_op, migrated[i], stalled=False,
+            )
+        return self.history[-k:]
 
     def run(
         self,
@@ -290,8 +362,24 @@ class ColocationSim:
         events: Optional[Dict[int, Callable[["ColocationSim"], None]]] = None,
     ) -> List[EpochRecord]:
         events = events or {}
-        for e in range(n_epochs):
-            if len(self.history) in events:
-                events[len(self.history)](self)
-            self.run_epoch()
+        end = len(self.history) + n_epochs
+        while len(self.history) < end:
+            cur = len(self.history)
+            if cur in events:
+                events[cur](self)
+            chunkable = (
+                self.policy_chunk > 1
+                and self.tenants
+                and hasattr(self.backend, "run_epochs")
+                and self._stall_epochs < 1.0
+            )
+            if chunkable:
+                horizon = min([e for e in events if e > cur], default=end)
+                k = min(self.policy_chunk, horizon - cur, end - cur)
+            else:
+                k = 1
+            if k > 1:
+                self.run_chunk(k)
+            else:
+                self.run_epoch()
         return self.history

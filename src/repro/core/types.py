@@ -76,6 +76,30 @@ class PageState(NamedTuple):
         )
 
 
+class PolicyState(NamedTuple):
+    """The complete on-device policy-engine state threaded through epochs.
+
+    Bundling pages + tenants + the un-sampled access backlog + the PRNG key
+    into one pytree lets ``policy.epoch_step`` / ``policy.multi_epoch`` run
+    the whole tick (sample -> bin -> FMMR -> realloc -> rebalance -> apply)
+    as a single dispatch with donated buffers — no host round-trips.
+    """
+
+    pages: "PageState"
+    tenants: "TenantState"
+    pending: jax.Array  # u32[P] accesses reported since the last epoch
+    rng: jax.Array  # PRNG key for the PEBS-analogue subsampling
+
+    @classmethod
+    def create(cls, num_pages: int, max_tenants: int, seed: int = 0) -> "PolicyState":
+        return cls(
+            pages=PageState.create(num_pages),
+            tenants=TenantState.create(max_tenants),
+            pending=jnp.zeros((num_pages,), jnp.uint32),
+            rng=jax.random.PRNGKey(seed),
+        )
+
+
 class MigrationPlan(NamedTuple):
     """Output of the policy step: bounded page-move lists.
 

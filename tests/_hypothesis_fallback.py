@@ -1,0 +1,84 @@
+"""Deterministic stand-in for ``hypothesis`` when the package is absent.
+
+The tier-1 suite must collect and run from a clean checkout (no dev extras
+installed). Property tests then run against a fixed-seed sweep of drawn
+examples instead of hypothesis' adaptive search — strictly weaker shrinking,
+same assertions. Install ``requirements-dev.txt`` to get the real engine.
+
+Only the strategy surface this repo uses is implemented:
+``st.integers``, ``st.floats``, ``st.lists``, ``st.sampled_from``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 20
+_MAX_FALLBACK_EXAMPLES = 25  # keep the no-deps suite fast
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda r: [elements.draw(r) for _ in range(r.randint(min_size, max_size))]
+        )
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        pool = list(seq)
+        return _Strategy(lambda r: pool[r.randrange(len(pool))])
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Records the example budget on the wrapped test (applied above @given)."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(
+                wrapper, "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", _DEFAULT_EXAMPLES),
+            )
+            rnd = random.Random(0xC0FFEE)
+            for _ in range(min(n, _MAX_FALLBACK_EXAMPLES)):
+                drawn = {k: s.draw(rnd) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in sig.parameters.values() if p.name not in strats]
+        )
+        return wrapper
+
+    return deco

@@ -1,8 +1,11 @@
 """CentralManager end-to-end: allocation semantics, dynamic QoS, invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # clean checkout: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import CentralManager, TIER_FAST, TIER_NONE, TIER_SLOW
 

@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # clean checkout: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import fmmr, policy
 from repro.core.types import (

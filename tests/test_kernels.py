@@ -6,8 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # clean checkout: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
@@ -114,6 +117,37 @@ class TestHotBins:
         cr, br = ref.hot_bins_ref(jnp.asarray(ids), jnp.asarray(cin), 6)
         assert (np.asarray(c) == np.asarray(cr)).all()
         assert (np.asarray(b) == np.asarray(br)).all()
+
+    def test_interpret_auto_selects_from_backend(self):
+        """interpret=None compiles on TPU and interprets elsewhere; the
+        result must be identical either way."""
+        from repro.kernels import hot_bins as hb
+
+        expect = jax.default_backend() != "tpu"
+        assert hb._default_interpret() == expect
+        rng = np.random.default_rng(0)
+        ids = jnp.asarray(rng.integers(-1, 130, 257), jnp.int32)
+        cin = jnp.asarray(rng.integers(0, 40, 130), jnp.int32)
+        c_auto, b_auto = hot_bins(ids, cin, tile=64, n_chunk=128)
+        c_exp, b_exp = hot_bins(ids, cin, tile=64, n_chunk=128, interpret=expect)
+        assert (np.asarray(c_auto) == np.asarray(c_exp)).all()
+        assert (np.asarray(b_auto) == np.asarray(b_exp)).all()
+
+    @pytest.mark.parametrize("N,P,tile", [(333, 130, 64), (1023, 777, 256), (65, 513, 512)])
+    def test_bincount_parity_non_multiple_of_tile(self, N, P, tile):
+        """Exact jnp.bincount parity where neither the page count nor the
+        sample count is a multiple of the kernel tiling (padding paths)."""
+        rng = np.random.default_rng(N * 31 + P)
+        ids = rng.integers(-1, P, N).astype(np.int32)
+        cin = rng.integers(0, 40, P).astype(np.int32)
+        c, b = hot_bins(jnp.asarray(ids), jnp.asarray(cin), tile=tile, n_chunk=128)
+        valid = jnp.asarray(ids[ids >= 0])
+        expect = jnp.asarray(cin) + jnp.bincount(valid, length=P).astype(jnp.int32)
+        assert (np.asarray(c) == np.asarray(expect)).all()
+        # fused bin ids: clip(floor(log2(count)) + 1, 0, num_bins-1)
+        ce = np.asarray(expect)
+        fl = np.where(ce > 0, np.floor(np.log2(np.maximum(ce, 1))).astype(np.int32), -1)
+        assert (np.asarray(b) == np.clip(fl + 1, 0, 5)).all()
 
     @settings(max_examples=20, deadline=None)
     @given(

@@ -144,3 +144,42 @@ def test_maxmem_vs_baselines_ls_qos():
     an = run(AutoNUMALike(num_pages=1024, fast_capacity=256))
     assert mm.fmmr_true["ls"] < an.fmmr_true["ls"]
     assert mm.p99["ls"] <= an.p99["ls"]
+
+
+def test_policy_chunk_scan_path_converges_like_single_stepping():
+    """policy_chunk > 1 drives the backend through the fused run_epochs scan
+    and still converges the hot set into fast memory."""
+    def scenario(chunk):
+        mgr = _maxmem(num_pages=512, fast=128, budget=64)
+        sim = ColocationSim(mgr, OPTANE, seed=11, policy_chunk=chunk)
+        spec = WorkloadSpec(
+            "gups", n_pages=448, t_miss=0.1, threads=4,
+            sets=((1 / 7, 0.6), (2 / 7, 0.3)),
+        )
+        sim.add_tenant(spec)
+        sim.run(40)
+        return sim
+
+    single = scenario(1)
+    chunked = scenario(8)
+    assert len(chunked.history) == 40
+    # both paths reach the same qualitative steady state (hot set resident)
+    assert chunked.history[-1].fmmr_true["gups"] < 0.45
+    assert abs(
+        chunked.history[-1].fmmr_true["gups"] - single.history[-1].fmmr_true["gups"]
+    ) < 0.15
+    # chunk boundaries and events still line up with the epoch counter
+    assert [r.epoch for r in chunked.history] == list(range(40))
+
+
+def test_policy_chunk_respects_events():
+    mgr = _maxmem(num_pages=512, fast=128, budget=64)
+    sim = ColocationSim(mgr, OPTANE, seed=12, policy_chunk=16)
+    sim.add_tenant(
+        WorkloadSpec("a", n_pages=256, t_miss=0.5, threads=2, sets=((0.25, 0.9),))
+    )
+    fired = []
+    events = {10: lambda s: fired.append(len(s.history))}
+    sim.run(20, events=events)
+    assert fired == [10]
+    assert len(sim.history) == 20
