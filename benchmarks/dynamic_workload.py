@@ -1,54 +1,89 @@
-"""Paper Fig. 8 — dynamically changing workload mix.
+"""Dynamic colocation scenarios on the scenario engine (paper Figs. 7-9).
 
-Timeline (scaled): FlexKVS (320 GB ws, 48 GB hot, t=0.1) + GapBS start
-together; warmup; GUPS (128 GB) starts at epoch 75; at epoch 140 FlexKVS's
-hot set grows 42 -> 74 GB-analogue. HeMem splits fast memory in 3 equal
-static partitions. Claims: MaxMem restores FlexKVS FMMR/throughput after the
-hot-set growth; the static partition cannot; end-of-run MaxMem throughput
-exceeds HeMem (~11% paper) and AutoNUMA (~38% paper).
+Three deliverables:
+
+* ``run()`` — the paper Fig. 8 timeline (FlexKVS + GapBS, late GUPS, hot-set
+  growth) rewritten as a declarative ``core.scenario.Scenario`` and executed
+  against MaxMem, HeMem-static and AutoNUMA. Claims: MaxMem restores FlexKVS
+  FMMR/throughput after the hot-set growth; the static partition cannot;
+  end-of-run MaxMem throughput exceeds HeMem (~11% paper) and AutoNUMA
+  (~38% paper).
+* ``scenarios_bench()`` — the scripted arrive/depart scenario at 256k pages
+  (the fused-engine scale) run by ALL FOUR policies, with per-phase
+  throughput/p99 curves; ``benchmarks/run.py`` writes it to
+  ``BENCH_scenarios.json``. The paper's qualitative ordering (MaxMem
+  steady-state aggregate throughput >= every baseline) is asserted into the
+  payload.
+* ``vectorization_bench()`` — per-epoch wall time of the vectorized
+  baselines against the frozen seed implementations at 64k pages
+  (``seed_baselines_frozen.py``; interleaved min-of-reps because CI hosts
+  are noisy). The seed's only true per-page Python loop is TwoLM's
+  resident-selection dict walk — that port carries the >= 20x bar; HeMem/
+  AutoNUMA were already mask-vectorized in the seed (their headroom is the
+  per-tenant O(P) mask passes, worth ~2x), so the suite ratio is reported
+  alongside.
+
+CLI: ``python benchmarks/dynamic_workload.py [--smoke]`` — ``--smoke`` runs
+the whole module at toy scale (~30 s budget, used by the CI scenarios job).
 """
 from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict
 
 import numpy as np
 
 from benchmarks.common import FAST_PAGES, Rows, make_autonuma, make_hemem, make_maxmem
+from repro.core.baselines import AutoNUMALike, HeMemStatic, TwoLM
+from repro.core.manager import CentralManager
+from repro.core.scenario import (
+    Arrive,
+    Depart,
+    ResizeWorkingSet,
+    Scenario,
+    ScenarioResult,
+)
 from repro.core.simulator import OPTANE, ColocationSim, WorkloadSpec
 
+# ----------------------------------------------------------- paper Fig. 8
 KVS_PAGES = 1280
 HOT0 = 168 / KVS_PAGES  # 42 GB-analogue
 HOT1 = 296 / KVS_PAGES  # 74 GB-analogue
 
 
-def _scenario(backend, seed=4):
-    sim = ColocationSim(backend, OPTANE, seed=seed)
-    sim.add_tenant(
-        WorkloadSpec("kvs", n_pages=KVS_PAGES, t_miss=0.1, threads=4,
-                     sets=((HOT0, 0.9),), value_bytes=16384)
-    )
-    sim.add_tenant(WorkloadSpec("gapbs", n_pages=512, t_miss=1.0, threads=8,
-                                sets=((0.2, 0.7),)))
-    events = {
-        75: lambda s: s.add_tenant(
-            WorkloadSpec("gups", n_pages=512, t_miss=1.0, threads=8)
+def fig8_scenario() -> Scenario:
+    """FlexKVS (320 GB ws, t=0.1) + GapBS from epoch 0; GUPS arrives at 75;
+    FlexKVS's hot set grows 42 -> 74 GB-analogue at 140."""
+    return Scenario(
+        name="fig8_dynamic_mix",
+        n_epochs=240,
+        events=(
+            Arrive(0, WorkloadSpec("kvs", n_pages=KVS_PAGES, t_miss=0.1, threads=4,
+                                   sets=((HOT0, 0.9),), value_bytes=16384)),
+            Arrive(0, WorkloadSpec("gapbs", n_pages=512, t_miss=1.0, threads=8,
+                                   sets=((0.2, 0.7),))),
+            Arrive(75, WorkloadSpec("gups", n_pages=512, t_miss=1.0, threads=8)),
+            ResizeWorkingSet(140, "kvs", 0, HOT1),
         ),
-        140: lambda s: s.tenants["kvs"].resize_set(0, HOT1),
-    }
-    sim.run(240, events)
-    return sim
+        description="paper Fig. 8 dynamically changing workload mix",
+    )
 
 
 def run() -> Rows:
     rows = Rows()
-    mm = _scenario(make_maxmem())
-    he = _scenario(make_hemem({0: FAST_PAGES // 3, 1: FAST_PAGES // 3,
-                               2: FAST_PAGES // 3}, threshold=4))
-    an = _scenario(make_autonuma())
+    sc = fig8_scenario()
 
-    def tput(sim, lo, hi):
-        return float(np.mean([r.throughput["kvs"] for r in sim.history[lo:hi]]))
+    def scenario(backend, seed=4) -> ScenarioResult:
+        return ColocationSim(backend, OPTANE, seed=seed).run_scenario(sc)
 
-    def fmmr(sim, e):
-        return sim.history[e].fmmr_true["kvs"]
+    mm = scenario(make_maxmem())
+    he = scenario(make_hemem({0: FAST_PAGES // 3, 1: FAST_PAGES // 3,
+                              2: FAST_PAGES // 3}, threshold=4))
+    an = scenario(make_autonuma())
+
+    def tput(res, lo, hi):
+        return float(np.mean([r.throughput["kvs"] for r in res.history[lo:hi]]))
 
     # phase A (pre-GUPS): MaxMem uses idle partition share, HeMem cannot
     rows.add("fig8_phaseA_tput", 0.0,
@@ -59,15 +94,221 @@ def run() -> Rows:
     rows.add("fig8_final_tput", 0.0,
              f"maxmem={t_mm:.0f};hemem={t_he:.0f};autonuma={t_an:.0f};"
              f"mm_over_he={t_mm / max(t_he, 1):.3f};mm_over_an={t_mm / max(t_an, 1):.3f}")
+    fmmr_end = lambda res: res.history[235].fmmr_true["kvs"]
     rows.add("fig8_claim_restores_after_growth", 0.0,
-             f"maxmem_fmmr_end={fmmr(mm, 235):.3f};hemem_fmmr_end={fmmr(he, 235):.3f};"
-             f"pass={fmmr(mm, 235) <= 0.15 and t_mm >= t_he}")
-    p99 = lambda sim: float(np.mean([r.p99["kvs"] for r in sim.history[220:240]])) * 1e6
+             f"maxmem_fmmr_end={fmmr_end(mm):.3f};hemem_fmmr_end={fmmr_end(he):.3f};"
+             f"pass={fmmr_end(mm) <= 0.15 and t_mm >= t_he}")
+    # same [220,240) window as fig8_final_tput (NOT the whole final phase,
+    # which would fold in the post-growth reconvergence transient)
+    p99 = lambda res: float(np.mean([r.p99["kvs"] for r in res.history[220:240]])) * 1e6
     rows.add("fig8_final_p99us", 0.0,
              f"maxmem={p99(mm):.1f};hemem={p99(he):.1f};autonuma={p99(an):.1f};"
              f"pass={p99(mm) <= p99(an)}")
     return rows
 
 
+# ------------------------------------------- 256k-page arrive/depart bench
+def colocation_scenario(n_pages: int, n_epochs: int) -> Scenario:
+    """The default scripted arrive/depart mix at engine scale.
+
+    Two latency-sensitive tenants whose hot sets together almost fill the
+    fast tier (so exact victim selection matters), plus a best-effort GUPS
+    tenant that arrives mid-run and departs again, and an LS hot-set growth
+    squeezing the headroom — the dynamics behind the paper's Fig. 7-9
+    ordering claims. Both LS targets are *reachable* (miss floor below
+    t_miss - hysteresis), so MaxMem converges both while static partitions
+    truncate the hot sets and tenant-blind policies churn."""
+    kvs = (3 * n_pages) // 8  # hot 0.18*kvs = 0.0675*P of F = 0.125*P
+    gap = n_pages // 4  # hot 0.20*gap = 0.0500*P
+    gups = (3 * n_pages) // 16
+    a, b, c = n_epochs // 4, n_epochs // 2, (5 * n_epochs) // 8
+    return Scenario(
+        name=f"colocation_dynamic_{n_pages // 1024}k",
+        n_epochs=n_epochs,
+        events=(
+            # kvs miss floor is ~0.10 (hot set resident, uniform tail slow);
+            # t=0.2 leaves it comfortably met AND outside the hysteresis
+            # band, so kvs donates its cold surplus to gapbs instead of
+            # sitting on the whole fast tier it grabbed at allocation
+            Arrive(0, WorkloadSpec("kvs", n_pages=kvs, t_miss=0.2, threads=4,
+                                   sets=((0.18, 0.9),))),
+            Arrive(0, WorkloadSpec("gapbs", n_pages=gap, t_miss=0.4, threads=8,
+                                   sets=((0.2, 0.7),))),
+            Arrive(a, WorkloadSpec("gups", n_pages=gups, t_miss=1.0, threads=8)),
+            ResizeWorkingSet(b, "kvs", 0, 0.21),
+            Depart(c, "gups"),
+        ),
+        description="arrive/depart + hot-set growth at fused-engine scale",
+    )
+
+
+def scenario_backends(n_pages: int, seed: int = 0) -> Dict[str, Callable]:
+    """All four policies on identical machine geometry (fast = P/8, the
+    paper's 128G/768G+128G ratio)."""
+    fast = n_pages // 8
+    # 12.5% of fast per epoch: half goes to reallocation, half to per-tenant
+    # rebalance pairs, so a hot set of ~half the fast tier converges within
+    # ~a quarter of the scenario (per-phase windows are ~n_epochs/8)
+    budget = max(fast // 8, 8)
+    # HeMem: equal static thirds (the paper's Fig. 8 configuration); the
+    # threshold separates the KVS hot set from cold data at this scale
+    parts = {0: fast // 3, 1: fast // 3, 2: fast // 3}
+    return {
+        "maxmem": lambda: CentralManager(
+            num_pages=n_pages, fast_capacity=fast, migration_budget=budget,
+            max_tenants=8, sample_period=100, seed=seed),
+        "hemem": lambda: HeMemStatic(
+            n_pages, fast, partitions=parts, hot_threshold=8,
+            migration_budget=budget, seed=seed),
+        "autonuma": lambda: AutoNUMALike(n_pages, fast, seed=seed),
+        "twolm": lambda: TwoLM(n_pages, fast, seed=seed),
+    }
+
+
+def run_scenario_all(
+    sc: Scenario, n_pages: int, seed: int = 4, policy_chunk: int = 8,
+) -> Dict[str, ScenarioResult]:
+    out = {}
+    for name, mk in scenario_backends(n_pages).items():
+        chunk = policy_chunk if name == "maxmem" else 1
+        sim = ColocationSim(mk(), OPTANE, seed=seed, policy_chunk=chunk)
+        t0 = time.time()
+        out[name] = sim.run_scenario(sc)
+        out[name].wall_s = time.time() - t0
+    return out
+
+
+def scenarios_bench(smoke: bool = False) -> dict:
+    """The BENCH_scenarios.json payload: per-phase throughput/p99 for all
+    four policies on the default scenario, plus the ordering check."""
+    n_pages = 4096 if smoke else 262144
+    n_epochs = 64 if smoke else 96
+    sc = colocation_scenario(n_pages, n_epochs)
+    results = run_scenario_all(sc, n_pages)
+    steady = {k: r.steady_state.agg_throughput for k, r in results.items()}
+    payload = {
+        "scenario": {
+            "name": sc.name, "n_pages": n_pages, "n_epochs": n_epochs,
+            "events": [type(e).__name__ + "@" + str(e.epoch) for e in sc.events],
+        },
+        "policies": {
+            k: {**r.to_jsonable(), "wall_s": round(r.wall_s, 2)}
+            for k, r in results.items()
+        },
+        "steady_state_agg_throughput": steady,
+        "maxmem_geq_all_baselines": bool(
+            all(steady["maxmem"] >= v for k, v in steady.items() if k != "maxmem")
+        ),
+    }
+    if not smoke:
+        vec = vectorization_bench()
+        # The seed's only true per-page Python loop is TwoLM's resident
+        # dict walk — that port carries the >= 20x-per-epoch bar. HeMem and
+        # AutoNUMA were already mask-vectorized in the seed; their headroom
+        # (per-tenant O(P) passes) is worth ~2x, bounded below by the
+        # bit-parity RNG shuffle contract. Suite ratio reported alongside.
+        vec["per_page_loop_port"] = {
+            "policy": "twolm",
+            "speedup": vec["twolm"]["speedup"],
+            "meets_20x": bool(vec["twolm"]["speedup"] >= 20),
+        }
+        payload["baseline_vectorization_64k"] = vec
+    return payload
+
+
+# ------------------------------------- vectorized-vs-seed baseline timing
+def vectorization_bench(P: int = 65536, tenants: int = 12, reps: int = 9) -> dict:
+    """Per-epoch wall time, frozen seed implementations vs the vectorized
+    rewrites, at 64k pages with a scenario-representative tenant count.
+
+    Seed and vectorized epochs are timed back-to-back within each rep and
+    the speedup is the median of per-rep ratios — pairing in time cancels
+    noisy-neighbor drift on shared CI hosts; the reported epoch times are
+    the per-side minima."""
+    from benchmarks import seed_baselines_frozen as frozen
+    import repro.core.baselines as live
+
+    F = P // 4
+    rng = np.random.default_rng(0)
+    counts = np.where(rng.random(P) < 0.1, rng.poisson(30, P), 0).astype(np.int64)
+
+    def make(mod, name):
+        cls = {"hemem": mod.HeMemStatic, "autonuma": mod.AutoNUMALike,
+               "twolm": mod.TwoLM}[name]
+        kw = {"hot_threshold": 8, "migration_budget": 4096} if name == "hemem" else {}
+        b = cls(P, F, **kw)
+        for _ in range(tenants):
+            h = b.register(0.5)
+            if name == "hemem":
+                b.set_partition(h, F // tenants)
+            b.allocate(h, P // tenants - 8)
+        for _ in range(3):
+            b.record_access(counts)
+            b.run_epoch()
+        return b
+
+    def epoch_ms(b, n_epochs=3):
+        t0 = time.perf_counter()
+        for _ in range(n_epochs):
+            b.record_access(counts)
+            b.run_epoch()
+        return (time.perf_counter() - t0) / n_epochs * 1e3
+
+    names = ("hemem", "autonuma", "twolm")
+    backends = {(tag, n): make(mod, n)
+                for tag, mod in (("seed", frozen), ("new", live)) for n in names}
+    ratios = {n: [] for n in names}
+    suite_ratios = []
+    best = {k: float("inf") for k in backends}
+    for _ in range(reps):
+        seed_tot = new_tot = 0.0
+        for n in names:
+            s = epoch_ms(backends[("seed", n)])
+            v = epoch_ms(backends[("new", n)])
+            best[("seed", n)] = min(best[("seed", n)], s)
+            best[("new", n)] = min(best[("new", n)], v)
+            ratios[n].append(s / v)
+            seed_tot += s
+            new_tot += v
+        suite_ratios.append(seed_tot / new_tot)
+    out = {"pages": P, "tenants": tenants}
+    for n in names:
+        out[n] = {
+            "seed_epoch_ms": round(best[("seed", n)], 3),
+            "vectorized_epoch_ms": round(best[("new", n)], 3),
+            "speedup": round(float(np.median(ratios[n])), 1),
+        }
+    out["suite"] = {
+        "seed_epoch_ms": round(sum(best[("seed", n)] for n in names), 3),
+        "vectorized_epoch_ms": round(sum(best[("new", n)] for n in names), 3),
+        "speedup": round(float(np.median(suite_ratios)), 1),
+    }
+    return out
+
+
+def main(argv) -> int:
+    smoke = "--smoke" in argv
+    t0 = time.time()
+    payload = scenarios_bench(smoke=smoke)
+    steady = payload["steady_state_agg_throughput"]
+    for k, v in steady.items():
+        print(f"scenario_steady_tput_{k},0.000,{v:.0f}")
+    print(f"scenario_ordering,0.000,maxmem_geq_all={payload['maxmem_geq_all_baselines']}")
+    if not smoke:
+        vec = payload["baseline_vectorization_64k"]
+        for n in ("hemem", "autonuma", "twolm", "suite"):
+            print(f"baseline_vectorization_{n},0.000,"
+                  f"seed_ms={vec[n]['seed_epoch_ms']};new_ms={vec[n]['vectorized_epoch_ms']};"
+                  f"speedup={vec[n]['speedup']}")
+        rows = run()
+        rows.print()
+    print(f"dynamic_workload_wall,{(time.time() - t0) * 1e6:.0f},"
+          f"{'smoke' if smoke else 'full'}")
+    if not payload["maxmem_geq_all_baselines"]:
+        print("FAIL: MaxMem steady-state aggregate throughput below a baseline")
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    run().print()
+    sys.exit(main(sys.argv[1:]))

@@ -13,8 +13,11 @@ for the exact paper claim it reproduces):
   micro_*  host-side primitive timings
 
 Also writes ``BENCH_policy.json`` (policy-engine epochs/sec + per-epoch µs,
-single-step vs fused-scan, against the fixed seed baseline) so the perf
-trajectory is tracked across PRs.
+single-step vs fused-scan, against the fixed seed baseline) and
+``BENCH_scenarios.json`` (the 256k-page dynamic colocation scenario across
+all four policies: per-phase throughput/p99 curves, the paper's qualitative
+ordering check, and the vectorized-vs-seed baseline epoch timings) so the
+perf trajectory is tracked across PRs.
 """
 import json
 import sys
@@ -26,6 +29,14 @@ def write_policy_json(path: str = "BENCH_policy.json") -> None:
 
     with open(path, "w") as f:
         json.dump(microbench.policy_bench(), f, indent=2)
+    print(f"wrote {path}")
+
+
+def write_scenarios_json(path: str = "BENCH_scenarios.json", smoke: bool = False) -> None:
+    from benchmarks import dynamic_workload
+
+    with open(path, "w") as f:
+        json.dump(dynamic_workload.scenarios_bench(smoke=smoke), f, indent=2)
     print(f"wrote {path}")
 
 
@@ -67,6 +78,11 @@ def main() -> None:
     except Exception as e:
         failures += 1
         print(f"section_policy_json_FAILED,0,{e!r}")
+    try:
+        write_scenarios_json()
+    except Exception as e:
+        failures += 1
+        print(f"section_scenarios_json_FAILED,0,{e!r}")
     if failures:
         sys.exit(1)
 

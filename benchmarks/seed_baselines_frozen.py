@@ -1,0 +1,227 @@
+"""FROZEN seed baseline implementations (commit 42732d6) — reference only.
+
+Do NOT import these from product code. Two consumers:
+
+1. ``benchmarks/dynamic_workload.py`` times one epoch of these per-page/
+   per-tenant-mask loops against the vectorized ``repro.core.baselines``
+   rewrites at 64k pages (the ">= 20x per epoch" acceptance bar).
+2. ``tests/golden_regen.py`` replays small traces through them to produce
+   ``tests/golden/baseline_traces.json``, the parity lock the vectorized
+   implementations are tested against bit-for-bit.
+
+The algorithms and RNG draw sequence here are the contract: the vectorized
+rewrites must consume the generator identically (same shuffle calls on the
+same candidate arrays, in registration order) so placements stay identical.
+Keep this file byte-stable; regenerate the goldens only if it changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.types import TIER_FAST, TIER_NONE, TIER_SLOW
+
+
+@dataclasses.dataclass
+class _Pages:
+    owner: np.ndarray
+    tier: np.ndarray
+    count: np.ndarray
+
+
+class _BaselineBase:
+    def __init__(self, num_pages: int, fast_capacity: int, seed: int = 0):
+        self.num_pages = num_pages
+        self.fast_capacity = fast_capacity
+        self.pages = _Pages(
+            owner=np.full(num_pages, -1, np.int32),
+            tier=np.full(num_pages, TIER_NONE, np.int8),
+            count=np.zeros(num_pages, np.int64),
+        )
+        self._pending = np.zeros(num_pages, np.int64)
+        self._next = 0
+        self.rng = np.random.default_rng(seed)
+        self._ewma: Dict[int, float] = {}
+
+    # --- tenancy ------------------------------------------------------------
+    def register(self, t_miss: float) -> int:
+        h = self._next
+        self._next += 1
+        self._ewma[h] = 0.0
+        return h
+
+    def set_target(self, h: int, t_miss: float) -> None:
+        pass  # no QoS
+
+    def unregister(self, h: int) -> None:
+        mine = self.pages.owner == h
+        self.pages.owner[mine] = -1
+        self.pages.tier[mine] = TIER_NONE
+        self.pages.count[mine] = 0
+
+    def allocate(self, h: int, n_pages: int) -> np.ndarray:
+        free = np.flatnonzero(self.pages.tier == TIER_NONE)
+        if len(free) < n_pages:
+            raise MemoryError("out of tiered memory")
+        take = free[:n_pages]
+        fast_used = int((self.pages.tier == TIER_FAST).sum())
+        room = max(self._fast_room(h, fast_used), 0)
+        n_fast = min(room, n_pages)
+        self.pages.tier[take[:n_fast]] = TIER_FAST
+        self.pages.tier[take[n_fast:]] = TIER_SLOW
+        self.pages.owner[take] = h
+        return take
+
+    def free(self, h: int, ids: Sequence[int]) -> None:
+        ids = np.asarray(ids)
+        self.pages.owner[ids] = -1
+        self.pages.tier[ids] = TIER_NONE
+        self.pages.count[ids] = 0
+
+    def record_access(self, counts: np.ndarray) -> None:
+        self._pending += counts
+
+    # telemetry surface shared with CentralManager (simulator batch reads)
+    def tiers(self) -> np.ndarray:
+        return self.pages.tier
+
+    def owners(self) -> np.ndarray:
+        return self.pages.owner
+
+    def fmmr_of(self, h: int) -> float:
+        return self._ewma.get(h, 0.0)
+
+    def _update_fmmr(self):
+        for h in list(self._ewma):
+            mine = self.pages.owner == h
+            tot = self._pending[mine].sum()
+            if tot > 0:
+                cur = self._pending[mine & (self.pages.tier == TIER_SLOW)].sum() / tot
+            else:
+                cur = 0.0
+            self._ewma[h] = 0.5 * cur + 0.5 * self._ewma[h]
+
+    def _fast_room(self, h: int, fast_used: int) -> int:
+        return self.fast_capacity - fast_used
+
+    # result shim (simulator reads .plan.num_promote/num_demote)
+    class _Plan:
+        def __init__(self, p, d):
+            self.num_promote = p
+            self.num_demote = d
+
+    class _Result:
+        def __init__(self, p, d):
+            self.plan = _BaselineBase._Plan(p, d)
+
+
+class HeMemStatic(_BaselineBase):
+    """Static partitions + per-partition hotness threshold."""
+
+    def __init__(
+        self,
+        num_pages: int,
+        fast_capacity: int,
+        partitions: Optional[Dict[int, int]] = None,
+        hot_threshold: int = 8,
+        migration_budget: int = 2048,
+        seed: int = 0,
+    ):
+        super().__init__(num_pages, fast_capacity, seed)
+        self.partitions = dict(partitions or {})
+        self.hot_threshold = hot_threshold
+        self.migration_budget = migration_budget
+
+    def set_partition(self, h: int, fast_pages: int):
+        self.partitions[h] = fast_pages
+
+    def _fast_room(self, h: int, fast_used: int) -> int:
+        quota = self.partitions.get(h, 0)
+        mine_fast = int(((self.pages.owner == h) & (self.pages.tier == TIER_FAST)).sum())
+        return quota - mine_fast
+
+    def run_epoch(self):
+        self._update_fmmr()
+        self.pages.count = (self.pages.count // 2) + self._pending  # crude cooling
+        self._pending[:] = 0
+        promoted = demoted = 0
+        budget = self.migration_budget
+        for h in list(self._ewma):
+            mine = self.pages.owner == h
+            quota = self.partitions.get(h, 0)
+            fast = mine & (self.pages.tier == TIER_FAST)
+            slow = mine & (self.pages.tier == TIER_SLOW)
+            hot_slow = np.flatnonzero(slow & (self.pages.count >= self.hot_threshold))
+            cold_fast = np.flatnonzero(fast & (self.pages.count < self.hot_threshold))
+            # victims arbitrary among qualifying (no heat gradient): shuffle
+            self.rng.shuffle(hot_slow)
+            room = quota - int(fast.sum())
+            if room < len(hot_slow):  # evict arbitrary cold pages first
+                evict = cold_fast[: min(len(cold_fast), len(hot_slow) - room, budget)]
+                self.pages.tier[evict] = TIER_SLOW
+                demoted += len(evict)
+                budget -= len(evict)
+                room = quota - int(((self.pages.owner == h) & (self.pages.tier == TIER_FAST)).sum())
+            promo = hot_slow[: max(min(room, budget, len(hot_slow)), 0)]
+            self.pages.tier[promo] = TIER_FAST
+            promoted += len(promo)
+            budget -= len(promo)
+            if budget <= 0:
+                break
+        return self._Result(promoted, demoted)
+
+
+class AutoNUMALike(_BaselineBase):
+    """Tenant-blind promotion of recently-touched pages; no QoS, heavy churn."""
+
+    def run_epoch(self):
+        self._update_fmmr()
+        recent = self._pending
+        owned = self.pages.owner >= 0
+        fast = owned & (self.pages.tier == TIER_FAST)
+        slow = owned & (self.pages.tier == TIER_SLOW)
+        touched_slow = np.flatnonzero(slow & (recent > 0))
+        idle_fast = np.flatnonzero(fast & (recent == 0))
+        self.rng.shuffle(touched_slow)
+        self.rng.shuffle(idle_fast)
+        free_fast = self.fast_capacity - int(fast.sum())
+        promoted = demoted = 0
+        want = len(touched_slow)
+        # demote idle pages to make room (autonuma demotion to CPUless node)
+        need_evict = max(want - free_fast, 0)
+        evict = idle_fast[:need_evict]
+        self.pages.tier[evict] = TIER_SLOW
+        demoted = len(evict)
+        room = free_fast + demoted
+        promo = touched_slow[:room]
+        self.pages.tier[promo] = TIER_FAST
+        promoted = len(promo)
+        self._pending[:] = 0
+        return self._Result(promoted, demoted)
+
+
+class TwoLM(_BaselineBase):
+    """Direct-mapped hardware cache (Optane Memory Mode) analogue."""
+
+    def run_epoch(self):
+        self._update_fmmr()
+        owned = np.flatnonzero(self.pages.owner >= 0)
+        F = self.fast_capacity
+        sets = owned % max(F, 1)
+        # resident page per cache set = the one with most recent accesses
+        score = self._pending[owned]
+        order = np.lexsort((score, sets))  # per-set ascending score
+        resident = {}
+        for i in order:  # last write per set wins = max score
+            resident[sets[i]] = owned[i]
+        new_tier = np.full_like(self.pages.tier, TIER_SLOW)
+        new_tier[self.pages.tier == TIER_NONE] = TIER_NONE
+        res_ids = np.fromiter(resident.values(), dtype=np.int64, count=len(resident))
+        if len(res_ids):
+            new_tier[res_ids] = TIER_FAST
+        moved = int((new_tier != self.pages.tier).sum())
+        self.pages.tier = new_tier
+        self._pending[:] = 0
+        return self._Result(moved // 2, moved // 2)

@@ -1,12 +1,16 @@
-"""Paper Figure 4, reproduced: 6 GUPS processes under dynamic colocation.
+"""Paper Figure 4, reproduced on the scenario engine: 6 GUPS processes
+under dynamic colocation.
 
-Timeline: 5 staggered arrivals, a late 6th, a hot-set growth event, and a
-live QoS-target change — watch every latency-sensitive process converge back
-to its target after each disturbance.
+The timeline is a declarative ``core.scenario.Scenario``: 5 staggered
+arrivals, a late 6th, a hot-set growth event, and a live QoS-target change —
+watch every latency-sensitive process converge back to its target after each
+disturbance, phase by phase. Swap ``CentralManager`` for any baseline in
+``repro.core.baselines`` to see the same script punish a static partition.
 
     PYTHONPATH=src python examples/colocation_demo.py
 """
 from repro.core.manager import CentralManager
+from repro.core.scenario import Arrive, ResizeWorkingSet, Retarget, Scenario
 from repro.core.simulator import OPTANE, ColocationSim, WorkloadSpec
 
 mgr = CentralManager(
@@ -15,30 +19,32 @@ mgr = CentralManager(
 )
 sim = ColocationSim(mgr, OPTANE, seed=2)
 
-events = {
-    0: lambda s: s.add_tenant(WorkloadSpec("p1", 128, t_miss=1.0, threads=2)),
-}
+events = [Arrive(0, WorkloadSpec("p1", 128, t_miss=1.0, threads=2))]
 for j, i in enumerate([2, 3, 4, 5]):
-    events[10 * (j + 1)] = (
-        lambda s, i=i: s.add_tenant(
-            WorkloadSpec(f"p{i}", 128, t_miss=0.1, threads=2, sets=((0.5, 0.9),))
-        )
-    )
-events[110] = lambda s: s.add_tenant(
-    WorkloadSpec("p6", 128, t_miss=0.1, threads=2, sets=((0.5, 0.9),))
-)
-events[170] = lambda s: s.tenants["p5"].resize_set(0, 0.75)  # hot set +50%
-events[230] = lambda s: s.set_target("p1", 0.1)  # dynamic QoS change
+    events.append(Arrive(10 * (j + 1), WorkloadSpec(
+        f"p{i}", 128, t_miss=0.1, threads=2, sets=((0.5, 0.9),))))
+events += [
+    Arrive(110, WorkloadSpec("p6", 128, t_miss=0.1, threads=2, sets=((0.5, 0.9),))),
+    ResizeWorkingSet(170, "p5", 0, 0.75),  # hot set +50%
+    Retarget(230, "p1", 0.1),  # dynamic QoS change
+]
+scenario = Scenario(name="fig4_demo", n_epochs=300, events=tuple(events),
+                    description="paper Fig. 4 timeline")
 
-sim.run(300, events)
+result = sim.run_scenario(scenario)
 
 marks = {10: "p2 arrives", 50: "all LS arrived", 110: "p6 arrives",
          170: "p5 hot set +50%", 230: "p1 target 1.0->0.1", 295: "final"}
 print(f"{'epoch':>6} {'event':<20} " + " ".join(f"{f'p{i}':>7}" for i in range(1, 7)))
 for e, label in sorted(marks.items()):
-    r = sim.history[e]
+    r = result.history[e]
     vals = " ".join(
         f"{r.fmmr_true.get(f'p{i}', float('nan')):>7.3f}" for i in range(1, 7)
     )
     print(f"{e:>6} {label:<20} {vals}")
+
+print("\nper-phase mean FMMR (scenario-engine telemetry):")
+for p in result.phases:
+    vals = " ".join(f"{p.fmmr.get(f'p{i}', float('nan')):>7.3f}" for i in range(1, 7))
+    print(f"[{p.start:3d},{p.end:3d}) {p.label:<16} {vals}")
 print("\n(fmmr per process; LS target = 0.1 — compare paper Fig. 4)")

@@ -1,4 +1,5 @@
-"""MaxMem core: FMMR QoS policy, hotness bins, sampling, central manager."""
+"""MaxMem core: FMMR QoS policy, hotness bins, sampling, central manager,
+colocation simulator and the dynamic-scenario engine."""
 from repro.core.manager import CentralManager, TenantHandle
 from repro.core.types import (
     TIER_FAST,

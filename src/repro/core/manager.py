@@ -184,8 +184,10 @@ class CentralManager:
         owned = np.flatnonzero(self._snapshot()["owner"] == int(h))
         if len(owned):
             self.free(h, owned)
-        t = self.tenants
-        self.tenants = t._replace(active=t.active.at[int(h)].set(False))
+        # scrub the whole slot (not just active=False): stale a_miss/t_miss
+        # was observable via fmmr_of until the next epoch, and a reused
+        # handle inherited the departed tenant's cool_epoch pairing
+        self.tenants = self.tenants.clear_slot(int(h))
 
     # ------------------------------------------------------------- memory
     def allocate(self, h: TenantHandle, n_pages: int) -> np.ndarray:

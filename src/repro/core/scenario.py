@@ -1,0 +1,256 @@
+"""Declarative dynamic-colocation scenarios (paper §5, Figs. 7-9).
+
+The paper's headline results come from *dynamic* workloads — tenants
+arriving, departing and shifting working sets while competitors hold static
+partitions or thrash. A :class:`Scenario` is a declarative script of timed
+events that :func:`run_scenario` executes against any placement backend
+driven by ``ColocationSim`` (MaxMem's ``CentralManager`` or any baseline
+from ``core.baselines``), so all policies face byte-identical workload
+timelines.
+
+Event semantics (all events fire *before* the epoch they are stamped with,
+in the order they appear in ``Scenario.events``):
+
+  ``Arrive(epoch, spec)``       register + allocate a tenant (fast-first)
+  ``Depart(epoch, name)``       free all pages + unregister the tenant
+  ``ResizeWorkingSet(...)``     grow/shrink a skew set's page fraction
+                                (paper Fig. 4 event 5 / Fig. 8 event 2)
+  ``ShiftWorkingSet(...)``      re-scatter the skew sets onto fresh pages —
+                                a phase change: the learned heat map is
+                                instantly stale (TPP-style thrash)
+  ``SkewChange(...)``           change a set's share of accesses (hotness
+                                skew), page footprint unchanged
+  ``Retarget(...)``             dynamic QoS t_miss update (paper §3.3)
+
+Epoch boundaries at which any event fires split the timeline into *phases*;
+:class:`ScenarioResult` aggregates per-tenant throughput/p99/FMMR per phase,
+which is exactly the shape of the paper's Fig. 7-9 curves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.simulator import ColocationSim, EpochRecord, WorkloadSpec
+
+
+# ------------------------------------------------------------------ events
+@dataclass(frozen=True)
+class Arrive:
+    epoch: int
+    spec: WorkloadSpec
+
+    def apply(self, sim: ColocationSim) -> None:
+        sim.add_tenant(self.spec)
+
+    def label(self) -> str:
+        return f"+{self.spec.name}"
+
+
+@dataclass(frozen=True)
+class Depart:
+    epoch: int
+    name: str
+
+    def apply(self, sim: ColocationSim) -> None:
+        sim.remove_tenant(self.name)
+
+    def label(self) -> str:
+        return f"-{self.name}"
+
+
+@dataclass(frozen=True)
+class ResizeWorkingSet:
+    epoch: int
+    name: str
+    set_index: int
+    frac_pages: float
+
+    def apply(self, sim: ColocationSim) -> None:
+        sim.tenants[self.name].resize_set(self.set_index, self.frac_pages)
+
+    def label(self) -> str:
+        return f"{self.name}.set{self.set_index}~{self.frac_pages:g}p"
+
+
+@dataclass(frozen=True)
+class ShiftWorkingSet:
+    epoch: int
+    name: str
+
+    def apply(self, sim: ColocationSim) -> None:
+        sim.tenants[self.name].shift_sets()
+
+    def label(self) -> str:
+        return f"{self.name}.shift"
+
+
+@dataclass(frozen=True)
+class SkewChange:
+    epoch: int
+    name: str
+    set_index: int
+    frac_accesses: float
+
+    def apply(self, sim: ColocationSim) -> None:
+        sim.tenants[self.name].set_skew(self.set_index, self.frac_accesses)
+
+    def label(self) -> str:
+        return f"{self.name}.set{self.set_index}~{self.frac_accesses:g}a"
+
+
+@dataclass(frozen=True)
+class Retarget:
+    epoch: int
+    name: str
+    t_miss: float
+
+    def apply(self, sim: ColocationSim) -> None:
+        sim.set_target(self.name, self.t_miss)
+
+    def label(self) -> str:
+        return f"{self.name}.t={self.t_miss:g}"
+
+
+ScenarioEvent = Union[Arrive, Depart, ResizeWorkingSet, ShiftWorkingSet,
+                      SkewChange, Retarget]
+
+
+# ---------------------------------------------------------------- scenario
+@dataclass(frozen=True)
+class Scenario:
+    """A named, validated script of timed events over ``n_epochs``."""
+
+    name: str
+    n_epochs: int
+    events: Tuple[ScenarioEvent, ...] = ()
+    description: str = ""
+
+    def __post_init__(self):
+        assert self.n_epochs > 0, "scenario must run at least one epoch"
+        for ev in self.events:
+            assert 0 <= ev.epoch < self.n_epochs, (
+                f"event {ev} outside [0, {self.n_epochs})"
+            )
+
+    def events_at(self, epoch: int) -> List[ScenarioEvent]:
+        return [ev for ev in self.events if ev.epoch == epoch]
+
+    def phase_boundaries(self) -> List[int]:
+        """Sorted epoch indices that open a phase (0 plus event epochs)."""
+        return sorted({0, *(ev.epoch for ev in self.events)})
+
+    def phase_spans(self) -> List[Tuple[int, int, str]]:
+        """(start, end, label) per phase; label names the opening events."""
+        bounds = self.phase_boundaries() + [self.n_epochs]
+        spans = []
+        for start, end in zip(bounds[:-1], bounds[1:]):
+            if start == end:
+                continue
+            evs = self.events_at(start)
+            label = ",".join(ev.label() for ev in evs) if evs else "start"
+            spans.append((start, end, label))
+        return spans
+
+
+# ------------------------------------------------------------------ result
+@dataclass
+class PhaseStats:
+    """Per-phase aggregates (the paper-figure observables)."""
+
+    label: str
+    start: int
+    end: int
+    throughput: Dict[str, float]  # mean ops/s per tenant while present
+    p99: Dict[str, float]  # mean p99 seconds per tenant
+    fmmr: Dict[str, float]  # mean true FMMR per tenant
+    agg_throughput: float  # mean over epochs of sum-over-tenants ops/s
+    mean_p99: float  # mean over (epoch, tenant) p99 seconds
+    migrated_pages: int
+
+    def to_jsonable(self) -> dict:
+        return {
+            "label": self.label, "start": self.start, "end": self.end,
+            "agg_throughput": self.agg_throughput,
+            "mean_p99_us": self.mean_p99 * 1e6,
+            "throughput": self.throughput,
+            "p99_us": {k: v * 1e6 for k, v in self.p99.items()},
+            "fmmr": self.fmmr,
+            "migrated_pages": self.migrated_pages,
+        }
+
+
+@dataclass
+class ScenarioResult:
+    scenario: Scenario
+    history: List[EpochRecord]
+    phases: List[PhaseStats] = field(default_factory=list)
+
+    @property
+    def steady_state(self) -> PhaseStats:
+        """The final phase — the paper's end-of-run comparison window."""
+        return self.phases[-1]
+
+    def to_jsonable(self) -> dict:
+        return {
+            "scenario": self.scenario.name,
+            "n_epochs": self.scenario.n_epochs,
+            "phases": [p.to_jsonable() for p in self.phases],
+        }
+
+
+def _phase_stats(history: List[EpochRecord], start: int, end: int, label: str) -> PhaseStats:
+    recs = history[start:end]
+    names = sorted({nm for r in recs for nm in r.throughput})
+    tput, p99, fmmr = {}, {}, {}
+    for nm in names:
+        ts = [r.throughput[nm] for r in recs if nm in r.throughput]
+        tput[nm] = float(np.mean(ts))
+        p99[nm] = float(np.mean([r.p99[nm] for r in recs if nm in r.p99]))
+        fmmr[nm] = float(np.mean([r.fmmr_true[nm] for r in recs if nm in r.fmmr_true]))
+    agg = float(np.mean([sum(r.throughput.values()) for r in recs])) if recs else 0.0
+    all_p99 = [v for r in recs for v in r.p99.values()]
+    return PhaseStats(
+        label=label, start=start, end=end,
+        throughput=tput, p99=p99, fmmr=fmmr,
+        agg_throughput=agg,
+        mean_p99=float(np.mean(all_p99)) if all_p99 else 0.0,
+        migrated_pages=int(sum(r.migrated_pages for r in recs)),
+    )
+
+
+# ---------------------------------------------------------------- executor
+def run_scenario(
+    sim: ColocationSim,
+    scenario: Scenario,
+    on_event: Optional[callable] = None,
+) -> ScenarioResult:
+    """Execute ``scenario`` on ``sim`` (any backend) and aggregate phases.
+
+    ``on_event(sim, event)`` is called after each event is applied — the
+    differential test harness uses it to assert invariants at every
+    perturbation point.
+    """
+    base = len(sim.history)
+    by_epoch: Dict[int, List[ScenarioEvent]] = {}
+    for ev in scenario.events:
+        by_epoch.setdefault(base + ev.epoch, []).append(ev)
+
+    def fire(s: ColocationSim, evs=None) -> None:
+        for ev in evs:
+            ev.apply(s)
+            if on_event is not None:
+                on_event(s, ev)
+
+    events = {
+        epoch: (lambda s, evs=evs: fire(s, evs)) for epoch, evs in by_epoch.items()
+    }
+    sim.run(scenario.n_epochs, events)
+    history = sim.history[base : base + scenario.n_epochs]
+    phases = [
+        _phase_stats(history, start, end, label)
+        for start, end, label in scenario.phase_spans()
+    ]
+    return ScenarioResult(scenario=scenario, history=history, phases=phases)

@@ -99,6 +99,23 @@ class TenantSim:
         self.spec = dataclasses.replace(self.spec, sets=tuple(sets))
         self.probs = self._build_probs(self.spec, len(self.page_ids))[self._perm]
 
+    def set_skew(self, set_index: int, new_frac_accesses: float):
+        """Hotness-skew change: a set's share of accesses moves, its page
+        footprint does not (scenario event ``SkewChange``)."""
+        sets = list(self.spec.sets)
+        fp, fa = sets[set_index]
+        sets[set_index] = (fp, new_frac_accesses)
+        self.spec = dataclasses.replace(self.spec, sets=tuple(sets))
+        self.probs = self._build_probs(self.spec, len(self.page_ids))[self._perm]
+
+    def shift_sets(self):
+        """Working-set shift (phase change): re-scatter the skew sets onto a
+        fresh permutation of the tenant's pages. Set sizes and access shares
+        are unchanged but the policy's learned heat map is instantly stale
+        (scenario event ``ShiftWorkingSet``)."""
+        self._perm = self.rng.permutation(len(self.page_ids))
+        self.probs = self._build_probs(self.spec, len(self.page_ids))[self._perm]
+
     def miss_ratio(self, tier: np.ndarray) -> float:
         t = tier[self.page_ids]
         return float(self.probs[t == TIER_SLOW].sum())
@@ -383,3 +400,12 @@ class ColocationSim:
             else:
                 self.run_epoch()
         return self.history
+
+    def run_scenario(self, scenario, on_event=None):
+        """Execute a declarative ``core.scenario.Scenario`` against this
+        sim's backend; returns a ``ScenarioResult`` with per-phase
+        aggregates. (Thin delegate — the engine lives in core/scenario.py.)
+        """
+        from repro.core.scenario import run_scenario
+
+        return run_scenario(self, scenario, on_event=on_event)

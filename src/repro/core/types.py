@@ -56,6 +56,20 @@ class TenantState(NamedTuple):
             flagged=jnp.zeros((T,), bool),
         )
 
+    def clear_slot(self, slot: int) -> "TenantState":
+        """Reset one slot to its creation defaults. Departure must scrub the
+        whole slot: a merely-deactivated slot leaks its EWMA/target through
+        ``fmmr_of`` until the next epoch zeroes it, and scenario-driven churn
+        reuses slots within the same epoch."""
+        return self._replace(
+            active=self.active.at[slot].set(False),
+            t_miss=self.t_miss.at[slot].set(1.0),
+            a_miss=self.a_miss.at[slot].set(0.0),
+            arrival=self.arrival.at[slot].set(jnp.iinfo(jnp.int32).max),
+            cool_epoch=self.cool_epoch.at[slot].set(0),
+            flagged=self.flagged.at[slot].set(False),
+        )
+
 
 class PageState(NamedTuple):
     """Per-page metadata. Arrays of length num_pages."""

@@ -1,0 +1,174 @@
+"""Golden-trace drivers shared by the regression tests and the regenerator.
+
+Two locked traces live in ``tests/golden/``:
+
+* ``baseline_traces.json`` — per-epoch tier/owner placements of the frozen
+  seed baselines (``benchmarks/seed_baselines_frozen.py``) on a small
+  scripted churn trace (arrive, depart, late arrive). The vectorized
+  ``repro.core.baselines`` must replay it bit-for-bit: this is the parity
+  lock that let the per-page reference implementations be deleted.
+* ``policy_trace.json`` — telemetry + migration plans of 8 MaxMem policy
+  epochs (64 pages, 3 tenants, exact sampling). ``policy.epoch_step`` AND
+  ``policy.multi_epoch`` must both replay it bit-identically, so refactors
+  cannot silently change migration decisions.
+
+Regenerate (ONLY when the frozen reference or the trace spec changes):
+
+    PYTHONPATH=src:. python tests/golden_regen.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden")
+BASELINE_TRACE_PATH = os.path.join(GOLDEN_DIR, "baseline_traces.json")
+POLICY_TRACE_PATH = os.path.join(GOLDEN_DIR, "policy_trace.json")
+
+# ----------------------------------------------------------- baseline trace
+P, FAST, BUDGET, THRESHOLD = 256, 64, 32, 6
+EPOCHS = 12
+COUNTS_SEED, BACKEND_SEED = 1234, 7
+
+
+def trace_counts(epochs: int = EPOCHS, n_pages: int = P) -> np.ndarray:
+    """Deterministic per-epoch access counts (mix straddling THRESHOLD)."""
+    crng = np.random.default_rng(COUNTS_SEED)
+    return crng.integers(0, 16, size=(epochs, n_pages)).astype(np.int64)
+
+
+def backend_factories(mod):
+    """The three baseline constructors from a baselines module (frozen seed
+    or the live vectorized one) with identical knobs."""
+    return {
+        "hemem": lambda: mod.HeMemStatic(
+            P, FAST, hot_threshold=THRESHOLD, migration_budget=BUDGET,
+            seed=BACKEND_SEED,
+        ),
+        "autonuma": lambda: mod.AutoNUMALike(P, FAST, seed=BACKEND_SEED),
+        "twolm": lambda: mod.TwoLM(P, FAST, seed=BACKEND_SEED),
+    }
+
+
+def drive_baseline(make_backend) -> list:
+    """Scripted churn trace: two initial tenants, a mid-trace arrival, a
+    departure, and a late arrival into the freed pages. Returns per-epoch
+    serializable records (placements + migration counts + live-tenant FMMR).
+    """
+    b = make_backend()
+    counts = trace_counts()
+
+    def reg(n_pages: int, partition: int) -> tuple:
+        h = b.register(0.5)
+        if hasattr(b, "set_partition"):
+            b.set_partition(h, partition)
+        return h, b.allocate(h, n_pages)
+
+    h0, _p0 = reg(80, 28)
+    h1, p1 = reg(80, 20)
+    live = [h0, h1]
+    out = []
+    for e in range(EPOCHS):
+        if e == 4:
+            h2, _ = reg(64, 12)
+            live.append(h2)
+        if e == 7:
+            b.free(h1, p1)
+            b.unregister(h1)
+            live.remove(h1)
+        if e == 9:
+            h3, _ = reg(40, 16)
+            live.append(h3)
+        b.record_access(counts[e])
+        res = b.run_epoch()
+        out.append({
+            "tier": np.asarray(b.tiers(), np.int8).tolist(),
+            "owner": np.asarray(b.owners(), np.int32).tolist(),
+            "promoted": int(res.plan.num_promote),
+            "demoted": int(res.plan.num_demote),
+            "fmmr": {str(int(h)): float(b.fmmr_of(h)) for h in live},
+        })
+    return out
+
+
+# ------------------------------------------------------------- policy trace
+POLICY_P, POLICY_FAST, POLICY_BUDGET = 64, 16, 16
+POLICY_MAX_T, POLICY_EPOCHS, POLICY_SEED = 4, 8, 5
+# First tenant allocates fast-first and holds the whole fast tier with a lax
+# target (donor); the second is a hot needer (t=0.1): the trace exercises
+# reallocation gives/takes AND per-tenant rebalance pairs every epoch.
+POLICY_TENANTS = ((24, 1.0), (20, 0.1), (12, 0.5))  # (n_pages, t_miss)
+POLICY_COUNTS_SEED = 99
+
+
+def policy_counts() -> np.ndarray:
+    crng = np.random.default_rng(POLICY_COUNTS_SEED)
+    return crng.integers(0, 50, size=(POLICY_EPOCHS, POLICY_P)).astype(np.int64)
+
+
+def make_policy_manager():
+    from repro.core.manager import CentralManager
+
+    m = CentralManager(
+        num_pages=POLICY_P, fast_capacity=POLICY_FAST,
+        migration_budget=POLICY_BUDGET, max_tenants=POLICY_MAX_T,
+        sample_period=100, exact_sampling=True, seed=POLICY_SEED,
+    )
+    for n_pages, t_miss in POLICY_TENANTS:
+        h = m.register(t_miss)
+        m.allocate(h, n_pages)
+    return m
+
+
+def epoch_record(result, tier: np.ndarray) -> dict:
+    s = result.stats
+    return {
+        "fmmr_now": np.asarray(s.fmmr_now, np.float32).astype(float).tolist(),
+        "fmmr_ewma": np.asarray(s.fmmr_ewma, np.float32).astype(float).tolist(),
+        "fast_pages": np.asarray(s.fast_pages, np.int32).tolist(),
+        "slow_pages": np.asarray(s.slow_pages, np.int32).tolist(),
+        "promoted": np.asarray(s.promoted, np.int32).tolist(),
+        "demoted": np.asarray(s.demoted, np.int32).tolist(),
+        "cooled": np.asarray(s.cooled, bool).tolist(),
+        "promote_ids": np.asarray(result.plan.promote, np.int32).tolist(),
+        "demote_ids": np.asarray(result.plan.demote, np.int32).tolist(),
+        "tier": np.asarray(tier, np.int8).tolist(),
+    }
+
+
+def drive_policy_singlestep() -> list:
+    m = make_policy_manager()
+    counts = policy_counts()
+    out = []
+    for e in range(POLICY_EPOCHS):
+        m.record_access(counts[e])
+        res = m.run_epoch()
+        out.append(epoch_record(res, m.tiers()))
+    return out
+
+
+def main() -> None:
+    import benchmarks.seed_baselines_frozen as frozen
+
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    base = {name: drive_baseline(mk) for name, mk in backend_factories(frozen).items()}
+    with open(BASELINE_TRACE_PATH, "w") as f:
+        json.dump({"spec": {"P": P, "FAST": FAST, "BUDGET": BUDGET,
+                            "THRESHOLD": THRESHOLD, "EPOCHS": EPOCHS,
+                            "COUNTS_SEED": COUNTS_SEED,
+                            "BACKEND_SEED": BACKEND_SEED},
+                   "traces": base}, f)
+    print(f"wrote {BASELINE_TRACE_PATH}")
+    with open(POLICY_TRACE_PATH, "w") as f:
+        json.dump({"spec": {"P": POLICY_P, "FAST": POLICY_FAST,
+                            "BUDGET": POLICY_BUDGET, "EPOCHS": POLICY_EPOCHS,
+                            "SEED": POLICY_SEED,
+                            "COUNTS_SEED": POLICY_COUNTS_SEED},
+                   "epochs": drive_policy_singlestep()}, f)
+    print(f"wrote {POLICY_TRACE_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,396 @@
+"""Scenario engine + differential invariant harness + golden-trace locks.
+
+Four layers:
+
+1. Scenario-engine semantics: spec validation, phase spans, and that every
+   event kind actually perturbs the simulator.
+2. Differential invariant harness: MaxMem and all three baselines run the
+   SAME scripted and randomized scenarios; conservation invariants are
+   asserted after every event and epoch — no page owned by an unregistered
+   tenant, fast occupancy <= capacity, tiers exactly partitioned, migration
+   traffic <= budget (for budgeted policies).
+3. Golden-trace locks: the vectorized baselines replay
+   ``tests/golden/baseline_traces.json`` (recorded from the frozen seed
+   per-page implementations) bit-for-bit, and ``policy.epoch_step`` /
+   ``policy.multi_epoch`` replay ``tests/golden/policy_trace.json``
+   bit-identically, so refactors cannot silently change placements.
+4. Churn regression: unregister scrubs per-tenant state (manager and
+   baselines) — stale EWMA/targets were observable via ``fmmr_of`` before.
+"""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # clean checkout: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, st
+
+import golden_regen
+from repro.core.baselines import AutoNUMALike, HeMemStatic, TwoLM
+from repro.core.manager import CentralManager
+from repro.core.scenario import (
+    Arrive,
+    Depart,
+    ResizeWorkingSet,
+    Retarget,
+    Scenario,
+    ShiftWorkingSet,
+    SkewChange,
+    run_scenario,
+)
+from repro.core.simulator import OPTANE, ColocationSim, WorkloadSpec
+from repro.core.types import TIER_FAST, TIER_NONE, TIER_SLOW
+
+P, FAST, BUDGET = 256, 64, 32
+
+
+def _backends():
+    """All four policies on identical geometry (factories)."""
+    return {
+        "maxmem": lambda: CentralManager(
+            num_pages=P, fast_capacity=FAST, migration_budget=BUDGET,
+            max_tenants=8, sample_period=10),
+        "hemem": lambda: HeMemStatic(
+            P, FAST, partitions={i: FAST // 4 for i in range(8)},
+            hot_threshold=6, migration_budget=BUDGET),
+        "autonuma": lambda: AutoNUMALike(P, FAST),
+        "twolm": lambda: TwoLM(P, FAST),
+    }
+
+
+def _fast_cap(backend) -> int:
+    if hasattr(backend, "params"):
+        return int(backend.params.fast_capacity)
+    return backend.fast_capacity
+
+
+def _migration_budget(backend):
+    if hasattr(backend, "params"):
+        return int(backend.params.migration_budget)
+    return getattr(backend, "migration_budget", None)
+
+
+def check_invariants(sim, event=None):
+    """The conservation invariants every placement backend must uphold."""
+    backend = sim.backend
+    tier = np.asarray(backend.tiers())
+    owner = np.asarray(backend.owners())
+    ctx = f"after {event}" if event is not None else "after epoch"
+    # tier domain + exact partition: owned <=> placed, unowned <=> NONE
+    assert set(np.unique(tier).tolist()) <= {TIER_NONE, TIER_SLOW, TIER_FAST}, ctx
+    owned = owner >= 0
+    assert (tier[owned] != TIER_NONE).all(), f"owned page unplaced {ctx}"
+    assert (tier[~owned] == TIER_NONE).all(), f"unowned page placed {ctx}"
+    # no page owned by an unregistered tenant
+    registered = {int(h) for h in sim.handles.values()}
+    holders = set(np.unique(owner[owned]).tolist())
+    assert holders <= registered, f"orphan owners {holders - registered} {ctx}"
+    # fast-tier occupancy bounded by capacity
+    assert int((tier == TIER_FAST).sum()) <= _fast_cap(backend), ctx
+
+
+def _scripted_scenario() -> Scenario:
+    return Scenario(
+        name="scripted_churn",
+        n_epochs=30,
+        events=(
+            Arrive(0, WorkloadSpec("a", 96, t_miss=0.2, threads=2, sets=((0.3, 0.9),))),
+            Arrive(0, WorkloadSpec("b", 64, t_miss=1.0, threads=4)),
+            Arrive(6, WorkloadSpec("c", 48, t_miss=0.5, threads=2, sets=((0.5, 0.8),))),
+            ResizeWorkingSet(10, "a", 0, 0.45),
+            SkewChange(14, "c", 0, 0.5),
+            ShiftWorkingSet(18, "a"),
+            Retarget(20, "b", 0.5),
+            Depart(24, "b"),
+            Arrive(26, WorkloadSpec("d", 32, t_miss=1.0, threads=2)),
+        ),
+    )
+
+
+class TestScenarioSpec:
+    def test_phase_spans_cover_run_and_label_events(self):
+        sc = _scripted_scenario()
+        spans = sc.phase_spans()
+        assert spans[0][0] == 0 and spans[-1][1] == sc.n_epochs
+        # contiguous, non-overlapping
+        for (s0, e0, _), (s1, e1, _) in zip(spans[:-1], spans[1:]):
+            assert e0 == s1
+        labels = [l for _, _, l in spans]
+        assert any("+a" in l for l in labels)
+        assert any("-b" in l for l in labels)
+
+    def test_event_epoch_out_of_range_rejected(self):
+        with pytest.raises(AssertionError):
+            Scenario(name="bad", n_epochs=10,
+                     events=(Depart(10, "x"),))
+
+    def test_events_perturb_simulator(self):
+        mgr = _backends()["maxmem"]()
+        sim = ColocationSim(mgr, OPTANE, seed=0)
+        sc = Scenario(
+            name="fx", n_epochs=8,
+            events=(
+                Arrive(0, WorkloadSpec("t", 128, t_miss=1.0, threads=2,
+                                       sets=((0.25, 0.9),))),
+                Retarget(2, "t", 0.3),
+                ResizeWorkingSet(3, "t", 0, 0.5),
+                SkewChange(4, "t", 0, 0.6),
+                ShiftWorkingSet(5, "t"),
+                Depart(6, "t"),
+            ),
+        )
+        seen = []
+
+        def spy(s, ev):
+            if isinstance(ev, Retarget):
+                assert s.tenants["t"].spec.t_miss == 0.3
+                assert float(mgr.tenants.t_miss[s.handles["t"]]) == pytest.approx(0.3)
+            if isinstance(ev, ResizeWorkingSet):
+                assert s.tenants["t"].spec.sets[0][0] == 0.5
+            if isinstance(ev, SkewChange):
+                assert s.tenants["t"].spec.sets[0][1] == 0.6
+            if isinstance(ev, Depart):
+                assert "t" not in s.tenants
+            seen.append(type(ev).__name__)
+
+        res = sim.run_scenario(sc, on_event=spy)
+        assert seen == ["Arrive", "Retarget", "ResizeWorkingSet", "SkewChange",
+                        "ShiftWorkingSet", "Depart"]
+        assert len(res.history) == 8
+        assert res.steady_state.label == "-t"
+
+    def test_shift_keeps_distribution_but_moves_pages(self):
+        mgr = _backends()["maxmem"]()
+        sim = ColocationSim(mgr, OPTANE, seed=3)
+        sim.add_tenant(WorkloadSpec("t", 128, t_miss=1.0, threads=2,
+                                    sets=((0.25, 0.9),)))
+        t = sim.tenants["t"]
+        before = t.probs.copy()
+        t.shift_sets()
+        assert not np.array_equal(before, t.probs), "shift moved no pages"
+        assert np.allclose(sorted(before), sorted(t.probs)), "shift changed skew"
+
+
+class TestDifferentialInvariants:
+    def test_scripted_scenario_all_policies(self):
+        sc = _scripted_scenario()
+        for name, make in _backends().items():
+            backend = make()
+            sim = ColocationSim(backend, OPTANE, seed=7)
+            res = run_scenario(sim, sc, on_event=check_invariants)
+            check_invariants(sim)
+            budget = _migration_budget(backend)
+            if budget is not None:
+                for rec in res.history:
+                    assert rec.migrated_pages <= budget, (
+                        f"{name}: migrated {rec.migrated_pages} > budget {budget} "
+                        f"at epoch {rec.epoch}"
+                    )
+
+    def test_epoch_by_epoch_invariants(self):
+        """Invariants hold after EVERY epoch, not just at event boundaries."""
+        sc = _scripted_scenario()
+        for name, make in _backends().items():
+            sim = ColocationSim(make(), OPTANE, seed=11)
+            for epoch in range(sc.n_epochs):
+                for ev in sc.events_at(epoch):
+                    ev.apply(sim)
+                    check_invariants(sim, ev)
+                sim.run_epoch()
+                check_invariants(sim)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), n_events=st.integers(2, 6))
+    def test_randomized_event_schedules(self, seed, n_events):
+        sc = _random_scenario(np.random.default_rng(seed), n_events)
+        for name, make in _backends().items():
+            backend = make()
+            sim = ColocationSim(backend, OPTANE, seed=seed)
+            res = run_scenario(sim, sc, on_event=check_invariants)
+            check_invariants(sim)
+            budget = _migration_budget(backend)
+            if budget is not None:
+                assert all(r.migrated_pages <= budget for r in res.history), name
+
+
+def _random_scenario(rng: np.random.Generator, n_events: int) -> Scenario:
+    """Build a valid random event schedule (arrivals fit memory, departs and
+    mutations only target tenants alive at that epoch)."""
+    alive = {}
+    free_pages = P
+    events = []
+    idx = 0
+
+    def arrive(epoch):
+        nonlocal free_pages, idx
+        n = int(rng.integers(16, 49))
+        if free_pages - n < 8 or len(alive) >= 6:
+            return
+        free_pages -= n
+        name = f"t{idx}"
+        idx += 1
+        sets = ((float(rng.uniform(0.2, 0.5)), float(rng.uniform(0.5, 0.95))),)
+        spec = WorkloadSpec(name, n, t_miss=float(rng.uniform(0.1, 1.0)),
+                            threads=int(rng.integers(1, 5)),
+                            sets=sets if rng.random() < 0.7 else ())
+        alive[name] = n
+        events.append(Arrive(epoch, spec))
+
+    arrive(0)
+    arrive(0)
+    epoch = 0
+    for _ in range(n_events):
+        epoch += int(rng.integers(2, 6))
+        kind = rng.integers(0, 6)
+        names = sorted(alive)
+        if kind == 0:
+            arrive(epoch)
+        elif not names:
+            arrive(epoch)
+        elif kind == 1 and len(names) > 1:
+            victim = names[int(rng.integers(len(names)))]
+            events.append(Depart(epoch, victim))
+            free_pages += alive.pop(victim)
+        else:
+            name = names[int(rng.integers(len(names)))]
+            ev = [
+                lambda: ResizeWorkingSet(epoch, name, 0, float(rng.uniform(0.2, 0.6))),
+                lambda: SkewChange(epoch, name, 0, float(rng.uniform(0.4, 0.95))),
+                lambda: ShiftWorkingSet(epoch, name),
+                lambda: Retarget(epoch, name, float(rng.uniform(0.1, 1.0))),
+            ][int(rng.integers(4))]()
+            if isinstance(ev, (ResizeWorkingSet, SkewChange)):
+                # only meaningful (and valid) when the tenant has skew sets
+                spec = next(e.spec for e in events
+                            if isinstance(e, Arrive) and e.spec.name == name)
+                if not spec.sets:
+                    ev = Retarget(epoch, name, 0.5)
+            events.append(ev)
+    return Scenario(name="random", n_epochs=epoch + 4, events=tuple(events))
+
+
+# ------------------------------------------------------------ golden locks
+class TestGoldenTraces:
+    def test_vectorized_baselines_replay_seed_golden(self):
+        """The parity lock: identical placements to the recorded seed
+        per-page implementations, every epoch of the churn trace."""
+        import repro.core.baselines as live
+
+        with open(golden_regen.BASELINE_TRACE_PATH) as f:
+            golden = json.load(f)["traces"]
+        for name, make in golden_regen.backend_factories(live).items():
+            got = golden_regen.drive_baseline(make)
+            assert len(got) == len(golden[name])
+            for e, (g, n) in enumerate(zip(golden[name], got)):
+                assert n["tier"] == g["tier"], f"{name} epoch {e}: tier diverged"
+                assert n["owner"] == g["owner"], f"{name} epoch {e}: owner diverged"
+                assert n["promoted"] == g["promoted"], f"{name} epoch {e}"
+                assert n["demoted"] == g["demoted"], f"{name} epoch {e}"
+                assert n["fmmr"] == g["fmmr"], f"{name} epoch {e}: fmmr diverged"
+
+    def test_policy_epoch_step_replays_golden(self):
+        with open(golden_regen.POLICY_TRACE_PATH) as f:
+            golden = json.load(f)["epochs"]
+        got = golden_regen.drive_policy_singlestep()
+        assert len(got) == len(golden)
+        for e, (g, n) in enumerate(zip(golden, got)):
+            for key in g:
+                assert n[key] == g[key], f"epoch {e}: {key} diverged"
+
+    def test_policy_multi_epoch_replays_golden(self):
+        """The fused lax.scan path reproduces the recorded single-step
+        trace bit-identically (exact sampling)."""
+        with open(golden_regen.POLICY_TRACE_PATH) as f:
+            golden = json.load(f)["epochs"]
+        m = golden_regen.make_policy_manager()
+        res = m.run_epochs(golden_regen.POLICY_EPOCHS,
+                           counts=golden_regen.policy_counts(),
+                           collect_plans=True)
+        stats = res.stats
+        for e, g in enumerate(golden):
+            assert np.asarray(stats.fmmr_now[e]).astype(float).tolist() == g["fmmr_now"], e
+            assert np.asarray(stats.fmmr_ewma[e]).astype(float).tolist() == g["fmmr_ewma"], e
+            assert np.asarray(stats.fast_pages[e]).tolist() == g["fast_pages"], e
+            assert np.asarray(stats.slow_pages[e]).tolist() == g["slow_pages"], e
+            assert np.asarray(stats.promoted[e]).tolist() == g["promoted"], e
+            assert np.asarray(stats.demoted[e]).tolist() == g["demoted"], e
+            plans = res.plans
+            assert np.asarray(plans.promote[e]).tolist() == g["promote_ids"], e
+            assert np.asarray(plans.demote[e]).tolist() == g["demote_ids"], e
+        assert m.tiers().tolist() == golden[-1]["tier"]
+
+
+# -------------------------------------------------------- churn regression
+class TestUnregisterScrubsState:
+    def _drive_miss(self, m, h, pages, epochs=4):
+        counts = np.zeros(m.num_pages, np.int64)
+        counts[pages] = 100
+        for _ in range(epochs):
+            m.record_access(counts)
+            m.run_epoch()
+
+    def test_manager_unregister_clears_fmmr_and_target(self):
+        m = CentralManager(num_pages=128, fast_capacity=16, migration_budget=8,
+                           max_tenants=4, sample_period=1, exact_sampling=True)
+        h = m.register(t_miss=0.1)
+        pages = m.allocate(h, 64)  # 48 pages land slow -> nonzero FMMR
+        self._drive_miss(m, h, pages)
+        assert m.fmmr_of(h) > 0.0
+        m.unregister(h)
+        assert m.fmmr_of(h) == 0.0, "stale EWMA visible after unregister"
+        assert float(m.tenants.t_miss[int(h)]) == 1.0
+        assert not bool(m.tenants.flagged[int(h)])
+        assert int(m.tenants.cool_epoch[int(h)]) == 0
+
+    def test_manager_handle_reuse_starts_fresh(self):
+        m = CentralManager(num_pages=128, fast_capacity=16, migration_budget=8,
+                           max_tenants=4, sample_period=1, exact_sampling=True)
+        h = m.register(t_miss=0.1)
+        pages = m.allocate(h, 64)
+        self._drive_miss(m, h, pages, epochs=8)  # also advances cool_epoch
+        m.unregister(h)
+        h2 = m.register(t_miss=0.9)
+        assert int(h2) == int(h), "expected slot reuse"
+        assert m.fmmr_of(h2) == 0.0
+        assert float(m.tenants.t_miss[int(h2)]) == pytest.approx(0.9)
+        # reused slot must behave like a fresh tenant end-to-end
+        pages2 = m.allocate(h2, 32)
+        self._drive_miss(m, h2, pages2)
+        assert (np.asarray(m.pages.owner)[pages2] == int(h2)).all()
+
+    def test_baseline_unregister_drops_fmmr(self):
+        for cls in (HeMemStatic, AutoNUMALike, TwoLM):
+            b = cls(128, 16)
+            h = b.register(0.5)
+            pages = b.allocate(h, 64)
+            counts = np.zeros(128, np.int64)
+            counts[pages] = 50
+            b.record_access(counts)
+            b.run_epoch()
+            assert b.fmmr_of(h) > 0.0, cls.__name__
+            b.unregister(h)
+            assert b.fmmr_of(h) == 0.0, f"{cls.__name__}: stale EWMA"
+            assert h not in b._ewma, cls.__name__
+
+    def test_scenario_churn_reuses_slots_cleanly(self):
+        """Arrive/depart/arrive through the engine: the reused manager slot
+        must not inherit the departed tenant's QoS state."""
+        mgr = CentralManager(num_pages=256, fast_capacity=64, migration_budget=16,
+                            max_tenants=2, sample_period=10)
+        sim = ColocationSim(mgr, OPTANE, seed=5)
+        sc = Scenario(
+            name="churn", n_epochs=16,
+            events=(
+                Arrive(0, WorkloadSpec("x", 128, t_miss=0.1, threads=2,
+                                       sets=((0.3, 0.9),))),
+                Depart(8, "x"),
+                Arrive(10, WorkloadSpec("y", 128, t_miss=1.0, threads=2)),
+            ),
+        )
+        run_scenario(sim, sc, on_event=check_invariants)
+        h = sim.handles["y"]
+        assert float(mgr.tenants.t_miss[int(h)]) == pytest.approx(1.0)
+        assert not bool(mgr.tenants.flagged[int(h)])
