@@ -1,0 +1,153 @@
+"""CI perf-regression gate (the ``perf-gate`` job in ci.yml).
+
+Re-measures the policy-engine microbench on the current checkout and runs
+the ``--smoke`` scenario suite, then compares against the committed
+``BENCH_policy.json``/``BENCH_scenarios.json``:
+
+  * per-metric slowdown beyond the tolerance band (default 25%, override
+    with ``--tolerance`` or ``PERF_GATE_TOL``) fails the gate — the gated
+    metrics are the per-epoch policy timings, which are the hot path every
+    PR is allowed to touch;
+  * a broken qualitative policy ordering (MaxMem steady-state aggregate
+    throughput below any baseline, fresh run OR committed payload) fails
+    the gate — perf work must not silently trade away the paper's claim;
+  * the finite-bandwidth thrash scenario must complete on all four
+    policies.
+
+Writes a machine-readable diff to ``--out`` (uploaded as a CI artifact)
+and exits non-zero on any violation.
+
+    PYTHONPATH=src:. python benchmarks/check_regression.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+POLICY_BENCH = "BENCH_policy.json"
+SCENARIO_BENCH = "BENCH_scenarios.json"
+
+# (json path into BENCH_policy.json) -> gated metric; all are
+# lower-is-better microseconds from benchmarks.microbench.policy_bench()
+GATED_METRICS = (
+    ("policy_epoch", "65536", "us"),
+    ("policy_epoch", "262144", "us"),
+    ("run_epochs_k16", "65536", "scan_per_epoch_us"),
+    ("run_epochs_k16", "262144", "scan_per_epoch_us"),
+)
+
+
+def _dig(payload: dict, path):
+    for key in path:
+        payload = payload[key]
+    return payload
+
+
+def compare_policy(committed: dict, fresh: dict, tolerance: float) -> list:
+    """Per-metric slowdown rows, judged on HOST-NORMALIZED ratios.
+
+    The committed numbers come from a different machine than the CI
+    runner, so raw fresh/committed ratios fold in the host-speed gap. The
+    median ratio across the gated metrics estimates that gap (a uniformly
+    slower host moves every metric together); dividing it out leaves the
+    per-metric regression signal, which is what the tolerance band judges.
+    A genuine global regression shows up as a large host factor — reported
+    in the artifact and failed beyond 1 + 3*tolerance as a backstop.
+    """
+    rows = []
+    ratios = []
+    for path in GATED_METRICS:
+        name = ".".join(path)
+        try:
+            old = float(_dig(committed, path))
+            new = float(_dig(fresh, path))
+        except KeyError:
+            rows.append({"metric": name, "status": "missing"})
+            continue
+        ratio = new / old if old > 0 else float("inf")
+        ratios.append(ratio)
+        rows.append({"metric": name, "committed_us": old, "fresh_us": new,
+                     "ratio": round(ratio, 3)})
+    host = sorted(ratios)[len(ratios) // 2] if ratios else 1.0
+    for r in rows:
+        if r.get("status") == "missing":
+            continue
+        norm = r["ratio"] / host if host > 0 else float("inf")
+        r["host_factor"] = round(host, 3)
+        r["normalized_ratio"] = round(norm, 3)
+        r["status"] = "fail" if norm > 1.0 + tolerance else "ok"
+    if ratios and host > 1.0 + 3.0 * tolerance:
+        rows.append({
+            "metric": "host_factor_backstop",
+            "ratio": round(host, 3),
+            "status": "fail",
+        })
+    return rows
+
+
+def check_ordering(scenarios: dict, source: str) -> list:
+    rows = [{
+        "check": f"{source}:maxmem_geq_all_baselines",
+        "status": "ok" if scenarios.get("maxmem_geq_all_baselines") else "fail",
+        "steady_state": scenarios.get("steady_state_agg_throughput"),
+    }]
+    thrash = scenarios.get("thrash")
+    if thrash is not None:
+        rows.append({
+            "check": f"{source}:thrash_all_policies",
+            "status": "ok" if len(thrash.get("completed_policies", ())) == 4 else "fail",
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("PERF_GATE_TOL", "0.25")),
+                    help="allowed fractional slowdown per metric (default 0.25)")
+    ap.add_argument("--out", default="perf_gate_diff.json",
+                    help="diff artifact path")
+    args = ap.parse_args(argv)
+
+    with open(POLICY_BENCH) as f:
+        committed_policy = json.load(f)
+    with open(SCENARIO_BENCH) as f:
+        committed_scen = json.load(f)
+
+    from benchmarks import dynamic_workload, microbench
+
+    fresh_policy = microbench.policy_bench()
+    fresh_scen = dynamic_workload.scenarios_bench(smoke=True)
+
+    diff = {
+        "tolerance": args.tolerance,
+        "metrics": compare_policy(committed_policy, fresh_policy, args.tolerance),
+        "ordering": check_ordering(fresh_scen, "fresh_smoke")
+        + check_ordering(committed_scen, "committed"),
+    }
+    # a metric absent on either side means the gate is no longer measuring
+    # what it claims to — that must fail loudly, not pass vacuously
+    failures = [r for r in diff["metrics"] if r["status"] in ("fail", "missing")]
+    failures += [r for r in diff["ordering"] if r["status"] == "fail"]
+    diff["failures"] = len(failures)
+
+    with open(args.out, "w") as f:
+        json.dump(diff, f, indent=2)
+    print(f"wrote {args.out}")
+    for r in diff["metrics"]:
+        print(f"perf_gate_{r['metric']},{r.get('fresh_us', 0):.1f},"
+              f"ratio={r.get('ratio', 'n/a')};"
+              f"normalized={r.get('normalized_ratio', 'n/a')};status={r['status']}")
+    for r in diff["ordering"]:
+        print(f"perf_gate_{r['check']},0.000,status={r['status']}")
+    if failures:
+        print(f"PERF GATE FAILED: {len(failures)} violation(s); see {args.out}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,8 @@ from repro.core.scenario import (
     ResizeWorkingSet,
     Scenario,
     ScenarioResult,
+    SetMigrationBandwidth,
+    pingpong_schedule,
 )
 from repro.core.simulator import OPTANE, ColocationSim, WorkloadSpec
 
@@ -142,9 +144,12 @@ def colocation_scenario(n_pages: int, n_epochs: int) -> Scenario:
     )
 
 
-def scenario_backends(n_pages: int, seed: int = 0) -> Dict[str, Callable]:
+def scenario_backends(n_pages: int, seed: int = 0, bounded: bool = False) -> Dict[str, Callable]:
     """All four policies on identical machine geometry (fast = P/8, the
-    paper's 128G/768G+128G ratio)."""
+    paper's 128G/768G+128G ratio). ``bounded=True`` puts MaxMem in
+    data-plane mode (migration queue sized 2x the budget) so
+    ``SetMigrationBandwidth`` events bound its drain; the instant-apply
+    baselines get the same events as per-epoch budget clamps."""
     fast = n_pages // 8
     # 12.5% of fast per epoch: half goes to reallocation, half to per-tenant
     # rebalance pairs, so a hot set of ~half the fast tier converges within
@@ -153,10 +158,12 @@ def scenario_backends(n_pages: int, seed: int = 0) -> Dict[str, Callable]:
     # HeMem: equal static thirds (the paper's Fig. 8 configuration); the
     # threshold separates the KVS hot set from cold data at this scale
     parts = {0: fast // 3, 1: fast // 3, 2: fast // 3}
+    mm_kw = dict(num_pages=n_pages, fast_capacity=fast, migration_budget=budget,
+                 max_tenants=8, sample_period=100, seed=seed)
+    if bounded:
+        mm_kw["queue_size"] = 2 * budget
     return {
-        "maxmem": lambda: CentralManager(
-            num_pages=n_pages, fast_capacity=fast, migration_budget=budget,
-            max_tenants=8, sample_period=100, seed=seed),
+        "maxmem": lambda: CentralManager(**mm_kw),
         "hemem": lambda: HeMemStatic(
             n_pages, fast, partitions=parts, hot_threshold=8,
             migration_budget=budget, seed=seed),
@@ -167,15 +174,56 @@ def scenario_backends(n_pages: int, seed: int = 0) -> Dict[str, Callable]:
 
 def run_scenario_all(
     sc: Scenario, n_pages: int, seed: int = 4, policy_chunk: int = 8,
+    bounded: bool = False,
 ) -> Dict[str, ScenarioResult]:
     out = {}
-    for name, mk in scenario_backends(n_pages).items():
+    for name, mk in scenario_backends(n_pages, bounded=bounded).items():
         chunk = policy_chunk if name == "maxmem" else 1
         sim = ColocationSim(mk(), OPTANE, seed=seed, policy_chunk=chunk)
         t0 = time.time()
         out[name] = sim.run_scenario(sc)
         out[name].wall_s = time.time() - t0
     return out
+
+
+# ------------------------------------ finite-bandwidth thrash scenario
+def thrash_scenario(n_pages: int, n_epochs: int) -> Scenario:
+    """Ping-pong working-set thrash under finite migration bandwidth.
+
+    Two tenants whose hot sets contend for the fast tier; after a warmup the
+    DMA bandwidth drops to a quarter of the migration budget and the KVS
+    hot set starts ping-ponging between two scatters faster than the queue
+    can drain — the regime where migration cost dominates (Jenga/TPP) and
+    the thrashing guard pays off. Bandwidth is restored for the final
+    phase so the recovery is visible in the per-phase columns. The bound
+    reaches MaxMem as a queue drain rate and HeMem/AutoNUMA as a budget
+    clamp (restored by the closing event); TwoLM is hardware-managed
+    placement — there is no migration engine to throttle — so it runs the
+    same timeline unbounded, exactly like real 2LM would."""
+    kvs = (3 * n_pages) // 8
+    gap = n_pages // 4
+    fast = n_pages // 8
+    budget = max(fast // 8, 8)
+    a, b = n_epochs // 8, (7 * n_epochs) // 8
+    period = max(n_epochs // 16, 2)
+    # hot + warm sets with a COLD (never-touched) tail: tenant-blind
+    # policies need idle fast pages to evict and a below-threshold warm
+    # class to separate, or they sit inert and the bandwidth bound is
+    # unobservable on them
+    return Scenario(
+        name=f"thrash_pingpong_{n_pages // 1024}k",
+        n_epochs=n_epochs,
+        events=(
+            Arrive(0, WorkloadSpec("kvs", n_pages=kvs, t_miss=0.2, threads=4,
+                                   sets=((0.18, 0.95), (0.4, 0.05)))),
+            Arrive(0, WorkloadSpec("gapbs", n_pages=gap, t_miss=0.4, threads=8,
+                                   sets=((0.2, 0.8), (0.4, 0.2)))),
+            SetMigrationBandwidth(a, max(budget // 4, 2)),
+            *pingpong_schedule("kvs", n_epochs // 4, b, period),
+            SetMigrationBandwidth(b, None),
+        ),
+        description="ping-pong working-set thrash under bounded DMA bandwidth",
+    )
 
 
 def scenarios_bench(smoke: bool = False) -> dict:
@@ -186,6 +234,10 @@ def scenarios_bench(smoke: bool = False) -> dict:
     sc = colocation_scenario(n_pages, n_epochs)
     results = run_scenario_all(sc, n_pages)
     steady = {k: r.steady_state.agg_throughput for k, r in results.items()}
+    # finite-bandwidth thrash: all four policies, MaxMem on the bounded
+    # queue data plane (per-phase migration-bytes + queue-depth columns)
+    tsc = thrash_scenario(n_pages, n_epochs)
+    thrash = run_scenario_all(tsc, n_pages, bounded=True)
     payload = {
         "scenario": {
             "name": sc.name, "n_pages": n_pages, "n_epochs": n_epochs,
@@ -199,6 +251,23 @@ def scenarios_bench(smoke: bool = False) -> dict:
         "maxmem_geq_all_baselines": bool(
             all(steady["maxmem"] >= v for k, v in steady.items() if k != "maxmem")
         ),
+        "thrash": {
+            "scenario": {
+                "name": tsc.name, "n_pages": n_pages, "n_epochs": n_epochs,
+                "events": [type(e).__name__ + "@" + str(e.epoch) for e in tsc.events],
+            },
+            "policies": {
+                k: {**r.to_jsonable(), "wall_s": round(r.wall_s, 2)}
+                for k, r in thrash.items()
+            },
+            "maxmem_migration_bytes": float(
+                sum(p.migration_bytes for p in thrash["maxmem"].phases)
+            ),
+            "maxmem_peak_queue_depth": int(
+                max(p.max_queue_depth for p in thrash["maxmem"].phases)
+            ),
+            "completed_policies": sorted(thrash),
+        },
     }
     if not smoke:
         vec = vectorization_bench()
@@ -294,6 +363,11 @@ def main(argv) -> int:
     for k, v in steady.items():
         print(f"scenario_steady_tput_{k},0.000,{v:.0f}")
     print(f"scenario_ordering,0.000,maxmem_geq_all={payload['maxmem_geq_all_baselines']}")
+    th = payload["thrash"]
+    print(f"thrash_scenario,0.000,"
+          f"policies={len(th['completed_policies'])};"
+          f"maxmem_migration_MB={th['maxmem_migration_bytes'] / 1e6:.1f};"
+          f"maxmem_peak_queue_depth={th['maxmem_peak_queue_depth']}")
     if not smoke:
         vec = payload["baseline_vectorization_64k"]
         for n in ("hemem", "autonuma", "twolm", "suite"):
@@ -306,6 +380,9 @@ def main(argv) -> int:
           f"{'smoke' if smoke else 'full'}")
     if not payload["maxmem_geq_all_baselines"]:
         print("FAIL: MaxMem steady-state aggregate throughput below a baseline")
+        return 1
+    if len(payload["thrash"]["completed_policies"]) != 4:
+        print("FAIL: thrash scenario did not complete on all four policies")
         return 1
     return 0
 

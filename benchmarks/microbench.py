@@ -123,6 +123,31 @@ def policy_bench() -> dict:
             entry["speedup_vs_seed"] = SEED_POLICY_EPOCH_64K_US / epoch_us
         out["policy_epoch"][str(P)] = entry
 
+        if P == 65536:
+            # queue-mode (bounded data plane) overhead over the instant tick
+            from repro.core.types import PolicyState
+
+            qstate = PolicyState.create(P, T, queue_size=2 * R)._replace(
+                pages=pages, tenants=tenants,
+                pending=jnp.asarray(rng.poisson(200, P), jnp.uint32),
+            )
+            qparams = params._replace(migration_bandwidth=jnp.int32(R // 2))
+
+            def queue_epoch():
+                st, _plan, _stats = policy.epoch_step(
+                    qstate, qparams, max_tenants=T, plan_size=R)
+                return st.pages.tier
+
+            q_us = _time(queue_epoch, n=n_rep)
+            out["policy_epoch_queue"] = {
+                str(P): {
+                    "us": q_us,
+                    "overhead_vs_instant": q_us / epoch_us,
+                    "queue_size": 2 * R,
+                    "bandwidth": R // 2,
+                }
+            }
+
         counts = rng.poisson(200, P).astype(np.int64)
         singles_us, scan_us = _bench_manager(P, T, R, counts, k=k)
         out["run_epochs_k16"][str(P)] = {
@@ -153,6 +178,12 @@ def run() -> Rows:
     rows.add(
         "micro_policy_epoch_256k_pages", pb["policy_epoch"]["262144"]["us"],
         f"pages=262144;tenants={T};budget={R}",
+    )
+    q = pb["policy_epoch_queue"]["65536"]
+    rows.add(
+        "micro_policy_epoch_64k_queue_mode", q["us"],
+        f"queue={q['queue_size']};bw={q['bandwidth']};"
+        f"overhead_vs_instant={q['overhead_vs_instant']:.2f}",
     )
     for p_key, label in (("65536", "64k"), ("262144", "256k")):
         d = pb["run_epochs_k16"][p_key]

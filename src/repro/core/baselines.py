@@ -258,7 +258,18 @@ class HeMemStatic(_BaselineBase):
 
 
 class AutoNUMALike(_BaselineBase):
-    """Tenant-blind promotion of recently-touched pages; no QoS, heavy churn."""
+    """Tenant-blind promotion of recently-touched pages; no QoS, heavy churn.
+
+    ``migration_budget=None`` (the default, and the golden-trace
+    configuration) migrates every qualifying page like real autonuma
+    balancing under no rate limit; an integer bounds total moves per epoch
+    (promotions + evictions), which is how the scenario engine's
+    ``SetMigrationBandwidth`` event reaches instant-apply baselines."""
+
+    def __init__(self, num_pages: int, fast_capacity: int, seed: int = 0,
+                 migration_budget: Optional[int] = None):
+        super().__init__(num_pages, fast_capacity, seed)
+        self.migration_budget = migration_budget
 
     def run_epoch(self):
         recent = self._pending
@@ -275,13 +286,23 @@ class AutoNUMALike(_BaselineBase):
         self.rng.shuffle(idle_fast)
         free_fast = self.fast_capacity - int(fast.sum())
         want = len(touched_slow)
-        # demote idle pages to make room (autonuma demotion to CPUless node)
-        need_evict = max(want - free_fast, 0)
-        evict = idle_fast[:need_evict]
+        if self.migration_budget is None:
+            # demote idle pages to make room (autonuma demotion to CPUless
+            # node); unbounded = the bit-exact golden-trace path
+            need_evict = max(want - free_fast, 0)
+            evict = idle_fast[:need_evict]
+            n_promo = free_fast + len(evict)
+        else:
+            # promotions into free room cost 1 move, beyond it 2 (evict +
+            # promote); fill free room first, then pair within the budget
+            b = int(self.migration_budget)
+            p_free = min(want, free_fast, b)
+            paired = min(want - p_free, len(idle_fast), max(b - p_free, 0) // 2)
+            evict = idle_fast[:paired]
+            n_promo = p_free + paired
         self.pages.tier[evict] = TIER_SLOW
         demoted = len(evict)
-        room = free_fast + demoted
-        promo = touched_slow[:room]
+        promo = touched_slow[:n_promo]
         self.pages.tier[promo] = TIER_FAST
         promoted = len(promo)
         self._pending[tp] = 0  # pending is nonzero exactly at tp

@@ -1,0 +1,155 @@
+"""Pool-backed page data plane: the Pallas-kernel-driven DMA analogue.
+
+``PagePool`` holds actual page *contents* in one device pool whose rows are
+physical frames: rows ``[0, F)`` are fast-tier frames, ``[F, F + P)`` slow
+frames, and the last row is the reserved trash row that pads fixed-size
+plans (the convention ``kernels/page_copy.py`` documents). A host-side frame
+table maps page id -> frame; the control plane (allocate/free) is host
+bookkeeping, while every data movement goes through the Pallas kernels:
+
+  * migrations  — ONE :func:`repro.kernels.page_copy.page_move` call per
+    drained batch: demote entries first (their vacated fast frames are
+    legally reused as promote destinations — the grid reads a row before
+    any later step writes it), then promotes, padded to a fixed plan size
+    with trash-row self-copies so plan shapes never retrace;
+  * bulk writes — tenant data is staged host-side and DMA'd into frames
+    with :func:`repro.kernels.page_copy.page_copy` (staging pool -> page
+    pool), again trash-padded to the fixed plan size.
+
+``CentralManager(data_plane_elems=...)`` owns a pool and feeds it the
+drained id lists from each epoch's queue tick (or the instant-apply plan),
+so simulated placements and actual page bytes can never diverge — which is
+what the data-integrity tests assert.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import TIER_FAST
+from repro.kernels.page_copy import page_copy, page_move
+
+
+class PagePool:
+    def __init__(
+        self,
+        num_pages: int,
+        fast_capacity: int,
+        row_elems: int = 128,
+        dtype=jnp.float32,
+        plan_slots: int = 64,
+        interpret: bool = True,
+    ):
+        self.num_pages = num_pages
+        self.fast_capacity = fast_capacity
+        self.row_elems = row_elems
+        self.plan_slots = plan_slots
+        self.interpret = interpret
+        self.trash = fast_capacity + num_pages  # reserved last row
+        self.pool = jnp.zeros((self.trash + 1, row_elems), dtype)
+        self.frame = np.full(num_pages, -1, np.int64)  # page -> frame row
+        # LIFO free lists; fast frames are scarce, slow frames can hold all
+        self._free_fast = list(range(fast_capacity - 1, -1, -1))
+        self._free_slow = list(range(self.trash - 1, fast_capacity - 1, -1))
+        self.moved_pages = 0  # cumulative pages DMA'd by migrations
+
+    # ------------------------------------------------------------ control
+    def on_allocate(self, page_ids: Sequence[int], tiers: Sequence[int]) -> None:
+        """Assign a frame (in the page's tier) to each newly allocated page."""
+        for p, t in zip(np.asarray(page_ids), np.asarray(tiers)):
+            free = self._free_fast if t == TIER_FAST else self._free_slow
+            self.frame[p] = free.pop()
+
+    def on_free(self, page_ids: Sequence[int]) -> None:
+        for p in np.asarray(page_ids):
+            f = int(self.frame[p])
+            if f < 0:
+                continue
+            (self._free_fast if f < self.fast_capacity else self._free_slow).append(f)
+            self.frame[p] = -1
+
+    # --------------------------------------------------------------- data
+    def write_pages(self, page_ids: Sequence[int], rows: np.ndarray) -> None:
+        """DMA tenant data into page frames (staging -> pool, page_copy)."""
+        ids = np.asarray(page_ids, np.int64)
+        rows = np.asarray(rows)
+        M = self.plan_slots
+        for lo in range(0, len(ids), M):
+            chunk = ids[lo : lo + M]
+            staging = np.zeros((M, self.row_elems), rows.dtype)
+            staging[: len(chunk)] = rows[lo : lo + len(chunk)]
+            src = np.arange(M, dtype=np.int32)
+            dst = np.full(M, self.trash, np.int32)
+            dst[: len(chunk)] = self.frame[chunk]
+            self.pool = page_copy(
+                jnp.asarray(staging, self.pool.dtype), self.pool,
+                jnp.asarray(src), jnp.asarray(dst), interpret=self.interpret,
+            )
+
+    def read_page(self, page_id: int) -> np.ndarray:
+        f = int(self.frame[page_id])
+        assert f >= 0, f"page {page_id} has no frame"
+        return np.asarray(self.pool[f])
+
+    # ---------------------------------------------------------- migration
+    def execute(self, demote_ids, promote_ids) -> int:
+        """Move drained pages across tiers; returns pages moved.
+
+        ``demote_ids``/``promote_ids`` are -1-padded id lists (the queue
+        tick's drained lists, or an instant-mode plan's sides). Demotes are
+        planned first so their vacated fast frames can serve as promote
+        destinations within the same ``page_move`` sweep — the sequential
+        grid reads every source row before a later step writes it (the
+        write-after-read contract ``tests/test_kernels.py`` locks).
+        """
+        dem = np.asarray(demote_ids).ravel()
+        pro = np.asarray(promote_ids).ravel()
+        dem = dem[dem >= 0]
+        pro = pro[pro >= 0]
+        src, dst = [], []
+        for p in dem:
+            f = int(self.frame[p])
+            src.append(f)
+            dst.append(self._free_slow.pop())
+            self.frame[p] = dst[-1]
+            self._free_fast.append(f)  # reusable by this batch's promotes
+        freed_slow = []
+        for p in pro:
+            f = int(self.frame[p])
+            src.append(f)
+            dst.append(self._free_fast.pop())
+            self.frame[p] = dst[-1]
+            freed_slow.append(f)  # released only after the sweep: a demote
+            # destination must never alias a row this sweep still reads
+        n = len(src)
+        M = self.plan_slots
+        for lo in range(0, n, M):
+            s = np.full(M, self.trash, np.int32)
+            d = np.full(M, self.trash, np.int32)
+            s[: len(src[lo : lo + M])] = src[lo : lo + M]
+            d[: len(dst[lo : lo + M])] = dst[lo : lo + M]
+            self.pool = page_move(
+                self.pool, jnp.asarray(s), jnp.asarray(d), interpret=self.interpret
+            )
+        self._free_slow.extend(freed_slow)
+        self.moved_pages += n
+        return n
+
+    # ------------------------------------------------------------- checks
+    def check(self, tier: Optional[np.ndarray] = None) -> None:
+        """Frame-table invariants (tests): frames are a bijection onto used
+        rows, fast frames exactly back fast-tier pages, free lists disjoint."""
+        used = self.frame[self.frame >= 0]
+        assert len(np.unique(used)) == len(used), "frame table not injective"
+        assert self.trash not in used, "trash row assigned to a page"
+        free = self._free_fast + self._free_slow
+        assert not set(free) & set(used.tolist()), "free list overlaps used"
+        assert len(set(free)) == len(free), "duplicate free frames"
+        assert len(free) + len(used) == self.trash, "frames leaked"
+        if tier is not None:
+            fast_pages = np.flatnonzero(np.asarray(tier) == TIER_FAST)
+            backed = self.frame[fast_pages]
+            assert (backed >= 0).all(), "fast page without a frame"
+            assert (backed < self.fast_capacity).all(), "fast page on slow frame"

@@ -16,12 +16,12 @@ Reallocation semantics implemented exactly as §3.1:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import PolicyParams, TenantState
+from repro.core.types import TenantState
 
 _EPS = 1e-9
 

@@ -35,7 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import policy
+from repro.core.dataplane import PagePool
 from repro.core.types import (
+    BANDWIDTH_UNLIMITED,
     TIER_FAST,
     TIER_NONE,
     TIER_SLOW,
@@ -66,6 +68,20 @@ class EpochResult:
     def fmmr(self, h: int) -> float:
         return float(self.stats.fmmr_ewma[h])
 
+    @property
+    def migrated_pages(self) -> int:
+        """Pages actually MOVED this epoch: queue drains in data-plane mode
+        (selections may still be in flight), plan selections otherwise."""
+        q = self.stats.queue
+        if q is not None:
+            return int(q.drained_promote) + int(q.drained_demote)
+        return int(self.plan.num_promote) + int(self.plan.num_demote)
+
+    @property
+    def queue_depth(self) -> int:
+        q = self.stats.queue
+        return 0 if q is None else int(q.depth)
+
 
 @dataclasses.dataclass
 class MultiEpochResult:
@@ -91,9 +107,22 @@ class MultiEpochResult:
 
     @property
     def migrated_per_epoch(self) -> np.ndarray:
-        """i64[k] pages moved each epoch (from the exact stats telemetry)."""
+        """i64[k] pages MOVED each epoch: drained commits in data-plane
+        mode, otherwise the selections from the exact stats telemetry."""
+        q = self.stats.queue
+        if q is not None:
+            return np.asarray(q.drained_promote, np.int64) + np.asarray(
+                q.drained_demote, np.int64
+            )
         moved = np.asarray(self.stats.promoted) + np.asarray(self.stats.demoted)
         return moved.sum(axis=1)
+
+    @property
+    def queue_depth_per_epoch(self) -> np.ndarray:
+        q = self.stats.queue
+        if q is None:
+            return np.zeros(len(self), np.int64)
+        return np.asarray(q.depth, np.int64)
 
 
 class CentralManager:
@@ -109,8 +138,26 @@ class CentralManager:
         fair_mode: bool = False,
         seed: int = 0,
         exact_sampling: bool = False,
+        queue_size: int = 0,
+        migration_bandwidth: Optional[int] = None,
+        migration_latency: int = 0,
+        data_plane_elems: Optional[int] = None,
     ):
+        """``queue_size > 0`` enables the asynchronous migration data plane
+        (DESIGN.md §4): selections are queued and committed by a bounded
+        per-epoch drain of ``migration_bandwidth`` pages (None = unlimited)
+        after ``migration_latency`` epochs in flight. The default
+        ``queue_size=0`` is the instant-apply engine, bit-identical to the
+        pre-data-plane behavior. ``data_plane_elems`` additionally backs
+        every page with ``data_plane_elems`` elements of real content in a
+        :class:`~repro.core.dataplane.PagePool`; drained migrations then
+        move actual bytes through the Pallas page-move kernel."""
         assert fast_capacity <= num_pages
+        if migration_bandwidth is not None and queue_size == 0:
+            raise ValueError(
+                "finite migration_bandwidth requires the queue data plane: "
+                "pass queue_size > 0"
+            )
         self.num_pages = num_pages
         self.max_tenants = max_tenants
         self.params = PolicyParams(
@@ -120,13 +167,33 @@ class CentralManager:
             ewma_lambda=jnp.float32(ewma_lambda),
             sample_period=jnp.int32(sample_period),
             fair_mode=fair_mode,
+            migration_bandwidth=jnp.int32(
+                BANDWIDTH_UNLIMITED if migration_bandwidth is None
+                else migration_bandwidth
+            ),
+            migration_latency=jnp.int32(migration_latency),
         )
         self.plan_size = int(migration_budget)
-        self._state = PolicyState.create(num_pages, max_tenants, seed=seed)
+        self.queue_size = int(queue_size)
+        self._state = PolicyState.create(
+            num_pages, max_tenants, seed=seed, queue_size=queue_size
+        )
         self._arrival_seq = 0
         self.exact_sampling = exact_sampling
         self.epoch_index = 0
         self._snap: Optional[Dict[str, np.ndarray]] = None
+        # cumulative queue counters (conservation invariant, tests):
+        # enqueued == drained + cancelled + dropped + queue_depth()
+        self.queue_enqueued = 0
+        self.queue_drained = 0
+        self.queue_cancelled = 0
+        self.queue_dropped = 0
+        self.pool: Optional[PagePool] = None
+        if data_plane_elems is not None:
+            self.pool = PagePool(
+                num_pages, fast_capacity, row_elems=data_plane_elems,
+                plan_slots=max(2 * self.plan_size, 8),
+            )
 
     # --------------------------------------------------------- state views
     @property
@@ -213,6 +280,8 @@ class CentralManager:
         self.pages = self.pages._replace(
             tier=jnp.asarray(new_tier), owner=jnp.asarray(new_owner)
         )
+        if self.pool is not None:
+            self.pool.on_allocate(take, new_tier[take])
         return take
 
     def free(self, h: TenantHandle, page_ids: Sequence[int]) -> None:
@@ -243,6 +312,26 @@ class CentralManager:
         pending = np.asarray(self._state.pending).copy()
         pending[ids] = 0
         self._state = self._state._replace(pending=jnp.asarray(pending))
+        # scrub queued migrations of the freed pages NOW (not at the next
+        # epoch's ownership guard): the slots may be re-allocated before the
+        # next tick and a stale entry would then migrate the new owner's page
+        queue = self._state.queue
+        if queue is not None and queue.size:
+            qp = np.asarray(queue.page)
+            stale = (qp >= 0) & np.isin(qp, ids)
+            if stale.any():
+                qp = qp.copy()
+                qp[stale] = -1
+                qd = np.asarray(queue.direction).copy()
+                qd[stale] = 0
+                self._state = self._state._replace(
+                    queue=queue._replace(
+                        page=jnp.asarray(qp), direction=jnp.asarray(qd)
+                    )
+                )
+                self.queue_cancelled += int(stale.sum())
+        if self.pool is not None:
+            self.pool.on_free(ids)
 
     # ------------------------------------------------------------- accesses
     def record_access(self, counts: np.ndarray) -> None:
@@ -255,6 +344,14 @@ class CentralManager:
         )
 
     # ------------------------------------------------------------- epoch
+    def _fold_queue_stats(self, q) -> None:
+        self.queue_enqueued += int(np.asarray(q.enqueued).sum())
+        self.queue_drained += int(
+            np.asarray(q.drained_promote).sum() + np.asarray(q.drained_demote).sum()
+        )
+        self.queue_cancelled += int(np.asarray(q.cancelled).sum())
+        self.queue_dropped += int(np.asarray(q.dropped).sum())
+
     def run_epoch(self) -> EpochResult:
         """Policy-thread tick: sample -> policy -> migrate, one dispatch."""
         self._state, plan, stats = policy.epoch_step(
@@ -266,6 +363,15 @@ class CentralManager:
         )
         self.epoch_index += 1
         self._snap = None
+        if stats.queue is not None:
+            self._fold_queue_stats(stats.queue)
+            if self.pool is not None:
+                self.pool.execute(
+                    np.asarray(stats.queue.drained_demote_ids),
+                    np.asarray(stats.queue.drained_promote_ids),
+                )
+        elif self.pool is not None:
+            self.pool.execute(np.asarray(plan.demote), np.asarray(plan.promote))
         return EpochResult(stats=stats, plan=plan, flags=np.asarray(self._state.tenants.flagged))
 
     def run_epochs(
@@ -293,11 +399,69 @@ class CentralManager:
             max_tenants=self.max_tenants,
             plan_size=self.plan_size,
             exact_sampling=self.exact_sampling,
-            collect_plans=collect_plans,
+            collect_plans=collect_plans or (self.pool is not None and not self.queue_size),
         )
         self.epoch_index += k
         self._snap = None
+        if stats.queue is not None:
+            self._fold_queue_stats(stats.queue)
+            if self.pool is not None:
+                dem = np.asarray(stats.queue.drained_demote_ids)
+                pro = np.asarray(stats.queue.drained_promote_ids)
+                for i in range(k):
+                    self.pool.execute(dem[i], pro[i])
+        elif self.pool is not None:
+            dem = np.asarray(plans.demote)
+            pro = np.asarray(plans.promote)
+            for i in range(k):
+                self.pool.execute(dem[i], pro[i])
         return MultiEpochResult(stats=stats, plans=plans, flags=np.asarray(flagged))
+
+    # ------------------------------------------------------- data plane
+    @property
+    def migration_bounded(self) -> bool:
+        """True when the data-plane queue actually paces migrations (a
+        finite bandwidth is set). The simulator's DMA-stall model only
+        applies to backends whose drain is NOT already paced."""
+        return self.queue_size > 0 and int(self.params.migration_bandwidth) >= 0
+
+    def set_migration_bandwidth(self, pages_per_epoch: Optional[int]) -> None:
+        """Dynamically bound the migration drain (None = unlimited). The
+        bandwidth is a traced policy parameter: no recompilation. An
+        instant-apply manager (queue_size=0) has no drain to bound — a
+        finite request there would be silently ignored while the same
+        scenario event clamps the baselines, so it fails loudly instead."""
+        if pages_per_epoch is not None and self.queue_size == 0:
+            raise ValueError(
+                "finite migration_bandwidth requires the queue data plane: "
+                "construct CentralManager(queue_size > 0)"
+            )
+        self.params = self.params._replace(
+            migration_bandwidth=jnp.int32(
+                BANDWIDTH_UNLIMITED if pages_per_epoch is None else pages_per_epoch
+            )
+        )
+
+    def set_migration_latency(self, epochs: int) -> None:
+        self.params = self.params._replace(migration_latency=jnp.int32(epochs))
+
+    def queue_depth(self) -> int:
+        """In-flight migrations right now (0 when the queue is off)."""
+        queue = self._state.queue
+        if queue is None or not queue.size:
+            return 0
+        return int((np.asarray(queue.page) >= 0).sum())
+
+    def queue_counters(self) -> Dict[str, int]:
+        """Cumulative data-plane counters; conservation must always hold:
+        enqueued == drained + cancelled + dropped + depth."""
+        return {
+            "enqueued": self.queue_enqueued,
+            "drained": self.queue_drained,
+            "cancelled": self.queue_cancelled,
+            "dropped": self.queue_dropped,
+            "depth": self.queue_depth(),
+        }
 
     # ------------------------------------------------------------- telemetry
     def tiers(self) -> np.ndarray:

@@ -35,13 +35,17 @@ import jax.numpy as jnp
 from repro.core import bins, fmmr
 from repro.core.sampler import sample_accesses
 from repro.core.types import (
+    DIR_DEMOTE,
+    DIR_PROMOTE,
     TIER_FAST,
     TIER_SLOW,
     EpochStats,
     MigrationPlan,
+    MigrationQueue,
     PageState,
     PolicyParams,
     PolicyState,
+    QueueStats,
     TenantState,
 )
 
@@ -190,12 +194,19 @@ def _epoch_core(
     plan_size: int,
     count_clamp: int,
     collect_plan: bool,
+    exclude: Optional[jax.Array] = None,  # bool[P] pages barred from selection
 ):
     """One policy epoch; trace-time body shared by all jitted entry points.
 
     Returns (pages, tenants, promote_mask, demote_mask, plan | None, stats).
     ``pages`` still carries pre-migration tiers; callers apply the masks (or
     the plan) themselves so data movement can be scheduled separately.
+
+    ``exclude`` (queue mode) removes in-flight pages from the candidate
+    sets so a queued migration is never re-selected; holdings telemetry and
+    the free-fast computation still count them — an in-flight page keeps
+    serving from (and occupying) its source tier until the drain commits.
+    With ``exclude=None`` the trace is the original instant-apply program.
     """
     P = pages.owner.shape[0]
     T = max_tenants
@@ -225,6 +236,9 @@ def _epoch_core(
     owner = jnp.maximum(pages.owner, 0)
     slow_cand = is_owned & is_slow
     fast_cand = is_owned & is_fast
+    if exclude is not None:
+        slow_cand = slow_cand & ~exclude
+        fast_cand = fast_cand & ~exclude
     key = jnp.minimum(eff.astype(jnp.int32), C - 1)
     flat = jnp.where(
         slow_cand,
@@ -238,12 +252,18 @@ def _epoch_core(
     cum_fast = jnp.cumsum(hist_fast, axis=1)
     n_slow_cand = cum_slow[:, -1]  # == per-tenant slow-page holdings
     n_fast_cand = cum_fast[:, -1]  # == per-tenant fast-page holdings
+    if exclude is None:
+        fast_hold, slow_hold = n_fast_cand, n_slow_cand
+    else:
+        # in-flight pages are excluded from the candidate histograms but
+        # still occupy their source tier: holdings must count them
+        fast_hold, slow_hold = _per_tenant_pages(pages, max_tenants)
 
     # ---- 3. proportional reallocation (budget R/2) ---------------------------
-    free_fast = params.fast_capacity - n_fast_cand.sum()
+    free_fast = params.fast_capacity - fast_hold.sum()
     realloc_budget = params.migration_budget // 2
     ra = fmmr.reallocate(
-        tenants, n_fast_cand, free_fast, realloc_budget,
+        tenants, fast_hold, free_fast, realloc_budget,
         fair_mode=params.fair_mode, hysteresis=params.hysteresis,
     )
     tenants = tenants._replace(flagged=ra.flagged)
@@ -317,8 +337,8 @@ def _epoch_core(
     stats = EpochStats(
         fmmr_now=now,
         fmmr_ewma=ewma,
-        fast_pages=n_fast_cand,
-        slow_pages=n_slow_cand,
+        fast_pages=fast_hold,
+        slow_pages=slow_hold,
         promoted=promoted,
         demoted=demoted,
         cooled=cooled,
@@ -374,6 +394,166 @@ def apply_plan(pages: PageState, plan: MigrationPlan) -> PageState:
     return _apply_plan_core(pages, plan)
 
 
+# --------------------------------------------------------------------------
+# Bounded-bandwidth asynchronous migration data plane (DESIGN.md §4).
+# --------------------------------------------------------------------------
+
+def _compact(mask, out_len: int, arrays, pads):
+    """Stable-compact entries where ``mask`` holds to the front of fresh
+    arrays of length ``out_len`` (entries beyond it are dropped — callers
+    count them as overflow). One cumsum + one scatter per array."""
+    pos = jnp.cumsum(mask) - 1
+    idx = jnp.where(mask & (pos < out_len), pos, out_len)
+    return [
+        jnp.full((out_len + 1,), pad, a.dtype).at[idx].set(a, mode="drop")[:out_len]
+        for a, pad in zip(arrays, pads)
+    ]
+
+
+def _inflight_mask(state: PolicyState) -> Optional[jax.Array]:
+    """bool[P] pages with a queued migration (None when the queue is off)."""
+    queue = state.queue
+    if queue is None or queue.size == 0:
+        return None
+    P = state.pending.shape[0]
+    idx = jnp.where(queue.page >= 0, queue.page, P)
+    return jnp.zeros((P,), bool).at[idx].set(True, mode="drop")
+
+
+def _queue_tick(
+    queue: MigrationQueue,
+    plan: MigrationPlan,
+    pages: PageState,
+    tenants: TenantState,
+    params: PolicyParams,
+    epoch: jax.Array,  # i32[] current epoch (the queue clock)
+):
+    """Enqueue this epoch's selections, then drain the FIFO under the
+    bandwidth/latency budget and commit the drained tier flips.
+
+    Semantics (all inside the fused tick, fixed shapes throughout):
+      * commit-on-completion — tier metadata changes only when an entry
+        drains, so in-flight pages keep serving from their source tier;
+      * thrashing guard — queued demotions whose page re-heated (hotness
+        bin rose above its enqueue-time bin) are cancelled, as are entries
+        whose page was freed;
+      * drain order — demotions first (they free the fast slots promotions
+        need: fast occupancy can never exceed capacity mid-flight), FIFO
+        within each direction, promotions additionally capped by free fast
+        room; at most ``migration_bandwidth`` total commits per epoch;
+      * overflow — entries that neither drain nor fit the fixed queue are
+        dropped newest-first (the policy re-selects them next epoch since
+        the tiers did not change).
+
+    With ``bandwidth=BANDWIDTH_UNLIMITED`` and ``latency=0`` every entry
+    drains in its enqueue epoch: placements are identical to instant apply
+    and the queue is empty at every epoch boundary.
+    """
+    Q = queue.size
+    S = plan.promote.shape[0]
+    W = Q + 2 * S  # workspace: worst-case live entries this epoch
+    P = pages.tier.shape[0]
+
+    heat_bin = bins.bin_of(bins.effective_count(pages, tenants), params.num_bins)
+
+    # ---- thrashing / ownership guard on the in-flight entries --------------
+    valid = queue.page >= 0
+    qp = jnp.maximum(queue.page, 0)
+    owned = pages.owner[qp] >= 0
+    reheat = valid & (queue.direction == DIR_DEMOTE) & (heat_bin[qp] > queue.heat)
+    cancel = valid & (~owned | reheat)
+    keep = valid & ~cancel
+    n_cancel = cancel.sum()
+
+    # ---- enqueue: kept entries first (FIFO), then new demotes, promotes ----
+    lat = jnp.maximum(params.migration_latency, 0)
+
+    def _new(ids, direction):
+        v = ids >= 0
+        pid = jnp.maximum(ids, 0)
+        return (
+            ids,
+            jnp.where(v, jnp.int8(direction), jnp.int8(0)),
+            jnp.full((S,), epoch, jnp.int32),
+            jnp.full((S,), epoch + lat, jnp.int32),
+            jnp.where(v, heat_bin[pid], 0),
+        )
+
+    nd, npr = _new(plan.demote, DIR_DEMOTE), _new(plan.promote, DIR_PROMOTE)
+    w_page = jnp.concatenate([jnp.where(keep, queue.page, -1), nd[0], npr[0]])
+    w_dir = jnp.concatenate([queue.direction, nd[1], npr[1]])
+    w_enq = jnp.concatenate([queue.enqueue_epoch, nd[2], npr[2]])
+    w_cmp = jnp.concatenate([queue.complete_epoch, nd[3], npr[3]])
+    w_heat = jnp.concatenate([queue.heat, nd[4], npr[4]])
+    n_new = (plan.promote >= 0).sum() + (plan.demote >= 0).sum()
+
+    c_page, c_dir, c_enq, c_cmp, c_heat = _compact(
+        w_page >= 0, W, (w_page, w_dir, w_enq, w_cmp, w_heat), (-1, 0, 0, 0, 0)
+    )
+
+    # ---- bounded drain: demotes first, FIFO within each direction ----------
+    cv = c_page >= 0
+    elig = cv & (epoch >= c_cmp)
+    bw = jnp.where(
+        params.migration_bandwidth < 0,
+        jnp.int32(jnp.iinfo(jnp.int32).max),
+        params.migration_bandwidth,
+    ).astype(jnp.int32)
+    is_d = elig & (c_dir == DIR_DEMOTE)
+    is_p = elig & (c_dir == DIR_PROMOTE)
+    drain_d = is_d & (jnp.cumsum(is_d) <= bw)
+    n_d = drain_d.sum()
+    fast_occ = (pages.tier == TIER_FAST).sum()
+    room = params.fast_capacity - (fast_occ - n_d)
+    drain_p = is_p & (jnp.cumsum(is_p) <= jnp.minimum(bw - n_d, room))
+    n_p = drain_p.sum()
+
+    # commit-on-completion: tier flips only for the drained entries
+    tier = pages.tier
+    tier = tier.at[jnp.where(drain_d, c_page, P)].set(jnp.int8(TIER_SLOW), mode="drop")
+    tier = tier.at[jnp.where(drain_p, c_page, P)].set(jnp.int8(TIER_FAST), mode="drop")
+    pages = pages._replace(tier=tier)
+
+    (drained_d_ids,) = _compact(drain_d, W, (c_page,), (-1,))
+    (drained_p_ids,) = _compact(drain_p, W, (c_page,), (-1,))
+
+    # ---- survivors back into the fixed queue; overflow drops the newest ----
+    left = cv & ~drain_d & ~drain_p
+    n_drop = jnp.maximum(left.sum() - Q, 0)
+    q_page, q_dir, q_enq, q_cmp, q_heat = _compact(
+        left, Q, (c_page, c_dir, c_enq, c_cmp, c_heat), (-1, 0, 0, 0, 0)
+    )
+    new_queue = MigrationQueue(
+        page=q_page, direction=q_dir, enqueue_epoch=q_enq,
+        complete_epoch=q_cmp, heat=q_heat,
+    )
+    qstats = QueueStats(
+        depth=(q_page >= 0).sum(),
+        enqueued=n_new,
+        drained_promote=n_p,
+        drained_demote=n_d,
+        cancelled=n_cancel,
+        dropped=n_drop,
+        drained_promote_ids=drained_p_ids,
+        drained_demote_ids=drained_d_ids,
+    )
+    return pages, new_queue, qstats
+
+
+def _commit(state, pages, tenants, pm, dm, plan, stats, params):
+    """Apply this epoch's migrations: instantly (zero-capacity queue — the
+    original engine, bit-identical) or through the bounded queue tick.
+    Returns (pages', queue', epoch', stats'). The branch is on a static
+    array shape, so each mode traces to its own program."""
+    queue = state.queue
+    if queue is None or queue.size == 0:
+        pages = _apply_masks(pages, pm, dm)
+        epoch = None if state.epoch is None else state.epoch + 1
+        return pages, queue, epoch, stats
+    pages, queue, qstats = _queue_tick(queue, plan, pages, tenants, params, state.epoch)
+    return pages, queue, state.epoch + 1, stats._replace(queue=qstats)
+
+
 def _epoch_step_impl(
     state: PolicyState,
     params: PolicyParams,
@@ -387,12 +567,13 @@ def _epoch_step_impl(
     sampled = sample_accesses(sub, state.pending, params.sample_period, exact=exact_sampling)
     pages, tenants, pm, dm, plan, stats = _epoch_core(
         state.pages, state.tenants, sampled, params, max_tenants, plan_size,
-        count_clamp, collect_plan=True,
+        count_clamp, collect_plan=True, exclude=_inflight_mask(state),
     )
-    pages = _apply_masks(pages, pm, dm)
-    new_state = PolicyState(
+    pages, queue, epoch, stats = _commit(state, pages, tenants, pm, dm, plan, stats, params)
+    new_state = state._replace(
         pages=pages, tenants=tenants,
         pending=jnp.zeros_like(state.pending), rng=rng,
+        queue=queue, epoch=epoch,
     )
     return new_state, plan, stats
 
@@ -457,6 +638,10 @@ def _multi_epoch_impl(
     if not exact_sampling:
         xs_z = jax.random.normal(jax.random.fold_in(state.rng, 0x5A), (k, P), jnp.float32)
 
+    # the queue tick consumes the plan id lists, so queue mode always
+    # collects them internally even when the caller does not want them out
+    queue_mode = state.queue is not None and state.queue.size > 0
+
     def step(st: PolicyState, x):
         x_counts, z = x
         pending = st.pending
@@ -470,14 +655,16 @@ def _multi_epoch_impl(
         )
         pages, tenants, pm, dm, plan, stats = _epoch_core(
             st.pages, st.tenants, sampled, params, max_tenants, plan_size,
-            count_clamp, collect_plan=collect_plans,
+            count_clamp, collect_plan=collect_plans or queue_mode,
+            exclude=_inflight_mask(st),
         )
-        pages = _apply_masks(pages, pm, dm)
-        st2 = PolicyState(
+        pages, queue, epoch, stats = _commit(st, pages, tenants, pm, dm, plan, stats, params)
+        st2 = st._replace(
             pages=pages, tenants=tenants,
             pending=jnp.zeros_like(pending), rng=rng,
+            queue=queue, epoch=epoch,
         )
-        return st2, (plan, stats, tenants.flagged)
+        return st2, (plan if collect_plans else None, stats, tenants.flagged)
 
     state, (plans, stats, flagged) = jax.lax.scan(step, state, (xs_counts, xs_z), length=k)
     return state, plans, stats, flagged

@@ -21,15 +21,23 @@ in the order they appear in ``Scenario.events``):
   ``SkewChange(...)``           change a set's share of accesses (hotness
                                 skew), page footprint unchanged
   ``Retarget(...)``             dynamic QoS t_miss update (paper §3.3)
+  ``PingPongShift(...)``        toggle the working set between two fixed
+                                scatters — the thrash schedule that makes
+                                bounded migration bandwidth observable
+  ``SetMigrationBandwidth(...)`` bound the backend's migration drain
+                                (pages/epoch; None = unlimited); backends
+                                without a data plane clamp their per-epoch
+                                migration budget instead
 
 Epoch boundaries at which any event fires split the timeline into *phases*;
-:class:`ScenarioResult` aggregates per-tenant throughput/p99/FMMR per phase,
-which is exactly the shape of the paper's Fig. 7-9 curves.
+:class:`ScenarioResult` aggregates per-tenant throughput/p99/FMMR per phase
+(plus migration bytes and mean queue depth), which is exactly the shape of
+the paper's Fig. 7-9 curves.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -114,8 +122,58 @@ class Retarget:
         return f"{self.name}.t={self.t_miss:g}"
 
 
+@dataclass(frozen=True)
+class PingPongShift:
+    epoch: int
+    name: str
+
+    def apply(self, sim: ColocationSim) -> None:
+        sim.tenants[self.name].pingpong_shift()
+
+    def label(self) -> str:
+        return f"{self.name}.pingpong"
+
+
+@dataclass(frozen=True)
+class SetMigrationBandwidth:
+    epoch: int
+    pages_per_epoch: Optional[int]  # None = unlimited
+
+    def apply(self, sim: ColocationSim) -> None:
+        backend = sim.backend
+        if hasattr(backend, "set_migration_bandwidth"):
+            backend.set_migration_bandwidth(self.pages_per_epoch)
+            return
+        if not hasattr(backend, "migration_budget"):
+            # hardware-managed placement (TwoLM): every access IS the
+            # insertion path — there is no migration engine to throttle
+            return
+        # instant-apply baselines (HeMem, AutoNUMA): their per-epoch budget
+        # IS the bandwidth. Stash the configured value on first clamp so a
+        # later None event restores it rather than leaving the clamp behind.
+        if not hasattr(backend, "_unclamped_migration_budget"):
+            backend._unclamped_migration_budget = backend.migration_budget
+        if self.pages_per_epoch is None:
+            backend.migration_budget = backend._unclamped_migration_budget
+        else:
+            backend.migration_budget = int(self.pages_per_epoch)
+
+    def label(self) -> str:
+        bw = "inf" if self.pages_per_epoch is None else self.pages_per_epoch
+        return f"bw={bw}"
+
+
 ScenarioEvent = Union[Arrive, Depart, ResizeWorkingSet, ShiftWorkingSet,
-                      SkewChange, Retarget]
+                      SkewChange, Retarget, PingPongShift, SetMigrationBandwidth]
+
+
+def pingpong_schedule(name: str, start: int, end: int, period: int) -> Tuple[PingPongShift, ...]:
+    """A ping-pong thrash schedule: flip ``name``'s working set every
+    ``period`` epochs in ``[start, end)`` — each flip returns the hot set to
+    pages the policy may still be draining, so queued demotions keep
+    re-heating (the thrashing-guard regime)."""
+    assert period > 0
+    return tuple(PingPongShift(e, name) for e in range(start, end, period))
 
 
 # ---------------------------------------------------------------- scenario
@@ -169,6 +227,9 @@ class PhaseStats:
     agg_throughput: float  # mean over epochs of sum-over-tenants ops/s
     mean_p99: float  # mean over (epoch, tenant) p99 seconds
     migrated_pages: int
+    migration_bytes: float = 0.0  # committed migration traffic in the phase
+    mean_queue_depth: float = 0.0  # mean in-flight migrations per epoch
+    max_queue_depth: int = 0
 
     def to_jsonable(self) -> dict:
         return {
@@ -179,6 +240,9 @@ class PhaseStats:
             "p99_us": {k: v * 1e6 for k, v in self.p99.items()},
             "fmmr": self.fmmr,
             "migrated_pages": self.migrated_pages,
+            "migration_bytes": self.migration_bytes,
+            "mean_queue_depth": self.mean_queue_depth,
+            "max_queue_depth": self.max_queue_depth,
         }
 
 
@@ -212,12 +276,16 @@ def _phase_stats(history: List[EpochRecord], start: int, end: int, label: str) -
         fmmr[nm] = float(np.mean([r.fmmr_true[nm] for r in recs if nm in r.fmmr_true]))
     agg = float(np.mean([sum(r.throughput.values()) for r in recs])) if recs else 0.0
     all_p99 = [v for r in recs for v in r.p99.values()]
+    depths = [r.queue_depth for r in recs]
     return PhaseStats(
         label=label, start=start, end=end,
         throughput=tput, p99=p99, fmmr=fmmr,
         agg_throughput=agg,
         mean_p99=float(np.mean(all_p99)) if all_p99 else 0.0,
         migrated_pages=int(sum(r.migrated_pages for r in recs)),
+        migration_bytes=float(sum(r.migration_bytes for r in recs)),
+        mean_queue_depth=float(np.mean(depths)) if depths else 0.0,
+        max_queue_depth=int(max(depths, default=0)),
     )
 
 
@@ -225,7 +293,7 @@ def _phase_stats(history: List[EpochRecord], start: int, end: int, label: str) -
 def run_scenario(
     sim: ColocationSim,
     scenario: Scenario,
-    on_event: Optional[callable] = None,
+    on_event: Optional[Callable] = None,
 ) -> ScenarioResult:
     """Execute ``scenario`` on ``sim`` (any backend) and aggregate phases.
 

@@ -19,12 +19,11 @@ matching the paper's qualitative claims.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.manager import CentralManager
 from repro.core.types import TIER_FAST, TIER_SLOW
 
 
@@ -116,6 +115,19 @@ class TenantSim:
         self._perm = self.rng.permutation(len(self.page_ids))
         self.probs = self._build_probs(self.spec, len(self.page_ids))[self._perm]
 
+    def pingpong_shift(self):
+        """Ping-pong working-set thrash (scenario event ``PingPongShift``):
+        toggle between the CURRENT scatter and one fixed alternate. Unlike
+        :meth:`shift_sets` the hot set keeps returning to pages the policy
+        may still be demoting — the schedule that makes migration cost (and
+        the thrashing guard) observable under finite bandwidth."""
+        if not hasattr(self, "_pp_perms"):
+            self._pp_perms = (self._perm, self.rng.permutation(len(self.page_ids)))
+            self._pp_side = 0
+        self._pp_side ^= 1
+        self._perm = self._pp_perms[self._pp_side]
+        self.probs = self._build_probs(self.spec, len(self.page_ids))[self._perm]
+
     def miss_ratio(self, tier: np.ndarray) -> float:
         t = tier[self.page_ids]
         return float(self.probs[t == TIER_SLOW].sum())
@@ -131,8 +143,10 @@ class EpochRecord:
     p50: Dict[str, float]
     p90: Dict[str, float]
     p99: Dict[str, float]
-    migrated_pages: int
+    migrated_pages: int  # pages COMMITTED this epoch (drains in queue mode)
     stalled: bool
+    migration_bytes: float = 0.0  # committed bytes charged to the slow tier
+    queue_depth: int = 0  # in-flight migrations after the epoch
 
 
 class ColocationSim:
@@ -254,7 +268,7 @@ class ColocationSim:
 
     def _record(
         self, names, miss, tput, measured, fast_pages, mig_frac, fast_op, slow_op,
-        migrated, stalled,
+        migrated, stalled, queue_depth=0,
     ) -> EpochRecord:
         """Assemble the per-epoch telemetry dicts from the tenant-axis arrays."""
         quant = {}
@@ -274,6 +288,8 @@ class ColocationSim:
             p99=quant[0.99],
             migrated_pages=int(migrated),
             stalled=stalled,
+            migration_bytes=float(migrated) * self.machine.page_bytes,
+            queue_depth=int(queue_depth),
         )
         self.history.append(rec)
         return rec
@@ -303,14 +319,31 @@ class ColocationSim:
         # policy tick (may be stalled by over-requested migration, Fig. 9)
         stalled = self._stall_epochs >= 1.0
         migrated = 0
+        queue_depth = 0
         if stalled:
             self._stall_epochs -= 1.0
+            # the policy thread is frozen but queued migrations are still
+            # in flight: report the live depth, not 0
+            if hasattr(self.backend, "queue_depth"):
+                queue_depth = self.backend.queue_depth()
         else:
             result = self.backend.run_epoch()
-            migrated = int(result.plan.num_promote) + int(result.plan.num_demote)
+            mp = getattr(result, "migrated_pages", None)
+            # queue-mode backends report COMMITTED moves (selections may
+            # still be in flight); instant backends report the plan
+            migrated = (
+                mp if mp is not None
+                else int(result.plan.num_promote) + int(result.plan.num_demote)
+            )
+            queue_depth = getattr(result, "queue_depth", 0)
             mig_bytes = migrated * m.page_bytes
             mig_time = mig_bytes / (m.migration_GBps * 1e9)
-            if mig_time > self.epoch_s:
+            # a backend whose drain is ALREADY paced by a finite bandwidth
+            # models its own DMA contention; everyone else (instant apply,
+            # or a queue with unlimited bandwidth dumping its backlog) is
+            # subject to the over-requested-migration stall (Fig. 9)
+            paced = getattr(self.backend, "migration_bounded", False)
+            if mig_time > self.epoch_s and not paced:
                 self._stall_epochs += mig_time / self.epoch_s - 1.0
 
         # recompute latency including migration interference
@@ -328,7 +361,7 @@ class ColocationSim:
         fast_pages = (page_mask & (owner >= 0)[None, :] & (tier == TIER_FAST)[None, :]).sum(axis=1)
         return self._record(
             names, miss, tput, measured, fast_pages, mig_frac, fast_op, slow_op,
-            migrated, stalled,
+            migrated, stalled, queue_depth=queue_depth,
         )
 
     def run_chunk(self, k: int) -> List[EpochRecord]:
@@ -351,13 +384,19 @@ class ColocationSim:
         fmmr_now = np.asarray(res.stats.fmmr_now)[:, handles]  # [k, n]
         # stats.fast_pages is the holding BEFORE that epoch's migration; add
         # the epoch's own moves so chunked records match the single-step
-        # path's post-migration read (ownership is static within a chunk)
-        fastp = (
-            np.asarray(res.stats.fast_pages)
-            + np.asarray(res.stats.promoted)
-            - np.asarray(res.stats.demoted)
-        )[:, handles]
+        # path's post-migration read (ownership is static within a chunk).
+        # In queue mode selections are not commits: the next epoch's holdings
+        # already reflect the bounded drain, so no adjustment is sound there.
+        if getattr(res.stats, "queue", None) is not None:
+            fastp = np.asarray(res.stats.fast_pages)[:, handles]
+        else:
+            fastp = (
+                np.asarray(res.stats.fast_pages)
+                + np.asarray(res.stats.promoted)
+                - np.asarray(res.stats.demoted)
+            )[:, handles]
         migrated = res.migrated_per_epoch
+        depth = res.queue_depth_per_epoch
         measured_k = np.asarray(res.stats.fmmr_ewma)[:, handles]
         tier_end = np.asarray(self.backend.tiers())
         miss_end = (M * (tier_end == TIER_SLOW)[None, :]).sum(axis=1)
@@ -369,7 +408,7 @@ class ColocationSim:
             mig_frac = min(mig_bytes / max(m.page_bytes, 1) / max(self.backend.num_pages, 1), 1.0)
             self._record(
                 names, miss, threads / lat, measured_k[i], fastp[i], mig_frac,
-                fast_op, slow_op, migrated[i], stalled=False,
+                fast_op, slow_op, migrated[i], stalled=False, queue_depth=depth[i],
             )
         return self.history[-k:]
 

@@ -8,7 +8,7 @@ Tier encoding per page: -1 unallocated, 0 slow, 1 fast.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +16,14 @@ import jax.numpy as jnp
 TIER_NONE = -1
 TIER_SLOW = 0
 TIER_FAST = 1
+
+# Migration-queue entry directions (core/policy.py data plane).
+DIR_NONE = 0
+DIR_PROMOTE = 1
+DIR_DEMOTE = -1
+
+# PolicyParams.migration_bandwidth sentinel: drain the whole queue per epoch.
+BANDWIDTH_UNLIMITED = -1
 
 
 class PolicyParams(NamedTuple):
@@ -32,6 +40,14 @@ class PolicyParams(NamedTuple):
     # it, near-saturated mixes oscillate: serving one needer flips marginal
     # donors over target and starvation rotates tenant-to-tenant.
     hysteresis: jnp.float32 = 0.08
+    # Migration data plane (DESIGN.md §4). Only consulted when the state
+    # carries a non-empty MigrationQueue; with queue_size=0 the policy
+    # applies migrations instantly (the pre-data-plane behavior).
+    # bandwidth: pages the DMA engine can commit per epoch
+    # (BANDWIDTH_UNLIMITED = drain everything — degenerates to instant).
+    migration_bandwidth: jnp.int32 = BANDWIDTH_UNLIMITED
+    # latency: epochs an entry waits in the queue before it may commit.
+    migration_latency: jnp.int32 = 0
 
 
 class TenantState(NamedTuple):
@@ -90,6 +106,61 @@ class PageState(NamedTuple):
         )
 
 
+class MigrationQueue(NamedTuple):
+    """Fixed-shape in-flight migration queue (DESIGN.md §4).
+
+    Array order IS FIFO order (the per-epoch tick compacts valid entries to
+    the front). ``page == -1`` marks an empty slot. Tier metadata does not
+    change at enqueue: a queued page keeps serving from its source tier
+    until the bounded-bandwidth drain commits the entry
+    (commit-on-completion, like the paper's asynchronous DMA migrations).
+    """
+
+    page: jax.Array  # i32[Q] page id, -1 = empty slot
+    direction: jax.Array  # i8[Q] DIR_PROMOTE / DIR_DEMOTE / DIR_NONE
+    enqueue_epoch: jax.Array  # i32[Q] epoch the entry was admitted
+    complete_epoch: jax.Array  # i32[Q] first epoch the entry may commit
+    heat: jax.Array  # i32[Q] hotness bin at enqueue (thrashing guard)
+
+    @classmethod
+    def create(cls, size: int) -> "MigrationQueue":
+        return cls(
+            page=jnp.full((size,), -1, jnp.int32),
+            direction=jnp.zeros((size,), jnp.int8),
+            enqueue_epoch=jnp.zeros((size,), jnp.int32),
+            complete_epoch=jnp.zeros((size,), jnp.int32),
+            heat=jnp.zeros((size,), jnp.int32),
+        )
+
+    @property
+    def size(self) -> int:
+        return self.page.shape[0]
+
+    @property
+    def depth(self) -> jax.Array:
+        return (self.page >= 0).sum()
+
+
+class QueueStats(NamedTuple):
+    """Per-epoch migration-queue telemetry (scalars + fixed-size id lists).
+
+    Conservation contract (tested after every event and epoch):
+    cumulative enqueued == drained + cancelled + dropped + current depth.
+    The drained id lists are sized [W] (W = queue capacity + both plan
+    sides), padded with -1 — fixed-size plans the pool-backed data plane
+    feeds straight to the Pallas page-move kernel.
+    """
+
+    depth: jax.Array  # i32[] in-flight entries after the tick
+    enqueued: jax.Array  # i32[] new entries admitted this epoch
+    drained_promote: jax.Array  # i32[] promotions committed this epoch
+    drained_demote: jax.Array  # i32[] demotions committed this epoch
+    cancelled: jax.Array  # i32[] thrash/ownership cancellations this epoch
+    dropped: jax.Array  # i32[] overflow drops (queue full) this epoch
+    drained_promote_ids: jax.Array  # i32[W] committed promote ids, -1 pad
+    drained_demote_ids: jax.Array  # i32[W] committed demote ids, -1 pad
+
+
 class PolicyState(NamedTuple):
     """The complete on-device policy-engine state threaded through epochs.
 
@@ -97,20 +168,32 @@ class PolicyState(NamedTuple):
     into one pytree lets ``policy.epoch_step`` / ``policy.multi_epoch`` run
     the whole tick (sample -> bin -> FMMR -> realloc -> rebalance -> apply)
     as a single dispatch with donated buffers — no host round-trips.
+
+    ``queue``/``epoch`` carry the asynchronous migration data plane: with a
+    zero-capacity queue (the default) the tick applies migrations instantly
+    and is bit-identical to the pre-data-plane engine; with ``queue_size >
+    0`` selections are enqueued and committed by the bounded-bandwidth
+    drain (DESIGN.md §4).
     """
 
     pages: "PageState"
     tenants: "TenantState"
     pending: jax.Array  # u32[P] accesses reported since the last epoch
     rng: jax.Array  # PRNG key for the PEBS-analogue subsampling
+    queue: Optional["MigrationQueue"] = None  # None == zero-capacity queue
+    epoch: Optional[jax.Array] = None  # i32[] epoch counter (queue clock)
 
     @classmethod
-    def create(cls, num_pages: int, max_tenants: int, seed: int = 0) -> "PolicyState":
+    def create(
+        cls, num_pages: int, max_tenants: int, seed: int = 0, queue_size: int = 0
+    ) -> "PolicyState":
         return cls(
             pages=PageState.create(num_pages),
             tenants=TenantState.create(max_tenants),
             pending=jnp.zeros((num_pages,), jnp.uint32),
             rng=jax.random.PRNGKey(seed),
+            queue=MigrationQueue.create(queue_size),
+            epoch=jnp.int32(0),
         )
 
 
@@ -134,7 +217,11 @@ class MigrationPlan(NamedTuple):
 
 
 class EpochStats(NamedTuple):
-    """Telemetry emitted each epoch (per tenant unless noted)."""
+    """Telemetry emitted each epoch (per tenant unless noted).
+
+    ``promoted``/``demoted`` count policy *selections*; with a migration
+    queue the committed moves are in ``queue`` (``None`` in instant mode).
+    """
 
     fmmr_now: jax.Array  # f32[T] instantaneous FMMR this epoch
     fmmr_ewma: jax.Array  # f32[T]
@@ -143,3 +230,4 @@ class EpochStats(NamedTuple):
     promoted: jax.Array  # i32[T]
     demoted: jax.Array  # i32[T]
     cooled: jax.Array  # bool[T] cooling event fired
+    queue: Optional["QueueStats"] = None  # data-plane telemetry (queue mode)

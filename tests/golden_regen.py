@@ -15,11 +15,19 @@ Two locked traces live in ``tests/golden/``:
 Regenerate (ONLY when the frozen reference or the trace spec changes):
 
     PYTHONPATH=src:. python tests/golden_regen.py
+
+Drift check (the CI ``golden-drift`` job): regenerate into a temp dir and
+diff against the committed traces — exits non-zero if they diverge, so the
+goldens can never silently go stale relative to the generators:
+
+    PYTHONPATH=src:. python tests/golden_regen.py --check
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
+import tempfile
 
 import numpy as np
 
@@ -149,26 +157,61 @@ def drive_policy_singlestep() -> list:
     return out
 
 
-def main() -> None:
+def regenerate(golden_dir: str) -> None:
+    """Write both golden traces into ``golden_dir`` (same basenames as the
+    committed ``BASELINE_TRACE_PATH``/``POLICY_TRACE_PATH``)."""
     import benchmarks.seed_baselines_frozen as frozen
 
-    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    os.makedirs(golden_dir, exist_ok=True)
     base = {name: drive_baseline(mk) for name, mk in backend_factories(frozen).items()}
-    with open(BASELINE_TRACE_PATH, "w") as f:
+    with open(os.path.join(golden_dir, os.path.basename(BASELINE_TRACE_PATH)), "w") as f:
         json.dump({"spec": {"P": P, "FAST": FAST, "BUDGET": BUDGET,
                             "THRESHOLD": THRESHOLD, "EPOCHS": EPOCHS,
                             "COUNTS_SEED": COUNTS_SEED,
                             "BACKEND_SEED": BACKEND_SEED},
                    "traces": base}, f)
-    print(f"wrote {BASELINE_TRACE_PATH}")
-    with open(POLICY_TRACE_PATH, "w") as f:
+    with open(os.path.join(golden_dir, os.path.basename(POLICY_TRACE_PATH)), "w") as f:
         json.dump({"spec": {"P": POLICY_P, "FAST": POLICY_FAST,
                             "BUDGET": POLICY_BUDGET, "EPOCHS": POLICY_EPOCHS,
                             "SEED": POLICY_SEED,
                             "COUNTS_SEED": POLICY_COUNTS_SEED},
                    "epochs": drive_policy_singlestep()}, f)
+
+
+def check() -> int:
+    """Regenerate into a temp dir and diff against the committed traces.
+    Returns the number of diverged files (0 = goldens are current)."""
+    with tempfile.TemporaryDirectory() as tmp:
+        regenerate(tmp)
+        diverged = 0
+        for path in (BASELINE_TRACE_PATH, POLICY_TRACE_PATH):
+            name = os.path.basename(path)
+            with open(path) as f:
+                committed = json.load(f)
+            with open(os.path.join(tmp, name)) as f:
+                fresh = json.load(f)
+            if committed == fresh:
+                print(f"golden_drift_{name},0.000,ok")
+                continue
+            diverged += 1
+            keys = [k for k in fresh if committed.get(k) != fresh.get(k)]
+            print(f"golden_drift_{name},0.000,DIVERGED(sections={keys})")
+    return diverged
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--check" in argv:
+        n = check()
+        if n:
+            print(f"FAIL: {n} golden trace(s) no longer match their "
+                  f"generators — regenerate deliberately or fix the drift")
+        return 1 if n else 0
+    regenerate(GOLDEN_DIR)
+    print(f"wrote {BASELINE_TRACE_PATH}")
     print(f"wrote {POLICY_TRACE_PATH}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

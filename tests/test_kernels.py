@@ -188,6 +188,46 @@ class TestPageCopy:
         assert float(out[3].sum()) == 32.0
         assert float(out.sum()) == 32.0  # only one row written
 
+    @pytest.mark.parametrize("Ps,Pd,E,M", [
+        (7, 13, 100, 3),    # nothing a multiple of any tile
+        (5, 9, 257, 7),     # odd row width beyond one lane tile
+        (3, 3, 33, 2),      # tiny pools, narrow rows
+        (17, 31, 384, 17),  # M > Pd/2, E a non-128 multiple
+    ])
+    def test_non_multiple_of_tile_sizes(self, Ps, Pd, E, M):
+        """Interpret-mode parity at shapes where neither the pool heights
+        nor the row width align with TPU tiling — the data plane uses
+        whatever row_elems the caller configured."""
+        rng = np.random.default_rng(Ps * 101 + E)
+        src = jnp.asarray(rng.normal(size=(Ps, E)), jnp.float32)
+        dst = jnp.asarray(rng.normal(size=(Pd, E)), jnp.float32)
+        sid = jnp.asarray(rng.choice(Ps, M, replace=True), jnp.int32)
+        did = jnp.asarray(rng.choice(Pd, M, replace=False), jnp.int32)
+        want = ref.page_copy_ref(src, dst, sid, did)
+        out = page_copy(src, jnp.copy(dst), sid, did)
+        assert (np.asarray(out) == np.asarray(want)).all()
+
+    def test_trash_row_padding_contract(self):
+        """Fixed-size plans pad with the reserved LAST destination row: the
+        padded entries must leave every real row untouched, no matter what
+        source row the padding names."""
+        rng = np.random.default_rng(0)
+        src = jnp.asarray(rng.normal(size=(6, 64)), jnp.float32)
+        dst = jnp.asarray(rng.normal(size=(10, 64)), jnp.float32)
+        trash = 9
+        # 2 real moves + 3 pad entries aimed at the trash row
+        sid = jnp.asarray([2, 5, 0, 3, 1], jnp.int32)
+        did = jnp.asarray([1, 4, trash, trash, trash], jnp.int32)
+        out = np.asarray(page_copy(src, jnp.copy(dst), sid, did))
+        src_np, dst_np = np.asarray(src), np.asarray(dst)
+        assert (out[1] == src_np[2]).all()
+        assert (out[4] == src_np[5]).all()
+        keep = [0, 2, 3, 5, 6, 7, 8]
+        assert (out[keep] == dst_np[keep]).all()
+        # trash row holds the LAST padded source (sequential grid) — its
+        # content is unspecified by the contract, only its isolation matters
+        assert (out[trash] == src_np[1]).all()
+
 
 class TestPageMove:
     def test_intra_pool_moves_match_ref(self):
@@ -212,3 +252,33 @@ class TestPageMove:
         out = page_move(jnp.copy(pool), sid, did)
         assert (np.asarray(out[6]) == np.asarray(pool[1])).all()
         assert (np.asarray(out[1]) == np.asarray(pool[5])).all()
+
+    @pytest.mark.parametrize("Pr,E,M", [(11, 100, 4), (9, 257, 5), (5, 33, 3)])
+    def test_non_multiple_of_tile_sizes(self, Pr, E, M):
+        from repro.kernels.page_copy import page_move
+
+        rng = np.random.default_rng(Pr * 7 + E)
+        pool = jnp.asarray(rng.normal(size=(Pr, E)), jnp.float32)
+        sid = jnp.asarray(rng.choice(Pr - 1, M, replace=False), jnp.int32)
+        did = jnp.asarray(
+            rng.permutation(Pr - 1)[:M], jnp.int32
+        )
+        want = ref.page_move_ref(pool, sid, did)
+        out = page_move(jnp.copy(pool), sid, did)
+        assert (np.asarray(out) == np.asarray(want)).all()
+
+    def test_trash_row_padding_contract(self):
+        """The data plane pads intra-pool plans with trash->trash self-copy
+        entries; real rows must be untouched by the padding."""
+        from repro.kernels.page_copy import page_move
+
+        rng = np.random.default_rng(1)
+        pool = jnp.asarray(rng.normal(size=(8, 48)), jnp.float32)
+        trash = 7
+        sid = jnp.asarray([0, trash, trash, trash], jnp.int32)
+        did = jnp.asarray([3, trash, trash, trash], jnp.int32)
+        out = np.asarray(page_move(jnp.copy(pool), sid, did))
+        pool_np = np.asarray(pool)
+        assert (out[3] == pool_np[0]).all()
+        keep = [0, 1, 2, 4, 5, 6, trash]
+        assert (out[keep] == pool_np[keep]).all()

@@ -34,11 +34,14 @@ from repro.core.manager import CentralManager
 from repro.core.scenario import (
     Arrive,
     Depart,
+    PingPongShift,
     ResizeWorkingSet,
     Retarget,
     Scenario,
+    SetMigrationBandwidth,
     ShiftWorkingSet,
     SkewChange,
+    pingpong_schedule,
     run_scenario,
 )
 from repro.core.simulator import OPTANE, ColocationSim, WorkloadSpec
@@ -90,6 +93,13 @@ def check_invariants(sim, event=None):
     assert holders <= registered, f"orphan owners {holders - registered} {ctx}"
     # fast-tier occupancy bounded by capacity
     assert int((tier == TIER_FAST).sum()) <= _fast_cap(backend), ctx
+    # migration-queue conservation (data-plane backends): every entry ever
+    # admitted is accounted for as drained, cancelled, dropped or in flight
+    if hasattr(backend, "queue_counters"):
+        c = backend.queue_counters()
+        assert c["enqueued"] == (
+            c["drained"] + c["cancelled"] + c["dropped"] + c["depth"]
+        ), f"queue conservation broken {ctx}: {c}"
 
 
 def _scripted_scenario() -> Scenario:
@@ -270,6 +280,117 @@ def _random_scenario(rng: np.random.Generator, n_events: int) -> Scenario:
                     ev = Retarget(epoch, name, 0.5)
             events.append(ev)
     return Scenario(name="random", n_epochs=epoch + 4, events=tuple(events))
+
+
+class TestBoundedDataPlaneScenario:
+    """The finite-bandwidth regime through the scenario engine: new events
+    (SetMigrationBandwidth, ping-pong thrash) against the queue-mode
+    manager, with conservation + placement invariants after every event
+    and epoch."""
+
+    def _bounded_mgr(self):
+        return CentralManager(
+            num_pages=P, fast_capacity=FAST, migration_budget=BUDGET,
+            max_tenants=8, sample_period=10,
+            queue_size=2 * BUDGET, migration_bandwidth=BUDGET // 4,
+            migration_latency=1,
+        )
+
+    def _thrash_scenario(self) -> Scenario:
+        return Scenario(
+            name="bounded_thrash",
+            n_epochs=28,
+            events=(
+                Arrive(0, WorkloadSpec("a", 96, t_miss=0.2, threads=2,
+                                       sets=((0.3, 0.9),))),
+                Arrive(0, WorkloadSpec("b", 64, t_miss=0.6, threads=4,
+                                       sets=((0.25, 0.8),))),
+                SetMigrationBandwidth(4, 2),
+                *pingpong_schedule("a", 8, 20, 4),
+                Depart(20, "b"),
+                SetMigrationBandwidth(24, None),
+            ),
+        )
+
+    def test_invariants_every_event_and_epoch(self):
+        sc = self._thrash_scenario()
+        sim = ColocationSim(self._bounded_mgr(), OPTANE, seed=13)
+        for epoch in range(sc.n_epochs):
+            for ev in sc.events_at(epoch):
+                ev.apply(sim)
+                check_invariants(sim, ev)
+            sim.run_epoch()
+            check_invariants(sim)
+        assert sim.backend.queue_counters()["enqueued"] > 0
+
+    def test_bandwidth_event_bounds_commits(self):
+        """After SetMigrationBandwidth(2), no epoch commits more than 2
+        pages until the closing unlimited event."""
+        sc = self._thrash_scenario()
+        sim = ColocationSim(self._bounded_mgr(), OPTANE, seed=13)
+        res = run_scenario(sim, sc, on_event=check_invariants)
+        for rec in res.history[4:24]:
+            assert rec.migrated_pages <= 2, rec.epoch
+        # per-phase data-plane columns are populated
+        assert any(p.migration_bytes > 0 for p in res.phases)
+        assert any(p.max_queue_depth > 0 for p in res.phases)
+
+    def test_pingpong_toggles_between_two_scatters(self):
+        sim = ColocationSim(self._bounded_mgr(), OPTANE, seed=3)
+        sim.add_tenant(WorkloadSpec("t", 96, t_miss=1.0, threads=2,
+                                    sets=((0.25, 0.9),)))
+        t = sim.tenants["t"]
+        home = t.probs.copy()
+        PingPongShift(0, "t").apply(sim)
+        away = t.probs.copy()
+        assert not np.array_equal(home, away)
+        PingPongShift(0, "t").apply(sim)
+        assert np.array_equal(t.probs, home), "second flip must return home"
+        PingPongShift(0, "t").apply(sim)
+        assert np.array_equal(t.probs, away), "ping-pong must reuse ONE alternate"
+
+    def test_bandwidth_event_clamps_baseline_budget(self):
+        b = HeMemStatic(P, FAST, partitions={0: FAST}, hot_threshold=6,
+                        migration_budget=BUDGET)
+        sim = ColocationSim(b, OPTANE, seed=0)
+        sim.add_tenant(WorkloadSpec("x", 128, t_miss=0.5, threads=2,
+                                    sets=((0.3, 0.9),)))
+        SetMigrationBandwidth(0, 4).apply(sim)
+        assert b.migration_budget == 4
+        for _ in range(6):
+            sim.run_epoch()
+            assert sim.history[-1].migrated_pages <= 4
+        # None restores the CONFIGURED budget, not a permanent clamp
+        SetMigrationBandwidth(0, None).apply(sim)
+        assert b.migration_budget == BUDGET
+
+    def test_bandwidth_event_bounds_autonuma(self):
+        b = AutoNUMALike(P, FAST)
+        sim = ColocationSim(b, OPTANE, seed=1)
+        # all accesses land on 30% of pages: the cold tail gives autonuma
+        # idle fast pages to evict, so unbounded churn is observable
+        sim.add_tenant(WorkloadSpec("x", 200, t_miss=1.0, threads=4,
+                                    sets=((0.3, 1.0),)))
+        # unbounded warmup churns far more than the clamp
+        sim.run_epoch()
+        assert sim.history[-1].migrated_pages > 6
+        SetMigrationBandwidth(0, 6).apply(sim)
+        for _ in range(5):
+            sim.tenants["x"].shift_sets()  # keep pressure on the migrator
+            sim.run_epoch()
+            assert sim.history[-1].migrated_pages <= 6
+        SetMigrationBandwidth(0, None).apply(sim)
+        assert b.migration_budget is None  # back to unbounded autonuma
+
+    def test_bandwidth_event_is_inapplicable_to_twolm(self):
+        """TwoLM is hardware-managed placement: the event must be a safe
+        no-op (no attribute invented, behavior unchanged)."""
+        b = TwoLM(P, FAST)
+        sim = ColocationSim(b, OPTANE, seed=2)
+        sim.add_tenant(WorkloadSpec("x", 128, t_miss=1.0, threads=2))
+        SetMigrationBandwidth(0, 4).apply(sim)
+        assert not hasattr(b, "migration_budget")
+        sim.run_epoch()  # still runs
 
 
 # ------------------------------------------------------------ golden locks
