@@ -1,21 +1,29 @@
 """CI perf-regression gate (the ``perf-gate`` job in ci.yml).
 
-Re-measures the policy-engine microbench on the current checkout and runs
-the ``--smoke`` scenario suite, then compares against the committed
-``BENCH_policy.json``/``BENCH_scenarios.json``:
+Re-measures the policy-engine microbench, the ``--smoke`` scenario suite and
+a smoke-scale fleet engine/sweep run on the current checkout, then compares
+against the committed ``BENCH_policy.json`` / ``BENCH_scenarios.json`` /
+``BENCH_fleet.json``:
 
   * per-metric slowdown beyond the tolerance band (default 25%, override
     with ``--tolerance`` or ``PERF_GATE_TOL``) fails the gate — the gated
-    metrics are the per-epoch policy timings, which are the hot path every
-    PR is allowed to touch;
+    metrics are the per-epoch policy timings and the smoke-scale fleet
+    timings, the hot paths every PR is allowed to touch;
+  * a metric or section missing on EITHER side fails loudly with a named
+    "missing" row (never a bare KeyError traceback) — a gate that cannot
+    find what it gates must not pass vacuously;
   * a broken qualitative policy ordering (MaxMem steady-state aggregate
     throughput below any baseline, fresh run OR committed payload) fails
-    the gate — perf work must not silently trade away the paper's claim;
+    the gate, as does a committed fleet payload that no longer claims the
+    >= 4x sweep speedup;
   * the finite-bandwidth thrash scenario must complete on all four
-    policies.
+    policies, and the smoke fleet sweep must complete on every machine.
 
-Writes a machine-readable diff to ``--out`` (uploaded as a CI artifact)
-and exits non-zero on any violation.
+Every BENCH payload carries a ``platform`` stamp (host, jax backend, cpu
+count); the committed numbers rarely come from the machine re-measuring
+them, so ratios are host-normalized by their median before judging
+(see :func:`compare_metrics`). Writes a machine-readable diff to ``--out``
+(uploaded as a CI artifact) and exits non-zero on any violation.
 
     PYTHONPATH=src:. python benchmarks/check_regression.py
 """
@@ -26,71 +34,101 @@ import json
 import os
 import sys
 
-POLICY_BENCH = "BENCH_policy.json"
-SCENARIO_BENCH = "BENCH_scenarios.json"
+BENCH_FILES = {
+    "policy": "BENCH_policy.json",
+    "scenarios": "BENCH_scenarios.json",
+    "fleet": "BENCH_fleet.json",
+}
 
-# (json path into BENCH_policy.json) -> gated metric; all are
-# lower-is-better microseconds from benchmarks.microbench.policy_bench()
+# (payload key, json path) -> gated metric; all are lower-is-better
+# microseconds re-measured fresh on the gate host
 GATED_METRICS = (
-    ("policy_epoch", "65536", "us"),
-    ("policy_epoch", "262144", "us"),
-    ("run_epochs_k16", "65536", "scan_per_epoch_us"),
-    ("run_epochs_k16", "262144", "scan_per_epoch_us"),
+    ("policy", ("policy_epoch", "65536", "us")),
+    ("policy", ("policy_epoch", "262144", "us")),
+    ("policy", ("run_epochs_k16", "65536", "scan_per_epoch_us")),
+    ("policy", ("run_epochs_k16", "262144", "scan_per_epoch_us")),
+    ("fleet", ("engine_smoke", "fleet", "per_machine_epoch_us")),
+    ("fleet", ("engine_smoke", "serial_scan", "per_machine_epoch_us")),
 )
 
 
-def _dig(payload: dict, path):
+def _dig(payload, path):
     for key in path:
+        if not isinstance(payload, dict) or key not in payload:
+            raise KeyError(key)
         payload = payload[key]
     return payload
 
 
-def compare_policy(committed: dict, fresh: dict, tolerance: float) -> list:
+def compare_metrics(committed: dict, fresh: dict, tolerance: float) -> list:
     """Per-metric slowdown rows, judged on HOST-NORMALIZED ratios.
 
     The committed numbers come from a different machine than the CI
-    runner, so raw fresh/committed ratios fold in the host-speed gap. The
-    median ratio across the gated metrics estimates that gap (a uniformly
-    slower host moves every metric together); dividing it out leaves the
-    per-metric regression signal, which is what the tolerance band judges.
-    A genuine global regression shows up as a large host factor — reported
-    in the artifact and failed beyond 1 + 3*tolerance as a backstop.
+    runner (each payload's ``platform`` block records which), so raw
+    fresh/committed ratios fold in the host-speed gap. The median ratio
+    across the gated metrics estimates that gap (a uniformly slower host
+    moves every metric together); dividing it out leaves the per-metric
+    regression signal, which is what the tolerance band judges. A genuine
+    global regression shows up as a large host factor — reported in the
+    artifact and failed beyond 1 + 3*tolerance as a backstop.
+
+    The host factor is estimated PER PAYLOAD FILE: the committed payloads
+    are regenerated independently (their ``platform`` stamps may name
+    different hosts), so one shared median would split any speed gap
+    between the groups and report spurious per-metric regressions.
+
+    A metric absent on either side produces a named ``missing`` row
+    (counted as a failure by the caller) instead of raising.
     """
     rows = []
-    ratios = []
-    for path in GATED_METRICS:
-        name = ".".join(path)
+    ratios: dict = {}
+    for payload_key, path in GATED_METRICS:
+        name = payload_key + ":" + ".".join(path)
+        missing = []
+        old = new = None
         try:
-            old = float(_dig(committed, path))
-            new = float(_dig(fresh, path))
-        except KeyError:
-            rows.append({"metric": name, "status": "missing"})
+            old = float(_dig(committed.get(payload_key, {}), path))
+        except (KeyError, TypeError, ValueError):
+            missing.append("committed")
+        try:
+            new = float(_dig(fresh.get(payload_key, {}), path))
+        except (KeyError, TypeError, ValueError):
+            missing.append("fresh")
+        if missing:
+            rows.append({"metric": name, "status": "missing",
+                         "missing_in": missing})
             continue
         ratio = new / old if old > 0 else float("inf")
-        ratios.append(ratio)
-        rows.append({"metric": name, "committed_us": old, "fresh_us": new,
+        ratios.setdefault(payload_key, []).append(ratio)
+        rows.append({"metric": name, "payload": payload_key,
+                     "committed_us": old, "fresh_us": new,
                      "ratio": round(ratio, 3)})
-    host = sorted(ratios)[len(ratios) // 2] if ratios else 1.0
+    hosts = {
+        key: sorted(rs)[len(rs) // 2] for key, rs in ratios.items() if rs
+    }
     for r in rows:
         if r.get("status") == "missing":
             continue
+        host = hosts.get(r["payload"], 1.0)
         norm = r["ratio"] / host if host > 0 else float("inf")
         r["host_factor"] = round(host, 3)
         r["normalized_ratio"] = round(norm, 3)
         r["status"] = "fail" if norm > 1.0 + tolerance else "ok"
-    if ratios and host > 1.0 + 3.0 * tolerance:
-        rows.append({
-            "metric": "host_factor_backstop",
-            "ratio": round(host, 3),
-            "status": "fail",
-        })
+    for key, host in hosts.items():
+        if host > 1.0 + 3.0 * tolerance:
+            rows.append({
+                "metric": f"host_factor_backstop:{key}",
+                "ratio": round(host, 3),
+                "status": "fail",
+            })
     return rows
 
 
 def check_ordering(scenarios: dict, source: str) -> list:
+    ok = scenarios.get("maxmem_geq_all_baselines")
     rows = [{
         "check": f"{source}:maxmem_geq_all_baselines",
-        "status": "ok" if scenarios.get("maxmem_geq_all_baselines") else "fail",
+        "status": ("missing" if ok is None else ("ok" if ok else "fail")),
         "steady_state": scenarios.get("steady_state_agg_throughput"),
     }]
     thrash = scenarios.get("thrash")
@@ -102,6 +140,41 @@ def check_ordering(scenarios: dict, source: str) -> list:
     return rows
 
 
+def check_fleet(committed_fleet: dict, fresh_fleet: dict) -> list:
+    """Fleet smoke-leg checks beyond the tolerance-band metrics: the
+    committed full-scale payload must still claim the >= 4x sweep speedup,
+    and the fresh smoke sweep must have completed on every machine."""
+    rows = []
+    meets = committed_fleet.get("sweep", {}).get("meets_4x")
+    rows.append({
+        "check": "committed:fleet_sweep_meets_4x",
+        "status": ("missing" if meets is None else ("ok" if meets else "fail")),
+        "speedup": committed_fleet.get("sweep", {})
+        .get("fleet", {}).get("speedup_vs_serial_per_process"),
+    })
+    sw = fresh_fleet.get("sweep_smoke", {})
+    n = sw.get("n_machines")
+    done = sw.get("steady_state_agg_throughput", {}).get("fleet", {})
+    rows.append({
+        "check": "fresh_smoke:fleet_sweep_completed_machines",
+        "status": "ok" if n and len(done) == n else "fail",
+        "machines": n,
+        "completed": len(done),
+    })
+    return rows
+
+
+def _load_committed() -> dict:
+    out = {}
+    for key, path in BENCH_FILES.items():
+        if not os.path.exists(path):
+            out[key] = None
+            continue
+        with open(path) as f:
+            out[key] = json.load(f)
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tolerance", type=float,
@@ -111,31 +184,54 @@ def main(argv=None) -> int:
                     help="diff artifact path")
     args = ap.parse_args(argv)
 
-    with open(POLICY_BENCH) as f:
-        committed_policy = json.load(f)
-    with open(SCENARIO_BENCH) as f:
-        committed_scen = json.load(f)
+    committed = _load_committed()
+    file_rows = [
+        {"check": f"committed_file:{BENCH_FILES[k]}",
+         "status": "ok" if committed[k] is not None else "missing"}
+        for k in BENCH_FILES
+    ]
+    committed = {k: v or {} for k, v in committed.items()}
 
     from benchmarks import dynamic_workload, microbench
 
-    fresh_policy = microbench.policy_bench()
-    fresh_scen = dynamic_workload.scenarios_bench(smoke=True)
+    fresh = {
+        "policy": microbench.policy_bench(),
+        "scenarios": dynamic_workload.scenarios_bench(smoke=True),
+        "fleet": {
+            "engine_smoke": microbench.fleet_bench(
+                n_machines=4, n_pages=4096, n_epochs=8
+            ),
+            # fleet-only: the gate checks completion, not the serial
+            # reference legs (those live in BENCH_fleet.json and the
+            # scenarios job's --sweep --smoke run)
+            "sweep_smoke": dynamic_workload.sweep_fleet_smoke(),
+        },
+    }
 
     diff = {
         "tolerance": args.tolerance,
-        "metrics": compare_policy(committed_policy, fresh_policy, args.tolerance),
-        "ordering": check_ordering(fresh_scen, "fresh_smoke")
-        + check_ordering(committed_scen, "committed"),
+        "committed_platforms": {
+            k: committed[k].get("platform") for k in BENCH_FILES
+        },
+        "files": file_rows,
+        "metrics": compare_metrics(committed, fresh, args.tolerance),
+        "ordering": check_ordering(fresh["scenarios"], "fresh_smoke")
+        + check_ordering(committed["scenarios"], "committed")
+        + check_fleet(committed["fleet"], fresh["fleet"]),
     }
-    # a metric absent on either side means the gate is no longer measuring
-    # what it claims to — that must fail loudly, not pass vacuously
-    failures = [r for r in diff["metrics"] if r["status"] in ("fail", "missing")]
-    failures += [r for r in diff["ordering"] if r["status"] == "fail"]
+    # a metric or file absent on either side means the gate is no longer
+    # measuring what it claims to — that must fail loudly, not pass
+    # vacuously
+    failures = [r for r in diff["files"] if r["status"] != "ok"]
+    failures += [r for r in diff["metrics"] if r["status"] in ("fail", "missing")]
+    failures += [r for r in diff["ordering"] if r["status"] in ("fail", "missing")]
     diff["failures"] = len(failures)
 
     with open(args.out, "w") as f:
         json.dump(diff, f, indent=2)
     print(f"wrote {args.out}")
+    for r in diff["files"]:
+        print(f"perf_gate_{r['check']},0.000,status={r['status']}")
     for r in diff["metrics"]:
         print(f"perf_gate_{r['metric']},{r.get('fresh_us', 0):.1f},"
               f"ratio={r.get('ratio', 'n/a')};"

@@ -1,10 +1,31 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import os
+import platform as _platform
+import sys
 import time
 from typing import Dict, List
 
 import numpy as np
+
+
+def platform_metadata() -> Dict[str, object]:
+    """Host/device provenance stamped into every BENCH_*.json payload so
+    the perf gate can reason about cross-host comparisons (the committed
+    numbers rarely come from the machine re-measuring them)."""
+    import jax
+
+    return {
+        "python": sys.version.split()[0],
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "platform": _platform.platform(),
+        "machine": _platform.machine(),
+        "cpu_count": os.cpu_count(),
+        "jax_backend": jax.default_backend(),
+        "jax_device_count": jax.local_device_count(),
+    }
 
 from repro.core.baselines import AutoNUMALike, HeMemStatic, TwoLM
 from repro.core.manager import CentralManager

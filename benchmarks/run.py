@@ -13,11 +13,14 @@ for the exact paper claim it reproduces):
   micro_*  host-side primitive timings
 
 Also writes ``BENCH_policy.json`` (policy-engine epochs/sec + per-epoch µs,
-single-step vs fused-scan, against the fixed seed baseline) and
+single-step vs fused-scan, against the fixed seed baseline),
 ``BENCH_scenarios.json`` (the 256k-page dynamic colocation scenario across
 all four policies: per-phase throughput/p99 curves, the paper's qualitative
-ordering check, and the vectorized-vs-seed baseline epoch timings) so the
-perf trajectory is tracked across PRs.
+ordering check, and the vectorized-vs-seed baseline epoch timings) and
+``BENCH_fleet.json`` (the fleet-vectorized sweep engine: one vmapped
+K-machine scan vs the serial per-machine drivers, engine-level and full
+ScenarioSweep) so the perf trajectory is tracked across PRs. All payloads
+carry a ``platform`` stamp for cross-host normalization in the perf gate.
 """
 import json
 import sys
@@ -37,6 +40,29 @@ def write_scenarios_json(path: str = "BENCH_scenarios.json", smoke: bool = False
 
     with open(path, "w") as f:
         json.dump(dynamic_workload.scenarios_bench(smoke=smoke), f, indent=2)
+    print(f"wrote {path}")
+
+
+def write_fleet_json(path: str = "BENCH_fleet.json", smoke: bool = False) -> None:
+    """Fleet engine + sweep payload: the vmapped K-machine scan against the
+    serial per-machine drivers (engine level) and the full ScenarioSweep
+    against the pre-fleet serial sweep loop (>= 4x headline claim)."""
+    from benchmarks import dynamic_workload, microbench
+    from benchmarks.common import platform_metadata
+
+    payload = {
+        "platform": platform_metadata(),
+        # the smoke-scale engine section is what the CI perf gate
+        # re-measures and tolerance-bands on its own (slower) host
+        "engine_smoke": microbench.fleet_bench(
+            n_machines=4, n_pages=4096, n_epochs=8
+        ),
+        "sweep": dynamic_workload.sweep_bench(smoke=smoke),
+    }
+    if not smoke:
+        payload["engine"] = microbench.fleet_bench()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
     print(f"wrote {path}")
 
 
@@ -83,6 +109,11 @@ def main() -> None:
     except Exception as e:
         failures += 1
         print(f"section_scenarios_json_FAILED,0,{e!r}")
+    try:
+        write_fleet_json()
+    except Exception as e:
+        failures += 1
+        print(f"section_fleet_json_FAILED,0,{e!r}")
     if failures:
         sys.exit(1)
 

@@ -1,5 +1,7 @@
 """MaxMem core: FMMR QoS policy, hotness bins, sampling, central manager,
-colocation simulator and the dynamic-scenario engine."""
+fleet-vectorized sweep engine, colocation simulator and the dynamic-scenario
+engine."""
+from repro.core.fleet import FleetManager
 from repro.core.manager import CentralManager, TenantHandle
 from repro.core.types import (
     TIER_FAST,
@@ -7,6 +9,7 @@ from repro.core.types import (
     TIER_SLOW,
     EpochStats,
     MigrationPlan,
+    OwnerSegments,
     PageState,
     PolicyParams,
     TenantState,
@@ -14,12 +17,14 @@ from repro.core.types import (
 
 __all__ = [
     "CentralManager",
+    "FleetManager",
     "TenantHandle",
     "TIER_FAST",
     "TIER_NONE",
     "TIER_SLOW",
     "EpochStats",
     "MigrationPlan",
+    "OwnerSegments",
     "PageState",
     "PolicyParams",
     "TenantState",

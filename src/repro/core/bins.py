@@ -22,7 +22,21 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import PageState, TenantState
+from repro.core.types import OwnerSegments, PageState, TenantState
+
+
+def seg_sums(values_sorted: jax.Array, start: jax.Array) -> jax.Array:
+    """Per-tenant segment sums of an owner-sorted value array.
+
+    ``values_sorted`` is any [P] array already gathered into owner-sorted
+    order (``x[segs.order]``); ``start`` is ``OwnerSegments.start``. ONE
+    global cumsum plus two [T+1] gathers replaces a [T, P] one-hot
+    reduction or a P-element scatter-add — bit-identical for integer
+    dtypes (same addends, associative exact arithmetic).
+    """
+    cum = jnp.cumsum(values_sorted)
+    cum0 = jnp.concatenate([jnp.zeros((1,), cum.dtype), cum])
+    return cum0[start[1:]] - cum0[start[:-1]]
 
 
 def bin_of(count: jax.Array, num_bins) -> jax.Array:
@@ -53,6 +67,7 @@ def accumulate_and_count(
     sampled: jax.Array,  # u32[P] sampled accesses this epoch
     num_bins,
     owner_onehot: jax.Array = None,  # bool[T, P] (owner == t), built if None
+    segs: OwnerSegments = None,  # owner segments: cooled via seg_sums instead
 ) -> Tuple[PageState, TenantState, jax.Array, jax.Array]:
     """Fold one epoch of samples into the counters; fire cooling if needed.
 
@@ -77,9 +92,12 @@ def accumulate_and_count(
     # Max-reduce over an owner one-hot instead of a serial scatter-max.
     thresh = cool_threshold(num_bins)
     over = touched & (new_count >= thresh) & (pages.owner >= 0)
-    if owner_onehot is None:
-        owner_onehot = pages.owner[None, :] == jnp.arange(T, dtype=jnp.int32)[:, None]
-    cooled = (owner_onehot & over[None, :]).any(axis=1)
+    if segs is not None:
+        cooled = seg_sums(over[segs.order].astype(jnp.int32), segs.start) > 0
+    else:
+        if owner_onehot is None:
+            owner_onehot = pages.owner[None, :] == jnp.arange(T, dtype=jnp.int32)[:, None]
+        cooled = (owner_onehot & over[None, :]).any(axis=1)
     cool_epoch2 = tenants.cool_epoch + cooled.astype(jnp.int32)
 
     # materialize the new cooling event for touched pages immediately

@@ -1,0 +1,219 @@
+"""Fleet-vectorized policy engine: K machines in one device program.
+
+MaxMem's headline claims are statements about *populations* of colocation
+scenarios — policy x seed x bandwidth sweeps — and the pre-fleet engine ran
+one machine per Python process, paying full dispatch and host-sync cost
+serially for every machine-epoch. This module stacks the complete per-machine
+``PolicyState`` (pages, tenants, backlog, PRNG, migration queue, owner
+segments) along a leading machine axis and runs the fused policy tick
+``jax.vmap``-ed inside the single donated ``lax.scan`` of
+``policy._multi_epoch_impl``: K machines x k epochs advance in ONE dispatch
+with ONE host transfer for the stacked telemetry snapshot.
+
+Sweepable without recompilation (traced, batched ``PolicyParams`` leaves):
+seeds, migration budgets/bandwidth/latency, sample periods, fast capacities,
+targets, fairness mode. Forcing a fresh trace (static shapes): page count,
+tenant-table size, queue capacity, plan size, epoch count per call.
+
+Per-machine results are BIT-IDENTICAL to running each machine alone through
+``policy.epoch_step``/``policy.multi_epoch`` — vmap only adds a batch axis,
+every reduction stays within its machine slice. ``tests/test_fleet.py``
+locks this, including queue mode and mid-sweep free()/unregister churn.
+
+Surface:
+
+  * :func:`fleet_multi_epoch` — raw batched entry point on stacked pytrees.
+  * :class:`FleetManager` — facade over K :class:`CentralManager` control
+    planes: register/allocate/free/telemetry stay per-machine host
+    operations on the underlying managers; ``run_epochs`` stacks their
+    states, runs the fleet program, and writes the advanced slices back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy
+from repro.core.manager import CentralManager, MultiEpochResult
+from repro.core.types import EpochStats, MigrationPlan
+
+
+def fleet_multi_epoch(
+    fstate,
+    fparams,
+    counts: Optional[jax.Array] = None,
+    *,
+    k: int,
+    max_tenants: int,
+    plan_size: int,
+    exact_sampling: bool = False,
+    count_clamp: int = policy.COUNT_CLAMP,
+    collect_plans: bool = False,
+):
+    """Advance K stacked machines by ``k`` epochs in one dispatch.
+
+    ``fstate``/``fparams`` are a ``PolicyState``/``PolicyParams`` whose
+    leaves carry a leading machine axis. ``counts`` is ``None`` (consume
+    each machine's recorded backlog), ``[K, P]`` (each machine replays its
+    row every epoch) or ``[K, k, P]``. Returns (fstate', plans, stats,
+    flagged) with leaves shaped ``[K, k, ...]`` for the per-epoch outputs.
+    State buffers are donated on accelerator backends.
+    """
+    return _jitted_fleet(policy._donate_state())(
+        fstate, fparams, counts, k=k, max_tenants=max_tenants,
+        plan_size=plan_size, exact_sampling=exact_sampling,
+        count_clamp=count_clamp, collect_plans=collect_plans,
+    )
+
+
+def _fleet_impl(
+    fstate, fparams, counts, *, k, max_tenants, plan_size, exact_sampling,
+    count_clamp, collect_plans,
+):
+    step = partial(
+        policy._multi_epoch_impl, k=k, max_tenants=max_tenants,
+        plan_size=plan_size, exact_sampling=exact_sampling,
+        count_clamp=count_clamp, collect_plans=collect_plans,
+    )
+    if counts is None:
+        return jax.vmap(lambda s, p: step(s, p, None))(fstate, fparams)
+    return jax.vmap(lambda s, p, c: step(s, p, c))(fstate, fparams, counts)
+
+
+@lru_cache(maxsize=None)
+def _jitted_fleet(donate: bool):
+    return jax.jit(
+        _fleet_impl,
+        static_argnames=(
+            "k", "max_tenants", "plan_size", "exact_sampling", "count_clamp",
+            "collect_plans",
+        ),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+@dataclasses.dataclass
+class FleetMultiEpochResult:
+    """Stacked output of ``FleetManager.run_epochs``.
+
+    All leaves are HOST numpy arrays with leading ``[K, k]`` axes — the one
+    batched transfer per fleet telemetry snapshot. ``machine(m)`` views one
+    machine's slice as a regular :class:`MultiEpochResult`.
+    """
+
+    stats: EpochStats  # [K, k, ...] leaves
+    plans: Optional[MigrationPlan]  # [K, k, R] leaves or None
+    flags: np.ndarray  # bool[K, k, T]
+
+    @property
+    def num_machines(self) -> int:
+        return self.flags.shape[0]
+
+    @property
+    def num_epochs(self) -> int:
+        return self.flags.shape[1]
+
+    def machine(self, m: int) -> MultiEpochResult:
+        return MultiEpochResult(
+            stats=jax.tree.map(lambda a: a[m], self.stats),
+            plans=None if self.plans is None else jax.tree.map(lambda a: a[m], self.plans),
+            flags=self.flags[m],
+        )
+
+
+class FleetManager:
+    """K :class:`CentralManager` machines advancing as one device program.
+
+    Control-plane operations (register/allocate/free/telemetry/bandwidth
+    events) address the underlying managers directly — ``fleet.machines[m]``
+    exposes the full per-machine surface, and any state they mutate is
+    restacked on the next fleet dispatch. ``run_epochs`` is the data plane:
+    stack -> one vmapped scan -> write advanced slices back -> one host
+    telemetry snapshot.
+
+    Machines must agree on every SHAPE-defining knob (num_pages,
+    max_tenants, queue_size, exact_sampling); traced parameters (budgets,
+    bandwidth, latency, sample period, capacity, fairness) may differ per
+    machine — that is the sweepable grid. Plan buffers take the fleet-wide
+    maximum budget so shapes stay uniform; per-machine selections are
+    unaffected (the budget itself is traced).
+    """
+
+    def __init__(self, machines: Sequence[CentralManager]):
+        assert len(machines) > 0, "fleet needs at least one machine"
+        self.machines: List[CentralManager] = list(machines)
+        first = self.machines[0]
+        for m in self.machines:
+            assert m.num_pages == first.num_pages, "fleet machines must share num_pages"
+            assert m.max_tenants == first.max_tenants, "fleet machines must share max_tenants"
+            assert m.queue_size == first.queue_size, "fleet machines must share queue_size"
+            assert m.exact_sampling == first.exact_sampling, (
+                "fleet machines must share exact_sampling"
+            )
+            assert m.pool is None, (
+                "pool-backed data planes are per-machine host objects; "
+                "run them on a single CentralManager"
+            )
+        self.num_pages = first.num_pages
+        self.max_tenants = first.max_tenants
+        self.queue_size = first.queue_size
+        self.exact_sampling = first.exact_sampling
+        self.plan_size = max(m.plan_size for m in self.machines)
+
+    @property
+    def num_machines(self) -> int:
+        return len(self.machines)
+
+    def __len__(self) -> int:
+        return len(self.machines)
+
+    def run_epochs(
+        self,
+        k: int,
+        counts: Optional[np.ndarray] = None,
+        collect_plans: bool = False,
+    ) -> FleetMultiEpochResult:
+        """Advance every machine by ``k`` epochs in ONE device dispatch.
+
+        ``counts``: None (consume each machine's recorded backlog), ``[K,
+        P]`` (per-machine steady-state replay) or ``[K, k, P]``. Per-machine
+        telemetry is bit-identical to ``CentralManager.run_epochs`` on each
+        machine alone.
+        """
+        K = len(self.machines)
+        for m in self.machines:
+            m._ensure_segs()
+        fstate = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[m._state for m in self.machines]
+        )
+        fparams = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+            *[m.params for m in self.machines],
+        )
+        c = None
+        if counts is not None:
+            c = jnp.asarray(np.asarray(counts).astype(np.uint32, copy=False))
+            assert c.ndim in (2, 3) and c.shape[0] == K, (
+                f"counts must be [K, P] or [K, k, P] with K={K}, got {c.shape}"
+            )
+        fstate, plans, stats, flagged = fleet_multi_epoch(
+            fstate, fparams, c,
+            k=k, max_tenants=self.max_tenants, plan_size=self.plan_size,
+            exact_sampling=self.exact_sampling, collect_plans=collect_plans,
+        )
+        for i, m in enumerate(self.machines):
+            m._state = jax.tree.map(lambda a: a[i], fstate)
+            m.epoch_index += k
+            m._snap = None
+        stats, flags, plans = jax.device_get(
+            (stats, flagged, plans if collect_plans else None)
+        )
+        if stats.queue is not None:
+            for i, m in enumerate(self.machines):
+                m._fold_queue_stats(jax.tree.map(lambda a: a[i], stats.queue))
+        return FleetMultiEpochResult(stats=stats, plans=plans, flags=flags)

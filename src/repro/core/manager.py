@@ -43,6 +43,7 @@ from repro.core.types import (
     TIER_SLOW,
     EpochStats,
     MigrationPlan,
+    OwnerSegments,
     PageState,
     PolicyParams,
     PolicyState,
@@ -178,6 +179,11 @@ class CentralManager:
         self._state = PolicyState.create(
             num_pages, max_tenants, seed=seed, queue_size=queue_size
         )
+        # owner-sorted permutation for the tick's segment reductions
+        # (DESIGN.md §5); ownership only changes here in the control plane,
+        # so allocate/free mark it stale and the next tick rebuilds it
+        self._segs_owner: Optional[np.ndarray] = None
+        self._refresh_segs(np.full((num_pages,), -1, np.int32))
         self._arrival_seq = 0
         self.exact_sampling = exact_sampling
         self.epoch_index = 0
@@ -204,6 +210,10 @@ class CentralManager:
     def pages(self, value: PageState) -> None:
         self._state = self._state._replace(pages=value)
         self._snap = None
+        # state.segs must mirror pages.owner (DESIGN.md §5): any path that
+        # can change ownership — allocate/free or a client assigning the
+        # documented state view directly — marks the permutation stale here
+        self._refresh_segs(np.asarray(value.owner))
 
     @property
     def tenants(self) -> TenantState:
@@ -212,6 +222,20 @@ class CentralManager:
     @tenants.setter
     def tenants(self, value: TenantState) -> None:
         self._state = self._state._replace(tenants=value)
+
+    def _refresh_segs(self, owner: np.ndarray) -> None:
+        """Note an ownership change; the owner-sorted permutation is
+        rebuilt lazily before the next policy tick (``_ensure_segs``), so a
+        burst of control-plane operations (scenario arrivals allocating a
+        dozen tenants) pays ONE host argsort instead of one per call."""
+        self._segs_owner = np.asarray(owner)
+
+    def _ensure_segs(self) -> None:
+        if self._segs_owner is not None:
+            self._state = self._state._replace(
+                segs=OwnerSegments.build(self._segs_owner, self.max_tenants)
+            )
+            self._segs_owner = None
 
     def _snapshot(self) -> Dict[str, np.ndarray]:
         """Host copy of the page metadata; ONE batched transfer per epoch no
@@ -354,6 +378,7 @@ class CentralManager:
 
     def run_epoch(self) -> EpochResult:
         """Policy-thread tick: sample -> policy -> migrate, one dispatch."""
+        self._ensure_segs()
         self._state, plan, stats = policy.epoch_step(
             self._state,
             self.params,
@@ -388,6 +413,7 @@ class CentralManager:
         materialized (the per-tenant promoted/demoted telemetry in ``stats``
         is still exact); pass True when a DMA driver needs the ids.
         """
+        self._ensure_segs()
         c = None
         if counts is not None:
             c = jnp.asarray(np.asarray(counts).astype(np.uint32, copy=False))

@@ -42,6 +42,7 @@ from repro.core.types import (
     EpochStats,
     MigrationPlan,
     MigrationQueue,
+    OwnerSegments,
     PageState,
     PolicyParams,
     PolicyState,
@@ -50,9 +51,15 @@ from repro.core.types import (
 )
 
 # Effective counts at or above this value share one histogram bucket (their
-# relative order becomes a tie). Cooling (§3.2) keeps steady-state counts
-# below 2 * 2^(num_bins-1) = 64 with the paper's 6 bins, so 4096 leaves two
-# orders of magnitude of headroom for bursty epochs.
+# relative order becomes a tie). Cooling fires at most once per epoch
+# (paper §3.2), so steady-state effective counts approach 2x the per-epoch
+# sampled adds — ~64 at paper-scale sampling, but THOUSANDS under
+# simulator-scale access streams, where a tighter clamp would saturate hot
+# and cold candidates into one bucket and strictly-improving rebalance
+# pairs would vanish. 4096 keeps count-granular ranks through that regime;
+# the [T, C] tables it sizes are consulted by per-tenant binary searches
+# (not full-width reductions), so the width costs two cumsums, not a
+# dozen O(T*C) passes.
 COUNT_CLAMP = 4096
 
 # Buffer donation saves a copy of the O(P) state arrays on accelerators; the
@@ -63,12 +70,28 @@ def _donate_state() -> bool:
     return jax.default_backend() != "cpu"
 
 
-def _per_tenant_pages(pages: PageState, max_tenants: int) -> Tuple[jax.Array, jax.Array]:
-    """(fast_pages[T], slow_pages[T]) holdings."""
-    owner = jnp.where(pages.owner >= 0, pages.owner, max_tenants)
-    fast = jnp.zeros((max_tenants + 1,), jnp.int32).at[owner].add(pages.tier == TIER_FAST)
-    slow = jnp.zeros((max_tenants + 1,), jnp.int32).at[owner].add(pages.tier == TIER_SLOW)
-    return fast[:-1], slow[:-1]
+def _per_tenant_pages(
+    pages: PageState,
+    max_tenants: int,
+    segs: Optional[OwnerSegments] = None,
+    owner_onehot: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(fast_pages[T], slow_pages[T]) holdings.
+
+    With owner segments: two O(P) segment cumsums. Otherwise a [T, P]
+    one-hot reduction (still far cheaper than a P-element scatter-add on
+    XLA:CPU, where scatters execute element-serially)."""
+    if segs is not None:
+        tier_s = pages.tier[segs.order]
+        fast = bins.seg_sums((tier_s == TIER_FAST).astype(jnp.int32), segs.start)
+        slow = bins.seg_sums((tier_s == TIER_SLOW).astype(jnp.int32), segs.start)
+        return fast, slow
+    if owner_onehot is None:
+        T = max_tenants
+        owner_onehot = pages.owner[None, :] == jnp.arange(T, dtype=jnp.int32)[:, None]
+    fast = (owner_onehot & (pages.tier == TIER_FAST)[None, :]).sum(axis=1)
+    slow = (owner_onehot & (pages.tier == TIER_SLOW)[None, :]).sum(axis=1)
+    return fast.astype(jnp.int32), slow.astype(jnp.int32)
 
 
 def _select_victims(
@@ -82,7 +105,8 @@ def _select_victims(
     cum_fast,
     pq,  # i32[T] promote quota
     dq,  # i32[T] demote quota
-    owner_onehot,  # bool[T,P]
+    owner_onehot,  # bool[T,P] (one-hot path; None when segs is given)
+    segs: Optional[OwnerSegments] = None,
 ):
     """(promote_mask, demote_mask) bool[P]: per tenant, exactly the ``pq[t]``
     HOTTEST slow candidates and ``dq[t]`` COLDEST fast candidates.
@@ -97,29 +121,38 @@ def _select_victims(
     """
     T, C = hist_slow.shape
     P = key.shape[0]
+    srch = jax.vmap(partial(jnp.searchsorted, side="left"))
+    srch_r = jax.vmap(partial(jnp.searchsorted, side="right"))
+    idx_t = jnp.arange(T)
 
-    # hot side: smallest count whose whole bucket fits under the quota
-    total_slow = cum_slow[:, -1:]
-    geq = total_slow - cum_slow + hist_slow  # [T,C] candidates with count >= c
-    c_full = C - (geq <= pq[:, None]).sum(axis=1)  # [T]; == C when none fit
-    above = jnp.take_along_axis(geq, jnp.clip(c_full, 0, C - 1)[:, None], axis=1)[:, 0]
+    # hot side: smallest count whose whole bucket fits under the quota.
+    # #candidates with count >= c is total - cum[c-1] (non-increasing), so
+    # the cutoff is a per-tenant binary search on the cumulative table —
+    # [T] log C work instead of materializing the [T, C] suffix-count
+    # table and reducing over it (bit-identical: same integer predicate).
+    total_slow = cum_slow[:, -1]
+    v = total_slow - pq
+    c_full = jnp.where(v <= 0, 0, 1 + srch(cum_slow, v))  # [T]; C when none fit
+    cum_at = cum_slow[idx_t, jnp.maximum(c_full - 1, 0)]
+    above = total_slow - jnp.where(c_full > 0, cum_at, 0)
     above = jnp.where(c_full < C, above, 0)  # candidates already taken whole
     r_p = pq - above  # residual from the straddling bucket c_full - 1
     member_p = slow_cand & (key == (c_full - 1)[owner]) & (r_p[owner] > 0)
 
     # cold side: largest count whose whole bucket fits (cum_fast increasing)
-    n_full = (cum_fast <= dq[:, None]).sum(axis=1)  # buckets taken whole: c < n_full
-    below = jnp.take_along_axis(cum_fast, jnp.clip(n_full - 1, 0, C - 1)[:, None], axis=1)[:, 0]
+    n_full = srch_r(cum_fast, dq)  # buckets taken whole: c < n_full
+    below = cum_fast[idx_t, jnp.clip(n_full - 1, 0, C - 1)]
     below = jnp.where(n_full > 0, below, 0)
     r_d = dq - below  # residual from the straddling bucket n_full
     member_d = fast_cand & (key == n_full[owner]) & (r_d[owner] > 0)
 
-    args = (member_p, member_d, owner, owner_onehot)
-    if P <= 65536:
+    if segs is not None:
+        occ_p, occ_d = _occ_segments(member_p, member_d, owner, segs)
+    elif P <= 65536:
         # member counts are bounded by P <= 2^16, and the single possible
         # wrap (one tenant, all 2^16 pages in one bucket) is healed inside
         # _occ_packed — no runtime branch needed
-        occ_p, occ_d = _occ_packed(*args)
+        occ_p, occ_d = _occ_packed(member_p, member_d, owner, owner_onehot)
     else:
         # a 16-bit field wraps iff one tenant has >= 2^16 members in its
         # straddling bucket (mid-pool wraps also corrupt the carry, so the
@@ -127,11 +160,50 @@ def _select_victims(
         # branch at runtime — the slow two-pass path only ever executes on
         # degenerate states
         safe = jnp.maximum(hist_slow.max(), hist_fast.max()) < (1 << 16)
-        occ_p, occ_d = jax.lax.cond(safe, _occ_packed, _occ_twopass, *args)
+        occ_p, occ_d = jax.lax.cond(
+            safe, _occ_packed, _occ_twopass, member_p, member_d, owner, owner_onehot
+        )
 
     promote = (slow_cand & (key >= c_full[owner])) | (member_p & (occ_p <= r_p[owner]))
     demote = (fast_cand & (key < n_full[owner])) | (member_d & (occ_d <= r_d[owner]))
     return promote, demote
+
+
+def _occ_segments(member_p, member_d, owner, segs: OwnerSegments):
+    """In-bucket page-id-order positions (1-based) via owner segments:
+    gather the member flags into owner-sorted order, ONE global cumsum,
+    subtract each segment's starting offset, gather back. Within a tenant
+    the sorted order is page-id ascending (stable host sort), so positions
+    are bit-identical to the one-hot [T, P] prefix sum.
+
+    For P <= 65536 both member sets ride one packed u32 cumsum (promote
+    low 16 bits, demote high 16). A field holds the GLOBAL member count at
+    each sorted position; per-segment differences stay below 2^16 except
+    the degenerate all-pages-one-bucket case, where the other side's quota
+    is forced to zero and the wrapped 0 is healed exactly like
+    :func:`_occ_packed`. Beyond 65536 pages the global count itself can
+    wrap mid-pool, so two separate i32 cumsums are used instead.
+    """
+    P = member_p.shape[0]
+    order, inv, start = segs.order, segs.inv, segs.start
+    owner_s = owner[order]
+    if P <= 65536:
+        packed = member_p.astype(jnp.uint32) + (member_d.astype(jnp.uint32) << 16)
+        cum = jnp.cumsum(packed[order])
+        cum0 = jnp.concatenate([jnp.zeros((1,), jnp.uint32), cum])
+        local = (cum - cum0[start[owner_s]])[inv]
+        occ_p = (local & 0xFFFF).astype(jnp.int32)
+        occ_d = (local >> 16).astype(jnp.int32)
+        occ_p = jnp.where(member_p & (occ_p == 0), 1 << 16, occ_p)
+        occ_d = jnp.where(member_d & (occ_d == 0), 1 << 16, occ_d)
+        return occ_p, occ_d
+    zero = jnp.zeros((1,), jnp.int32)
+    cum_p = jnp.cumsum(member_p[order].astype(jnp.int32))
+    cum0_p = jnp.concatenate([zero, cum_p])
+    cum_d = jnp.cumsum(member_d[order].astype(jnp.int32))
+    cum0_d = jnp.concatenate([zero, cum_d])
+    off = start[owner_s]
+    return (cum_p - cum0_p[off])[inv], (cum_d - cum0_d[off])[inv]
 
 
 def _occ_packed(member_p, member_d, owner, owner_onehot):
@@ -178,11 +250,30 @@ def _pair_count(cum_slow, cum_fast, give, take, cap):
 
         max_c min(#slow_hotter_than(c) - give, #fast_at_most(c) - take)
 
-    — two cumulative sums and a max, no per-rank gathers and no window.
+    f(c) = #slow_hotter_than(c) - give is non-increasing and g(c) =
+    #fast_at_most(c) - take non-decreasing, so min(f, g) is unimodal with
+    its maximum at the crossing: max = max(g(c*-1), f(c*)) where c* is the
+    first c with g >= f. The crossing is a per-tenant binary search on the
+    (non-decreasing) sum cum_fast + cum_slow — [T] log C work instead of
+    building and max-reducing the [T, C] pairwise-minimum table, with the
+    identical integer result.
     """
-    hotter = cum_slow[:, -1:] - cum_slow
-    m = jnp.minimum(hotter - give[:, None], cum_fast - take[:, None])
-    return jnp.clip(m.max(axis=1), 0, cap).astype(jnp.int32)
+    T, C = cum_slow.shape
+    idx_t = jnp.arange(T)
+    total_slow = cum_slow[:, -1]
+    # g(c) - f(c) = cum_fast[c] + cum_slow[c] - (total_slow + take - give)
+    # (hotter(c) = #slow with count > c = total - cum_slow[c])
+    h = cum_fast + cum_slow  # non-decreasing
+    thr = total_slow + take - give
+    c_star = jax.vmap(partial(jnp.searchsorted, side="left"))(h, thr)  # [T]
+    # g(c*-1) (valid when c* > 0) and f(c*) (valid when c* < C)
+    g_lo = cum_fast[idx_t, jnp.maximum(c_star - 1, 0)] - take
+    f_hi = total_slow - cum_slow[idx_t, jnp.minimum(c_star, C - 1)] - give
+    m = jnp.maximum(
+        jnp.where(c_star > 0, g_lo, jnp.iinfo(jnp.int32).min),
+        jnp.where(c_star < C, f_hi, jnp.iinfo(jnp.int32).min),
+    )
+    return jnp.clip(m, 0, cap).astype(jnp.int32)
 
 
 def _epoch_core(
@@ -195,6 +286,7 @@ def _epoch_core(
     count_clamp: int,
     collect_plan: bool,
     exclude: Optional[jax.Array] = None,  # bool[P] pages barred from selection
+    segs: Optional[OwnerSegments] = None,  # owner-sorted permutation (§5)
 ):
     """One policy epoch; trace-time body shared by all jitted entry points.
 
@@ -211,15 +303,31 @@ def _epoch_core(
     P = pages.owner.shape[0]
     T = max_tenants
     C = count_clamp
-    oh = pages.owner[None, :] == jnp.arange(T, dtype=jnp.int32)[:, None]  # [T,P]
+    # Per-tenant reductions: owner-segment cumsums when the state carries
+    # the sorted permutation (manager-built states), else a [T, P] one-hot.
+    oh = None
+    if segs is None:
+        oh = pages.owner[None, :] == jnp.arange(T, dtype=jnp.int32)[:, None]  # [T,P]
 
     # ---- 1. per-tenant fast/slow sample counts (tier *before* migration) ----
     is_fast = pages.tier == TIER_FAST
     is_slow = pages.tier == TIER_SLOW
-    s_fast = jnp.where(oh & is_fast[None, :], sampled[None, :], 0).sum(axis=1)
-    s_slow = jnp.where(oh & is_slow[None, :], sampled[None, :], 0).sum(axis=1)
+    if segs is not None:
+        tier_s = pages.tier[segs.order]
+        sampled_s = sampled[segs.order].astype(jnp.uint32)
+        s_fast = bins.seg_sums(
+            jnp.where(tier_s == TIER_FAST, sampled_s, jnp.uint32(0)), segs.start
+        )
+        # segments span exactly the OWNED pages, and owned pages are always
+        # fast or slow (allocate/free set owner and tier together), so the
+        # slow-side sum is the segment total minus the fast side — one
+        # cumsum instead of two, identical u32 arithmetic
+        s_slow = bins.seg_sums(sampled_s, segs.start) - s_fast
+    else:
+        s_fast = jnp.where(oh & is_fast[None, :], sampled[None, :], 0).sum(axis=1)
+        s_slow = jnp.where(oh & is_slow[None, :], sampled[None, :], 0).sum(axis=1)
     pages, tenants, cooled, eff = bins.accumulate_and_count(
-        pages, tenants, sampled, params.num_bins, owner_onehot=oh
+        pages, tenants, sampled, params.num_bins, owner_onehot=oh, segs=segs
     )
 
     # ---- 2. FMMR update ------------------------------------------------------
@@ -257,7 +365,9 @@ def _epoch_core(
     else:
         # in-flight pages are excluded from the candidate histograms but
         # still occupy their source tier: holdings must count them
-        fast_hold, slow_hold = _per_tenant_pages(pages, max_tenants)
+        fast_hold, slow_hold = _per_tenant_pages(
+            pages, max_tenants, segs=segs, owner_onehot=oh
+        )
 
     # ---- 3. proportional reallocation (budget R/2) ---------------------------
     free_fast = params.fast_capacity - fast_hold.sum()
@@ -300,34 +410,24 @@ def _epoch_core(
 
     promote_mask, demote_mask = _select_victims(
         key, owner, slow_cand, fast_cand, hist_slow, hist_fast,
-        cum_slow, cum_fast, promote_quota, demote_quota, oh,
+        cum_slow, cum_fast, promote_quota, demote_quota, oh, segs,
     )
 
     plan = None
     if collect_plan:
-        # both id lists from one P-element scatter (positions are disjoint)
-        if P < 65536:
-            # selection totals are < 2^16: one packed position prefix sum
-            packed = promote_mask.astype(jnp.uint32) + (
-                demote_mask.astype(jnp.uint32) << 16
-            )
-            cum = jnp.cumsum(packed, dtype=jnp.uint32)
-            pos_p = (cum & 0xFFFF).astype(jnp.int32) - 1
-            pos_d = (cum >> 16).astype(jnp.int32) - 1
-        else:
-            pos_p = jnp.cumsum(promote_mask) - 1
-            pos_d = jnp.cumsum(demote_mask) - 1
-        idx = jnp.where(
-            promote_mask & (pos_p < plan_size),
-            pos_p,
-            jnp.where(demote_mask & (pos_d < plan_size), plan_size + pos_d, 2 * plan_size),
+        # id lists by rank lookup: the j-th selected page is the first index
+        # whose running selection count reaches j+1 — cumsum + searchsorted
+        # + masked identity, no P-element scatter (XLA:CPU scatters are
+        # element-serial; binary-searching plan_size ranks is ~20x cheaper)
+        j = jnp.arange(plan_size, dtype=jnp.int32)
+        cum_p = jnp.cumsum(promote_mask.astype(jnp.int32))
+        cum_d = jnp.cumsum(demote_mask.astype(jnp.int32))
+        idx_p = jnp.searchsorted(cum_p, j + 1, side="left").astype(jnp.int32)
+        idx_d = jnp.searchsorted(cum_d, j + 1, side="left").astype(jnp.int32)
+        plan = MigrationPlan(
+            promote=jnp.where(j < cum_p[-1], idx_p, -1),
+            demote=jnp.where(j < cum_d[-1], idx_d, -1),
         )
-        ids = (
-            jnp.full((2 * plan_size + 1,), -1, jnp.int32)
-            .at[idx]
-            .set(jnp.arange(P, dtype=jnp.int32), mode="drop")
-        )
-        plan = MigrationPlan(promote=ids[:plan_size], demote=ids[plan_size : 2 * plan_size])
 
     # ---- stats ---------------------------------------------------------------
     # selection takes exactly min(quota, candidates) pages per tenant, so the
@@ -401,13 +501,16 @@ def apply_plan(pages: PageState, plan: MigrationPlan) -> PageState:
 def _compact(mask, out_len: int, arrays, pads):
     """Stable-compact entries where ``mask`` holds to the front of fresh
     arrays of length ``out_len`` (entries beyond it are dropped — callers
-    count them as overflow). One cumsum + one scatter per array."""
-    pos = jnp.cumsum(mask) - 1
-    idx = jnp.where(mask & (pos < out_len), pos, out_len)
-    return [
-        jnp.full((out_len + 1,), pad, a.dtype).at[idx].set(a, mode="drop")[:out_len]
-        for a, pad in zip(arrays, pads)
-    ]
+    count them as overflow). Rank lookup instead of scatter: ONE cumsum
+    shared by every array, then the j-th kept entry is found by binary
+    search and gathered — searchsorted + gathers are orders of magnitude
+    cheaper than element-serial scatters on XLA:CPU."""
+    cum = jnp.cumsum(mask.astype(jnp.int32))
+    j = jnp.arange(out_len, dtype=jnp.int32)
+    idx = jnp.searchsorted(cum, j + 1, side="left").astype(jnp.int32)
+    idx = jnp.minimum(idx, mask.shape[0] - 1)
+    keep = j < cum[-1]
+    return [jnp.where(keep, a[idx], pad) for a, pad in zip(arrays, pads)]
 
 
 def _inflight_mask(state: PolicyState) -> Optional[jax.Array]:
@@ -487,9 +590,13 @@ def _queue_tick(
     w_heat = jnp.concatenate([queue.heat, nd[4], npr[4]])
     n_new = (plan.promote >= 0).sum() + (plan.demote >= 0).sum()
 
-    c_page, c_dir, c_enq, c_cmp, c_heat = _compact(
-        w_page >= 0, W, (w_page, w_dir, w_enq, w_cmp, w_heat), (-1, 0, 0, 0, 0)
-    )
+    # The workspace is already in FIFO order: the surviving queue prefix is
+    # front-compacted from the previous tick and new entries append after
+    # it. Cancellation holes and plan padding carry page == -1 and drop out
+    # of every mask below, so the drain can run DIRECTLY on the workspace —
+    # the old front-compaction pass (one cumsum + five scatters) was pure
+    # overhead and is gone; only the survivors are re-compacted at the end.
+    c_page, c_dir, c_enq, c_cmp, c_heat = w_page, w_dir, w_enq, w_cmp, w_heat
 
     # ---- bounded drain: demotes first, FIFO within each direction ----------
     cv = c_page >= 0
@@ -568,6 +675,7 @@ def _epoch_step_impl(
     pages, tenants, pm, dm, plan, stats = _epoch_core(
         state.pages, state.tenants, sampled, params, max_tenants, plan_size,
         count_clamp, collect_plan=True, exclude=_inflight_mask(state),
+        segs=state.segs,
     )
     pages, queue, epoch, stats = _commit(state, pages, tenants, pm, dm, plan, stats, params)
     new_state = state._replace(
@@ -633,10 +741,24 @@ def _multi_epoch_impl(
 
     # Pre-draw all sampling noise in one batched call (the per-epoch PRNG
     # split chain still advances identically to k epoch_step calls, so the
-    # exact-sampling path is bit-identical to single-stepping).
+    # exact-sampling path is bit-identical to single-stepping). The scan's
+    # noise stream was never bit-compatible with single-stepped sampling,
+    # so it uses exactly-standardized CLT deviates instead of true
+    # normals: popcount of 16 random bits is Binomial(16, 1/2), giving
+    # (pc - 8)/2 mean 0 and variance 1 EXACTLY. FMMR consumes per-tenant
+    # aggregates of thousands of pages where the CLT washes out the
+    # half-sigma granularity — and this costs half the threefry bits and
+    # none of the erfinv of a normal draw, which together were the single
+    # largest line in the fleet-scan profile (DESIGN.md §5).
     xs_z = None
     if not exact_sampling:
-        xs_z = jax.random.normal(jax.random.fold_in(state.rng, 0x5A), (k, P), jnp.float32)
+        half = (P + 1) // 2
+        bits = jax.random.bits(
+            jax.random.fold_in(state.rng, 0x5A), (k, half), jnp.uint32
+        )
+        pc = jax.lax.population_count
+        z2 = jnp.stack([pc(bits & 0xFFFF), pc(bits >> 16)], axis=-1)
+        xs_z = (z2.reshape(k, 2 * half)[:, :P].astype(jnp.float32) - 8.0) * 0.5
 
     # the queue tick consumes the plan id lists, so queue mode always
     # collects them internally even when the caller does not want them out
@@ -656,7 +778,7 @@ def _multi_epoch_impl(
         pages, tenants, pm, dm, plan, stats = _epoch_core(
             st.pages, st.tenants, sampled, params, max_tenants, plan_size,
             count_clamp, collect_plan=collect_plans or queue_mode,
-            exclude=_inflight_mask(st),
+            exclude=_inflight_mask(st), segs=st.segs,
         )
         pages, queue, epoch, stats = _commit(st, pages, tenants, pm, dm, plan, stats, params)
         st2 = st._replace(

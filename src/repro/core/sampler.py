@@ -25,8 +25,11 @@ def sample_accesses(
 
     ``sample_period`` may be a traced scalar so the whole epoch (including
     sampling) can live inside one jitted/scanned program; only ``exact`` must
-    be static. Callers scanning many epochs can pre-draw all normals in one
-    batched call and pass rows via ``z`` (``rng`` is then unused).
+    be static. Callers scanning many epochs can pre-draw all noise in one
+    batched call and pass rows via ``z`` (``rng`` is then unused); ``z`` may
+    be any mean-0/variance-1 deviates — the scan path uses standardized
+    popcount (CLT) deviates, which are cheaper than normals and
+    indistinguishable through the per-tenant aggregates FMMR consumes.
     """
     if exact:
         return counts.astype(jnp.uint32)

@@ -41,7 +41,8 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.simulator import ColocationSim, EpochRecord, WorkloadSpec
+from repro.core.manager import CentralManager
+from repro.core.simulator import OPTANE, ColocationSim, EpochRecord, WorkloadSpec
 
 
 # ------------------------------------------------------------------ events
@@ -290,6 +291,15 @@ def _phase_stats(history: List[EpochRecord], start: int, end: int, label: str) -
 
 
 # ---------------------------------------------------------------- executor
+def _collect_phases(sim: ColocationSim, scenario: Scenario, base: int) -> ScenarioResult:
+    history = sim.history[base : base + scenario.n_epochs]
+    phases = [
+        _phase_stats(history, start, end, label)
+        for start, end, label in scenario.phase_spans()
+    ]
+    return ScenarioResult(scenario=scenario, history=history, phases=phases)
+
+
 def run_scenario(
     sim: ColocationSim,
     scenario: Scenario,
@@ -316,9 +326,141 @@ def run_scenario(
         epoch: (lambda s, evs=evs: fire(s, evs)) for epoch, evs in by_epoch.items()
     }
     sim.run(scenario.n_epochs, events)
-    history = sim.history[base : base + scenario.n_epochs]
-    phases = [
-        _phase_stats(history, start, end, label)
-        for start, end, label in scenario.phase_spans()
+    return _collect_phases(sim, scenario, base)
+
+
+# ------------------------------------------------------------------- sweep
+@dataclass(frozen=True)
+class SweepPoint:
+    """One machine of a :class:`ScenarioSweep` — the per-machine knobs that
+    vary across the batched grid. Every field maps onto a TRACED
+    ``PolicyParams`` leaf (or the PRNG seed), so a whole grid shares one
+    compiled fleet program; shape-defining knobs (page count, queue size,
+    tenant-table size) live on the sweep itself because changing them
+    forces a fresh trace (DESIGN.md §5)."""
+
+    name: str
+    seed: int = 0  # manager PRNG + simulator access-noise stream
+    migration_budget: Optional[int] = None  # None = the sweep-wide default
+    migration_bandwidth: Optional[int] = None  # needs queue_size > 0
+    migration_latency: int = 0
+    sample_period: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class ScenarioSweep:
+    """One event schedule, a batched grid of machine configurations.
+
+    Every sweep point runs the SAME scenario (byte-identical event
+    timeline) on its own logical machine; the fleet backend advances all
+    of them in one vmapped device program per chunk
+    (``core.fleet.FleetManager``)."""
+
+    scenario: Scenario
+    points: Tuple[SweepPoint, ...]
+
+    def __post_init__(self):
+        assert len(self.points) > 0, "sweep needs at least one point"
+        names = [p.name for p in self.points]
+        assert len(set(names)) == len(names), "sweep point names must be unique"
+
+
+@dataclass
+class SweepResult:
+    sweep: ScenarioSweep
+    results: Dict[str, ScenarioResult]  # per sweep-point name
+    wall_s: float = 0.0
+
+    def to_jsonable(self) -> dict:
+        return {
+            "scenario": self.sweep.scenario.name,
+            "n_machines": len(self.sweep.points),
+            "wall_s": round(self.wall_s, 3),
+            "machines": {k: r.to_jsonable() for k, r in self.results.items()},
+        }
+
+
+def run_sweep(
+    sweep: ScenarioSweep,
+    *,
+    num_pages: int,
+    fast_capacity: int,
+    migration_budget: int,
+    max_tenants: int = 16,
+    sample_period: int = 100,
+    queue_size: int = 0,
+    machine=None,
+    epoch_seconds: float = 1.0,
+    access_noise: bool = True,
+    policy_chunk: int = 16,
+) -> SweepResult:
+    """Execute a :class:`ScenarioSweep` against the fleet backend.
+
+    Builds one ``CentralManager`` per sweep point (identical shapes, the
+    point's traced parameter overrides), wraps them in a
+    ``core.fleet.FleetManager``, and drives the shared event schedule: at
+    every phase boundary the events fire on each machine's simulator
+    (control-plane host operations — arrive/depart/resize work mid-sweep),
+    and the epochs between boundaries run CHUNKED through the fleet — each
+    simulator freezes its access distribution, the stacked counts advance
+    all machines in one vmapped scan, and one batched telemetry snapshot
+    feeds every machine's cost model (``ColocationSim._chunk_record``).
+
+    Chunk semantics match ``ColocationSim.run_chunk``: within a chunk the
+    access distribution is frozen and migration stalls are not modeled;
+    chunk boundaries (every event epoch, at least every ``policy_chunk``
+    epochs) re-measure placement exactly.
+    """
+    import time as _time
+
+    from repro.core.fleet import FleetManager
+
+    t0 = _time.time()
+    scenario = sweep.scenario
+    managers = []
+    for p in sweep.points:
+        mgr_kw = dict(
+            num_pages=num_pages, fast_capacity=fast_capacity,
+            migration_budget=migration_budget if p.migration_budget is None
+            else p.migration_budget,
+            max_tenants=max_tenants,
+            sample_period=sample_period if p.sample_period is None
+            else p.sample_period,
+            seed=p.seed, queue_size=queue_size,
+            migration_latency=p.migration_latency,
+        )
+        if p.migration_bandwidth is not None:
+            mgr_kw["migration_bandwidth"] = p.migration_bandwidth
+        managers.append(CentralManager(**mgr_kw))
+    fleet = FleetManager(managers)
+    sims = [
+        ColocationSim(
+            mgr, machine or OPTANE, epoch_seconds=epoch_seconds,
+            seed=p.seed, access_noise=access_noise,
+        )
+        for mgr, p in zip(managers, sweep.points)
     ]
-    return ScenarioResult(scenario=scenario, history=history, phases=phases)
+
+    boundaries = sorted({0, *(ev.epoch for ev in scenario.events), scenario.n_epochs})
+    cur = 0
+    while cur < scenario.n_epochs:
+        for ev in scenario.events_at(cur):
+            for sim in sims:
+                ev.apply(sim)
+        horizon = min(
+            [b for b in boundaries if b > cur], default=scenario.n_epochs
+        )
+        while cur < horizon:
+            k = min(policy_chunk, horizon - cur)
+            preps = [sim._chunk_prepare() for sim in sims]
+            counts = np.stack([c for c, _ctx in preps])
+            res = fleet.run_epochs(k, counts=counts)
+            for m, (sim, (_c, ctx)) in enumerate(zip(sims, preps)):
+                sim._chunk_record(res.machine(m), k, ctx)
+            cur += k
+
+    results = {
+        p.name: _collect_phases(sim, scenario, 0)
+        for p, sim in zip(sweep.points, sims)
+    }
+    return SweepResult(sweep=sweep, results=results, wall_s=_time.time() - t0)

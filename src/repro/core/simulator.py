@@ -364,21 +364,24 @@ class ColocationSim:
             migrated, stalled, queue_depth=queue_depth,
         )
 
-    def run_chunk(self, k: int) -> List[EpochRecord]:
-        """Run k epochs through the backend's fused ``lax.scan`` path.
-
-        The access distribution is frozen at the chunk entry (steady-state
-        assumption); intermediate miss ratios come from the backend's sampled
-        FMMR telemetry, the final epoch re-measures placement exactly.
-        Migration stalls are not modeled inside a chunk.
-        """
-        m = self.machine
+    def _chunk_prepare(self):
+        """(counts[P], ctx) for a chunked stretch: freeze the access
+        distribution at the chunk entry and draw one epoch's worth of
+        access counts (replayed every epoch by the scan). ``ctx`` carries
+        the frozen cost-model arrays for :meth:`_chunk_record`."""
         names, M, page_mask, threads, bpo = self._arrays()
         tier = np.asarray(self.backend.tiers())
         miss0 = (M * (tier == TIER_SLOW)[None, :]).sum(axis=1)
         lat, _ = self._latencies(miss0, 0.0, threads, bpo)
         ops = threads / lat * self.epoch_s
-        res = self.backend.run_epochs(k, counts=self._sample_counts(M, ops))
+        return self._sample_counts(M, ops), (names, M, threads, bpo)
+
+    def _chunk_record(self, res, k: int, ctx) -> List[EpochRecord]:
+        """Fold a ``MultiEpochResult`` for a chunk prepared by
+        :meth:`_chunk_prepare` into the epoch history (one telemetry
+        snapshot for the whole chunk)."""
+        m = self.machine
+        names, M, threads, bpo = ctx
 
         handles = [self.handles[nm] for nm in names]
         fmmr_now = np.asarray(res.stats.fmmr_now)[:, handles]  # [k, n]
@@ -411,6 +414,18 @@ class ColocationSim:
                 fast_op, slow_op, migrated[i], stalled=False, queue_depth=depth[i],
             )
         return self.history[-k:]
+
+    def run_chunk(self, k: int) -> List[EpochRecord]:
+        """Run k epochs through the backend's fused ``lax.scan`` path.
+
+        The access distribution is frozen at the chunk entry (steady-state
+        assumption); intermediate miss ratios come from the backend's sampled
+        FMMR telemetry, the final epoch re-measures placement exactly.
+        Migration stalls are not modeled inside a chunk.
+        """
+        counts, ctx = self._chunk_prepare()
+        res = self.backend.run_epochs(k, counts=counts)
+        return self._chunk_record(res, k, ctx)
 
     def run(
         self,

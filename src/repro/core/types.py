@@ -106,6 +106,43 @@ class PageState(NamedTuple):
         )
 
 
+class OwnerSegments(NamedTuple):
+    """Host-maintained owner-sorted page permutation (DESIGN.md §5).
+
+    Page ownership only changes on control-plane operations (allocate /
+    free), so the manager keeps a permutation of page ids sorted by
+    (owner, page id) — stable, unowned pages last — and rebuilds it there.
+    Inside the fused tick every per-tenant reduction then becomes a gather
+    into owner-sorted order plus ONE global cumsum with per-segment offset
+    subtraction: O(P) gathers/cumsums (cheap, batchable over a fleet axis)
+    instead of [T, P] one-hot passes and P-element scatters (the two op
+    classes XLA:CPU executes serially). Results are bit-identical — the
+    within-tenant order is page-id ascending, exactly the tie-break order
+    the one-hot path reduces in.
+    """
+
+    order: jax.Array  # i32[P] page ids sorted by (owner, id); unowned last
+    inv: jax.Array  # i32[P] inverse permutation: inv[order[i]] = i
+    start: jax.Array  # i32[T+1] first sorted index per tenant; start[T] = #owned
+
+    @classmethod
+    def build(cls, owner, max_tenants: int) -> "OwnerSegments":
+        """Host-side rebuild from an owner array (numpy or device)."""
+        import numpy as np
+
+        own = np.asarray(owner)
+        key = np.where(own >= 0, own, max_tenants)
+        order = np.argsort(key, kind="stable").astype(np.int32)
+        inv = np.empty_like(order)
+        inv[order] = np.arange(order.shape[0], dtype=np.int32)
+        counts = np.bincount(key, minlength=max_tenants + 1)
+        start = np.zeros((max_tenants + 1,), np.int32)
+        np.cumsum(counts[:max_tenants], out=start[1:])
+        return cls(
+            order=jnp.asarray(order), inv=jnp.asarray(inv), start=jnp.asarray(start)
+        )
+
+
 class MigrationQueue(NamedTuple):
     """Fixed-shape in-flight migration queue (DESIGN.md §4).
 
@@ -182,6 +219,10 @@ class PolicyState(NamedTuple):
     rng: jax.Array  # PRNG key for the PEBS-analogue subsampling
     queue: Optional["MigrationQueue"] = None  # None == zero-capacity queue
     epoch: Optional[jax.Array] = None  # i32[] epoch counter (queue clock)
+    # Owner-sorted page permutation (None = derive reductions from a [T, P]
+    # one-hot instead — the legacy path; states built by the manager carry
+    # segments and take the cheaper gather/cumsum path, DESIGN.md §5).
+    segs: Optional["OwnerSegments"] = None
 
     @classmethod
     def create(

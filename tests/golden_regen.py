@@ -11,6 +11,11 @@ Two locked traces live in ``tests/golden/``:
   epochs (64 pages, 3 tenants, exact sampling). ``policy.epoch_step`` AND
   ``policy.multi_epoch`` must both replay it bit-identically, so refactors
   cannot silently change migration decisions.
+* ``fleet_trace.json`` — the same policy spec on a 3-machine
+  ``core.fleet.FleetManager`` (per-machine seeds and migration budgets),
+  telemetry per machine per epoch. The vmapped fleet scan must replay it
+  bit-identically, and each machine's rows must equal a serial
+  ``CentralManager.run_epochs`` run (locked by tests/test_fleet.py).
 
 Regenerate (ONLY when the frozen reference or the trace spec changes):
 
@@ -34,6 +39,7 @@ import numpy as np
 GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden")
 BASELINE_TRACE_PATH = os.path.join(GOLDEN_DIR, "baseline_traces.json")
 POLICY_TRACE_PATH = os.path.join(GOLDEN_DIR, "policy_trace.json")
+FLEET_TRACE_PATH = os.path.join(GOLDEN_DIR, "fleet_trace.json")
 
 # ----------------------------------------------------------- baseline trace
 P, FAST, BUDGET, THRESHOLD = 256, 64, 32, 6
@@ -157,6 +163,53 @@ def drive_policy_singlestep() -> list:
     return out
 
 
+# -------------------------------------------------------------- fleet trace
+# 3 machines on the policy-trace geometry: per-machine seeds AND migration
+# budgets differ (both traced), so the golden locks the vmapped program with
+# genuinely heterogeneous PolicyParams leaves.
+FLEET_MACHINES = ((5, 16), (6, 8), (7, 12))  # (seed, migration_budget)
+
+
+def make_fleet():
+    from repro.core.fleet import FleetManager
+    from repro.core.manager import CentralManager
+
+    machines = []
+    for seed, budget in FLEET_MACHINES:
+        m = CentralManager(
+            num_pages=POLICY_P, fast_capacity=POLICY_FAST,
+            migration_budget=budget, max_tenants=POLICY_MAX_T,
+            sample_period=100, exact_sampling=True, seed=seed,
+        )
+        for n_pages, t_miss in POLICY_TENANTS:
+            h = m.register(t_miss)
+            m.allocate(h, n_pages)
+        machines.append(m)
+    return FleetManager(machines)
+
+
+def drive_fleet() -> list:
+    """Per-machine per-epoch telemetry of one fleet run (counts shared)."""
+    fleet = make_fleet()
+    counts = policy_counts()
+    res = fleet.run_epochs(
+        POLICY_EPOCHS, counts=np.broadcast_to(counts, (len(fleet),) + counts.shape),
+        collect_plans=True,
+    )
+    out = []
+    for m in range(len(fleet)):
+        records = res.machine(m).unstack()
+        tier = fleet.machines[m].tiers()
+        epochs = [epoch_record(records[e], tier) for e in range(POLICY_EPOCHS)]
+        # only the final placement is meaningful per machine (the fleet
+        # takes one snapshot at the end, not one per epoch)
+        for e in range(POLICY_EPOCHS - 1):
+            epochs[e].pop("tier")
+        out.append({"seed": FLEET_MACHINES[m][0],
+                    "budget": FLEET_MACHINES[m][1], "epochs": epochs})
+    return out
+
+
 def regenerate(golden_dir: str) -> None:
     """Write both golden traces into ``golden_dir`` (same basenames as the
     committed ``BASELINE_TRACE_PATH``/``POLICY_TRACE_PATH``)."""
@@ -176,6 +229,12 @@ def regenerate(golden_dir: str) -> None:
                             "SEED": POLICY_SEED,
                             "COUNTS_SEED": POLICY_COUNTS_SEED},
                    "epochs": drive_policy_singlestep()}, f)
+    with open(os.path.join(golden_dir, os.path.basename(FLEET_TRACE_PATH)), "w") as f:
+        json.dump({"spec": {"P": POLICY_P, "FAST": POLICY_FAST,
+                            "EPOCHS": POLICY_EPOCHS,
+                            "MACHINES": [list(m) for m in FLEET_MACHINES],
+                            "COUNTS_SEED": POLICY_COUNTS_SEED},
+                   "machines": drive_fleet()}, f)
 
 
 def check() -> int:
@@ -184,7 +243,7 @@ def check() -> int:
     with tempfile.TemporaryDirectory() as tmp:
         regenerate(tmp)
         diverged = 0
-        for path in (BASELINE_TRACE_PATH, POLICY_TRACE_PATH):
+        for path in (BASELINE_TRACE_PATH, POLICY_TRACE_PATH, FLEET_TRACE_PATH):
             name = os.path.basename(path)
             with open(path) as f:
                 committed = json.load(f)
@@ -210,6 +269,7 @@ def main(argv=None) -> int:
     regenerate(GOLDEN_DIR)
     print(f"wrote {BASELINE_TRACE_PATH}")
     print(f"wrote {POLICY_TRACE_PATH}")
+    print(f"wrote {FLEET_TRACE_PATH}")
     return 0
 
 
