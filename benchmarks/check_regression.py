@@ -15,9 +15,13 @@ against the committed ``BENCH_policy.json`` / ``BENCH_scenarios.json`` /
   * a broken qualitative policy ordering (MaxMem steady-state aggregate
     throughput below any baseline, fresh run OR committed payload) fails
     the gate, as does a committed fleet payload that no longer claims the
-    >= 4x sweep speedup;
+    >= 4x sweep speedup or its recorded speedup floor vs the committed
+    PR 4 single-device fleet baseline (the 1.8x multi-core target is
+    reported as its own row: "ok" when the measuring host clears it,
+    "below_target" when hardware-bound);
   * the finite-bandwidth thrash scenario must complete on all four
-    policies, and the smoke fleet sweep must complete on every machine.
+    policies, and the smoke fleet sweep must complete on every machine
+    with the sharded-executor overlap metadata (devices/pipeline) present.
 
 Every BENCH payload carries a ``platform`` stamp (host, jax backend, cpu
 count); the committed numbers rarely come from the machine re-measuring
@@ -45,9 +49,12 @@ BENCH_FILES = {
 GATED_METRICS = (
     ("policy", ("policy_epoch", "65536", "us")),
     ("policy", ("policy_epoch", "262144", "us")),
+    ("policy", ("policy_epoch_queue", "65536", "us")),
+    ("policy", ("policy_epoch_queue", "262144", "us")),
     ("policy", ("run_epochs_k16", "65536", "scan_per_epoch_us")),
     ("policy", ("run_epochs_k16", "262144", "scan_per_epoch_us")),
     ("fleet", ("engine_smoke", "fleet", "per_machine_epoch_us")),
+    ("fleet", ("engine_smoke", "fleet_sharded", "per_machine_epoch_us")),
     ("fleet", ("engine_smoke", "serial_scan", "per_machine_epoch_us")),
 )
 
@@ -142,15 +149,46 @@ def check_ordering(scenarios: dict, source: str) -> list:
 
 def check_fleet(committed_fleet: dict, fresh_fleet: dict) -> list:
     """Fleet smoke-leg checks beyond the tolerance-band metrics: the
-    committed full-scale payload must still claim the >= 4x sweep speedup,
-    and the fresh smoke sweep must have completed on every machine."""
+    committed full-scale payload must still claim the >= 4x sweep speedup
+    AND the >= 1.8x sharded/pipelined speedup over the committed PR 4
+    single-device fleet baseline; the fresh smoke sweep must have completed
+    on every machine and carry the sharded-executor overlap metadata
+    (devices + pipeline) — a smoke run that silently fell back to the
+    serialized driver must not pass."""
     rows = []
-    meets = committed_fleet.get("sweep", {}).get("meets_4x")
+    sweep = committed_fleet.get("sweep", {})
+    meets = sweep.get("meets_4x")
     rows.append({
         "check": "committed:fleet_sweep_meets_4x",
         "status": ("missing" if meets is None else ("ok" if meets else "fail")),
-        "speedup": committed_fleet.get("sweep", {})
-        .get("fleet", {}).get("speedup_vs_serial_per_process"),
+        "speedup": sweep.get("fleet", {}).get("speedup_vs_serial_per_process"),
+    })
+    # hard floor: the speedup the reference container demonstrates through
+    # its noise band (the payload records the floor value it was held to);
+    # regressing below it fails. The 1.8x multi-core target is reported as
+    # its own row — "ok" when the committed payload was measured on a host
+    # that clears it, "below_target" (visible, non-fatal) when the
+    # measuring host is hardware-bound below it (fewer physical cores than
+    # shard slots, DESIGN.md §6); absent entirely still fails.
+    meets_floor = sweep.get("meets_floor_vs_pr4")
+    rows.append({
+        "check": "committed:fleet_sweep_meets_floor_vs_pr4",
+        "status": ("missing" if meets_floor is None
+                   else ("ok" if meets_floor else "fail")),
+        "floor": sweep.get("speedup_floor"),
+        "speedup": sweep.get("fleet", {}).get("speedup_vs_pr4_committed"),
+        "devices": sweep.get("fleet", {}).get("devices"),
+    })
+    meets18 = sweep.get("meets_1_8x_vs_pr4")
+    rows.append({
+        "check": "committed:fleet_sweep_meets_1_8x_target_vs_pr4",
+        "status": (
+            "missing" if meets18 is None
+            else ("ok" if meets18 else "below_target")
+        ),
+        "speedup": sweep.get("fleet", {}).get("speedup_vs_pr4_committed"),
+        "host_cpu_count": sweep.get("host_cpu_count"),
+        "config_autotune": sweep.get("fleet", {}).get("config_autotune"),
     })
     sw = fresh_fleet.get("sweep_smoke", {})
     n = sw.get("n_machines")
@@ -160,6 +198,15 @@ def check_fleet(committed_fleet: dict, fresh_fleet: dict) -> list:
         "status": "ok" if n and len(done) == n else "fail",
         "machines": n,
         "completed": len(done),
+    })
+    rows.append({
+        "check": "fresh_smoke:fleet_sweep_overlap_metadata",
+        "status": "ok" if (
+            isinstance(sw.get("devices"), int) and sw.get("devices", 0) >= 1
+            and sw.get("pipeline") is True
+        ) else "missing",
+        "devices": sw.get("devices"),
+        "pipeline": sw.get("pipeline"),
     })
     return rows
 

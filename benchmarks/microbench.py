@@ -49,6 +49,21 @@ def _time_wall(fn, n=3, warmup=1) -> float:
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def _time_wall_min(fn, n=3, warmup=1) -> float:
+    """Min-of-reps wall time: the gating convention for noisy shared
+    hosts (cf. vectorization_bench) — the minimum is the least polluted
+    estimate of the code's actual cost, and far more stable than the mean
+    for the smoke-scale legs the CI perf gate re-measures."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
 def _policy_state(rng, P, T):
     pages = PageState.create(P)._replace(
         owner=jnp.asarray(rng.integers(0, T, P), jnp.int32),
@@ -108,6 +123,7 @@ def policy_bench() -> dict:
             "commit": "c35e7fc (lexsort ranks, W=4096 victim window)",
         },
         "policy_epoch": {},
+        "policy_epoch_queue": {},
         "run_epochs_k16": {},
     }
     for P in (65536, 262144):
@@ -125,44 +141,42 @@ def policy_bench() -> dict:
             entry["speedup_vs_seed"] = SEED_POLICY_EPOCH_64K_US / epoch_us
         out["policy_epoch"][str(P)] = entry
 
-        if P == 65536:
-            # queue-mode (bounded data plane) overhead over the instant
-            # tick, both on manager-grade states (owner segments attached —
-            # every production queue state goes through CentralManager and
-            # carries them), so the ratio isolates the data plane itself
-            from repro.core.types import OwnerSegments, PolicyState
+        # queue-mode (bounded data plane) overhead over the instant tick at
+        # BOTH engine scales, on manager-grade states (owner segments
+        # attached — every production queue state goes through
+        # CentralManager and carries them), so the ratio isolates the data
+        # plane itself
+        from repro.core.types import OwnerSegments, PolicyState
 
-            segs = OwnerSegments.build(np.asarray(pages.owner), T)
-            pending = jnp.asarray(rng.poisson(200, P), jnp.uint32)
-            istate = PolicyState.create(P, T)._replace(
-                pages=pages, tenants=tenants, pending=pending, segs=segs,
-            )
-            qstate = PolicyState.create(P, T, queue_size=2 * R)._replace(
-                pages=pages, tenants=tenants, pending=pending, segs=segs,
-            )
-            qparams = params._replace(migration_bandwidth=jnp.int32(R // 2))
+        segs = OwnerSegments.build(np.asarray(pages.owner), T)
+        pending = jnp.asarray(rng.poisson(200, P), jnp.uint32)
+        istate = PolicyState.create(P, T)._replace(
+            pages=pages, tenants=tenants, pending=pending, segs=segs,
+        )
+        qstate = PolicyState.create(P, T, queue_size=2 * R)._replace(
+            pages=pages, tenants=tenants, pending=pending, segs=segs,
+        )
+        qparams = params._replace(migration_bandwidth=jnp.int32(R // 2))
 
-            def instant_epoch():
-                st, _plan, _stats = policy.epoch_step(
-                    istate, params, max_tenants=T, plan_size=R)
-                return st.pages.tier
+        def instant_epoch():
+            st, _plan, _stats = policy.epoch_step(
+                istate, params, max_tenants=T, plan_size=R)
+            return st.pages.tier
 
-            def queue_epoch():
-                st, _plan, _stats = policy.epoch_step(
-                    qstate, qparams, max_tenants=T, plan_size=R)
-                return st.pages.tier
+        def queue_epoch():
+            st, _plan, _stats = policy.epoch_step(
+                qstate, qparams, max_tenants=T, plan_size=R)
+            return st.pages.tier
 
-            i_us = _time(instant_epoch, n=n_rep)
-            q_us = _time(queue_epoch, n=n_rep)
-            out["policy_epoch_queue"] = {
-                str(P): {
-                    "us": q_us,
-                    "instant_us": i_us,
-                    "overhead_vs_instant": q_us / i_us,
-                    "queue_size": 2 * R,
-                    "bandwidth": R // 2,
-                }
-            }
+        i_us = _time(instant_epoch, n=n_rep)
+        q_us = _time(queue_epoch, n=n_rep)
+        out["policy_epoch_queue"][str(P)] = {
+            "us": q_us,
+            "instant_us": i_us,
+            "overhead_vs_instant": q_us / i_us,
+            "queue_size": 2 * R,
+            "bandwidth": R // 2,
+        }
 
         counts = rng.poisson(200, P).astype(np.int64)
         singles_us, scan_us = _bench_manager(P, T, R, counts, k=k)
@@ -196,18 +210,24 @@ def _fleet_managers(n_machines, n_pages, max_tenants, budget):
 def fleet_bench(n_machines: int = 16, n_pages: int = 65536, n_epochs: int = 16) -> dict:
     """Engine-level fleet timings (cached per process per config).
 
-    Three drivers over the SAME per-machine workload:
+    Four drivers over the SAME per-machine workload:
 
       * ``serial_singles`` — the pre-fleet sweep driver: for every machine,
         per-epoch ``record_access`` + ``run_epoch`` + a telemetry snapshot
         read (K x E dispatches and host syncs);
       * ``serial_scan``    — per-machine fused ``run_epochs`` (K dispatches,
         K snapshots);
-      * ``fleet``          — ``FleetManager.run_epochs``: ONE vmapped scan
-        dispatch and ONE stacked snapshot for all machines.
+      * ``fleet``          — ``FleetManager.run_epochs`` on ONE device: one
+        vmapped scan dispatch and one stacked snapshot for all machines;
+      * ``fleet_sharded``  — the same program with the machine axis
+        partitioned over every visible XLA device (``devices`` records how
+        many; identical to ``fleet`` on single-device hosts), telemetry
+        trimmed to the sweep record fields and the stacked placement read
+        through ``stacked_placement`` (the sweep pipeline's fetch path).
 
-    Per-machine results of all three are bit-identical (tests/test_fleet.py);
-    only the dispatch/host-sync structure differs.
+    Per-machine results of all four are bit-identical (tests/test_fleet.py,
+    tests/test_fleet_sharded.py); only the dispatch/host-sync structure
+    differs.
     """
     global _FLEET_BENCH_CACHE
     key = (n_machines, n_pages, n_epochs)
@@ -215,6 +235,8 @@ def fleet_bench(n_machines: int = 16, n_pages: int = 65536, n_epochs: int = 16) 
         _FLEET_BENCH_CACHE = {}
     if key in _FLEET_BENCH_CACHE:
         return _FLEET_BENCH_CACHE[key]
+    import jax
+
     from repro.core.fleet import FleetManager
 
     T = 16
@@ -228,7 +250,8 @@ def fleet_bench(n_machines: int = 16, n_pages: int = 65536, n_epochs: int = 16) 
     # convention _bench_manager uses.
     singles_ms = _fleet_managers(n_machines, n_pages, T, R)
     scans_ms = _fleet_managers(n_machines, n_pages, T, R)
-    fleet_f = FleetManager(_fleet_managers(n_machines, n_pages, T, R))
+    fleet_f = FleetManager(_fleet_managers(n_machines, n_pages, T, R), devices=1)
+    fleet_s = FleetManager(_fleet_managers(n_machines, n_pages, T, R))
 
     def singles():
         for i, m in enumerate(singles_ms):
@@ -247,13 +270,18 @@ def fleet_bench(n_machines: int = 16, n_pages: int = 65536, n_epochs: int = 16) 
         for m in fleet_f.machines:
             m.tiers()
 
-    reps = 3 if n_pages <= 16384 else 2
+    def fleet_sharded():
+        fleet_s.run_epochs(n_epochs, counts=counts, trim_stats=True)
+        fleet_s.stacked_placement()
+
+    reps = 5 if n_pages <= 16384 else 2
     me = n_machines * n_epochs
     out = {"n_machines": n_machines, "n_pages": n_pages,
-           "n_epochs": n_epochs, "max_tenants": T, "migration_budget": R}
+           "n_epochs": n_epochs, "max_tenants": T, "migration_budget": R,
+           "devices": jax.local_device_count()}
     for name, fn in (("serial_singles", singles), ("serial_scan", scans),
-                     ("fleet", fleet)):
-        total = _time_wall(fn, n=reps, warmup=1)
+                     ("fleet", fleet), ("fleet_sharded", fleet_sharded)):
+        total = _time_wall_min(fn, n=reps, warmup=1)
         out[name] = {
             "total_us": total,
             "per_machine_epoch_us": total / me,
@@ -264,6 +292,10 @@ def fleet_bench(n_machines: int = 16, n_pages: int = 65536, n_epochs: int = 16) 
     )
     out["fleet"]["speedup_vs_scan"] = (
         out["serial_scan"]["total_us"] / out["fleet"]["total_us"]
+    )
+    out["fleet_sharded"]["devices"] = jax.local_device_count()
+    out["fleet_sharded"]["speedup_vs_fleet"] = (
+        out["fleet"]["total_us"] / out["fleet_sharded"]["total_us"]
     )
     _FLEET_BENCH_CACHE[key] = out
     return out
@@ -286,12 +318,13 @@ def run() -> Rows:
         "micro_policy_epoch_256k_pages", pb["policy_epoch"]["262144"]["us"],
         f"pages=262144;tenants={T};budget={R}",
     )
-    q = pb["policy_epoch_queue"]["65536"]
-    rows.add(
-        "micro_policy_epoch_64k_queue_mode", q["us"],
-        f"queue={q['queue_size']};bw={q['bandwidth']};"
-        f"overhead_vs_instant={q['overhead_vs_instant']:.2f}",
-    )
+    for p_key, label in (("65536", "64k"), ("262144", "256k")):
+        q = pb["policy_epoch_queue"][p_key]
+        rows.add(
+            f"micro_policy_epoch_{label}_queue_mode", q["us"],
+            f"queue={q['queue_size']};bw={q['bandwidth']};"
+            f"overhead_vs_instant={q['overhead_vs_instant']:.2f}",
+        )
     for p_key, label in (("65536", "64k"), ("262144", "256k")):
         d = pb["run_epochs_k16"][p_key]
         rows.add(
@@ -311,6 +344,13 @@ def run() -> Rows:
         f"agg_eps={fb['fleet']['agg_epochs_per_sec']:.1f};"
         f"speedup_vs_singles={fb['fleet']['speedup_vs_singles']:.2f};"
         f"speedup_vs_scan={fb['fleet']['speedup_vs_scan']:.2f}",
+    )
+    fs = fb["fleet_sharded"]
+    rows.add(
+        "micro_fleet_sharded_16x64k_per_machine_epoch",
+        fs["per_machine_epoch_us"],
+        f"devices={fs['devices']};agg_eps={fs['agg_epochs_per_sec']:.1f};"
+        f"speedup_vs_fleet={fs['speedup_vs_fleet']:.2f}",
     )
 
     # hot_bins kernel (interpret mode)

@@ -89,11 +89,14 @@ def accumulate_and_count(
     last1 = jnp.where(touched, tenants.cool_epoch[owner], pages.last_cool)
 
     # cooling: any page of tenant t reaching the top-bin threshold halves all.
-    # Max-reduce over an owner one-hot instead of a serial scatter-max.
     thresh = cool_threshold(num_bins)
     over = touched & (new_count >= thresh) & (pages.owner >= 0)
     if segs is not None:
-        cooled = seg_sums(over[segs.order].astype(jnp.int32), segs.start) > 0
+        # one [T+1] scatter-add of the over flags (cheaper than the global
+        # cumsum + sorted gather under both XLA:CPU runtimes; exact integer
+        # counts, so the any-reduction is bit-identical)
+        idx = jnp.where(over, owner, T)
+        cooled = jnp.zeros((T + 1,), jnp.int32).at[idx].add(1, mode="drop")[:T] > 0
     else:
         if owner_onehot is None:
             owner_onehot = pages.owner[None, :] == jnp.arange(T, dtype=jnp.int32)[:, None]

@@ -10,37 +10,52 @@ segments) along a leading machine axis and runs the fused policy tick
 ``policy._multi_epoch_impl``: K machines x k epochs advance in ONE dispatch
 with ONE host transfer for the stacked telemetry snapshot.
 
+Sharding (DESIGN.md §6): when more than one XLA device is visible the
+machine axis is additionally partitioned over ``jax.devices()`` with
+``shard_map`` — K is padded up to a device multiple with *inert* machines
+(no tenants, no backlog) whose rows are dropped from every result. No
+reduction crosses a machine slice, so per-machine rows stay BIT-IDENTICAL
+to the single-device vmap path and to running each machine alone
+(``tests/test_fleet.py``, ``tests/test_fleet_sharded.py``). On CPU hosts
+the layout is demonstrable via
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+
 Sweepable without recompilation (traced, batched ``PolicyParams`` leaves):
 seeds, migration budgets/bandwidth/latency, sample periods, fast capacities,
 targets, fairness mode. Forcing a fresh trace (static shapes): page count,
 tenant-table size, queue capacity, plan size, epoch count per call.
 
-Per-machine results are BIT-IDENTICAL to running each machine alone through
-``policy.epoch_step``/``policy.multi_epoch`` — vmap only adds a batch axis,
-every reduction stays within its machine slice. ``tests/test_fleet.py``
-locks this, including queue mode and mid-sweep free()/unregister churn.
-
 Surface:
 
   * :func:`fleet_multi_epoch` — raw batched entry point on stacked pytrees.
+  * :func:`fleet_multi_epoch_sharded` — the same program with the machine
+    axis partitioned over a device mesh.
   * :class:`FleetManager` — facade over K :class:`CentralManager` control
     planes: register/allocate/free/telemetry stay per-machine host
     operations on the underlying managers; ``run_epochs`` stacks their
     states, runs the fleet program, and writes the advanced slices back.
+    Dirty-tracking makes the stack incremental: machines untouched since
+    the previous dispatch are never restacked (their advanced slices stay
+    parked as lazy views), so a dispatch with no intervening control-plane
+    operations performs ZERO host->device state uploads.
+    ``run_epochs_async`` overlaps the telemetry fetch with host work — the
+    double-buffered sweep pipeline in ``scenario.run_sweep`` builds on it.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache, partial
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import policy
 from repro.core.manager import CentralManager, MultiEpochResult
-from repro.core.types import EpochStats, MigrationPlan
+from repro.core.types import EpochStats, MigrationPlan, OwnerSegments, PolicyState
 
 
 def fleet_multi_epoch(
@@ -54,6 +69,7 @@ def fleet_multi_epoch(
     exact_sampling: bool = False,
     count_clamp: int = policy.COUNT_CLAMP,
     collect_plans: bool = False,
+    trim_stats: bool = False,
 ):
     """Advance K stacked machines by ``k`` epochs in one dispatch.
 
@@ -62,27 +78,61 @@ def fleet_multi_epoch(
     each machine's recorded backlog), ``[K, P]`` (each machine replays its
     row every epoch) or ``[K, k, P]``. Returns (fstate', plans, stats,
     flagged) with leaves shaped ``[K, k, ...]`` for the per-epoch outputs.
-    State buffers are donated on accelerator backends.
+    State buffers are donated on accelerator backends. ``trim_stats`` drops
+    the telemetry leaves the sweep record path never reads
+    (``policy._trim_stats``).
     """
     return _jitted_fleet(policy._donate_state())(
         fstate, fparams, counts, k=k, max_tenants=max_tenants,
         plan_size=plan_size, exact_sampling=exact_sampling,
         count_clamp=count_clamp, collect_plans=collect_plans,
+        trim_stats=trim_stats,
     )
 
 
 def _fleet_impl(
     fstate, fparams, counts, *, k, max_tenants, plan_size, exact_sampling,
-    count_clamp, collect_plans,
+    count_clamp, collect_plans, trim_stats=False,
 ):
     step = partial(
         policy._multi_epoch_impl, k=k, max_tenants=max_tenants,
         plan_size=plan_size, exact_sampling=exact_sampling,
         count_clamp=count_clamp, collect_plans=collect_plans,
+        trim_stats=trim_stats,
     )
     if counts is None:
         return jax.vmap(lambda s, p: step(s, p, None))(fstate, fparams)
     return jax.vmap(lambda s, p, c: step(s, p, c))(fstate, fparams, counts)
+
+
+@lru_cache(maxsize=None)
+def _machine_slicer():
+    """One jitted program extracting machine ``i``'s slice from the stacked
+    state: a single dispatch for the whole pytree. Eager per-leaf ``a[i]``
+    indexing costs milliseconds PER LEAF on a device-sharded stack (each
+    slice is its own cross-device gather); this is the difference between
+    ~1 ms and ~70 ms per machine materialization on a 4-device CPU host."""
+    def slice_i(tree_, i):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            tree_,
+        )
+    return jax.jit(slice_i)
+
+
+@lru_cache(maxsize=None)
+def _machine_updater():
+    """Jitted counterpart of :func:`_machine_slicer` for the dirty-machine
+    re-upload: writes one machine's state back into row ``i`` of the
+    stacked pytree in a single dispatch."""
+    def update_i(tree_, state_i, i):
+        return jax.tree.map(
+            lambda F, s: jax.lax.dynamic_update_index_in_dim(
+                F, jnp.expand_dims(s, 0), i, 0
+            ),
+            tree_, state_i,
+        )
+    return jax.jit(update_i)
 
 
 @lru_cache(maxsize=None)
@@ -91,10 +141,71 @@ def _jitted_fleet(donate: bool):
         _fleet_impl,
         static_argnames=(
             "k", "max_tenants", "plan_size", "exact_sampling", "count_clamp",
-            "collect_plans",
+            "collect_plans", "trim_stats",
         ),
         donate_argnums=(0,) if donate else (),
     )
+
+
+@lru_cache(maxsize=None)
+def _jitted_sharded_fleet(
+    mesh: Mesh, donate: bool, has_counts: bool, k: int, max_tenants: int,
+    plan_size: int, exact_sampling: bool, count_clamp: int,
+    collect_plans: bool, trim_stats: bool,
+):
+    """One compiled shard_map program per (mesh, static-config) pair.
+
+    Every input/output leaf carries the machine axis in front, so a single
+    ``PartitionSpec('machines')`` prefix partitions the whole pytree; the
+    per-shard body is the plain vmapped scan, and since no collective
+    crosses a machine slice the partitioning is communication-free
+    (``check_rep=False`` only disables the replication check shard_map
+    would otherwise try to prove)."""
+    impl = partial(
+        _fleet_impl, k=k, max_tenants=max_tenants, plan_size=plan_size,
+        exact_sampling=exact_sampling, count_clamp=count_clamp,
+        collect_plans=collect_plans, trim_stats=trim_stats,
+    )
+    spec = PartitionSpec("machines")
+    if has_counts:
+        fn = shard_map(
+            lambda s, p, c: impl(s, p, c), mesh=mesh,
+            in_specs=(spec, spec, spec), out_specs=spec, check_rep=False,
+        )
+    else:
+        fn = shard_map(
+            lambda s, p: impl(s, p, None), mesh=mesh,
+            in_specs=(spec, spec), out_specs=spec, check_rep=False,
+        )
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def fleet_multi_epoch_sharded(
+    fstate,
+    fparams,
+    counts: Optional[jax.Array] = None,
+    *,
+    mesh: Mesh,
+    k: int,
+    max_tenants: int,
+    plan_size: int,
+    exact_sampling: bool = False,
+    count_clamp: int = policy.COUNT_CLAMP,
+    collect_plans: bool = False,
+    trim_stats: bool = False,
+):
+    """:func:`fleet_multi_epoch` with the machine axis partitioned over
+    ``mesh`` (axis name ``machines``). The leading dimension of every leaf
+    must be divisible by the mesh size — :class:`FleetManager` guarantees
+    this by padding with inert machines. Per-machine rows are bit-identical
+    to the unsharded path (no reduction crosses a machine slice)."""
+    fn = _jitted_sharded_fleet(
+        mesh, policy._donate_state(), counts is not None, k, max_tenants,
+        plan_size, exact_sampling, count_clamp, collect_plans, trim_stats,
+    )
+    if counts is None:
+        return fn(fstate, fparams)
+    return fn(fstate, fparams, counts)
 
 
 @dataclasses.dataclass
@@ -126,6 +237,41 @@ class FleetMultiEpochResult:
         )
 
 
+class FleetPendingResult:
+    """A fleet advance running on the fleet's dispatch worker thread.
+
+    JAX's CPU backend executes dispatches synchronously on the calling
+    thread, so genuine host/device overlap needs the device program driven
+    from a dedicated worker: XLA releases the GIL for the whole execution,
+    and the telemetry ``device_get`` happens inside the worker too — the
+    main thread records the previous chunk / prepares the next one while
+    the device runs. ``result()`` joins, folds the per-machine queue
+    counters exactly once, strips the inert padding rows and returns the
+    host-side :class:`FleetMultiEpochResult`. (On accelerator backends the
+    worker merely dispatches and blocks on the transfer — the same overlap,
+    provided by the hardware queue instead.)"""
+
+    def __init__(self, fleet: "FleetManager", future):
+        self._fleet = fleet
+        self._future = future
+        self._result: Optional[FleetMultiEpochResult] = None
+
+    def result(self) -> FleetMultiEpochResult:
+        if self._result is None:
+            _fstate, (stats, flags, plans) = self._future.result()
+            K = len(self._fleet.machines)
+            stats, flags, plans = jax.tree.map(
+                lambda a: a[:K], (stats, flags, plans)
+            )
+            if stats.queue is not None:
+                for i, m in enumerate(self._fleet.machines):
+                    m._fold_queue_stats(jax.tree.map(lambda a: a[i], stats.queue))
+            self._result = FleetMultiEpochResult(
+                stats=stats, plans=plans, flags=flags
+            )
+        return self._result
+
+
 class FleetManager:
     """K :class:`CentralManager` machines advancing as one device program.
 
@@ -133,8 +279,24 @@ class FleetManager:
     events) address the underlying managers directly — ``fleet.machines[m]``
     exposes the full per-machine surface, and any state they mutate is
     restacked on the next fleet dispatch. ``run_epochs`` is the data plane:
-    stack -> one vmapped scan -> write advanced slices back -> one host
-    telemetry snapshot.
+    stack -> one vmapped (and, with multiple devices, sharded) scan ->
+    park advanced slices -> one host telemetry snapshot.
+
+    ``devices`` selects the shard layout: ``None`` uses every local XLA
+    device (sharded whenever more than one is visible), an int takes the
+    first n local devices, a sequence pins explicit devices, and ``1``
+    forces the single-device vmap path. K is padded up to a device multiple
+    with inert machines (no tenants, no backlog — DESIGN.md §6 padding
+    contract); padded rows are dropped from every result and telemetry
+    read. ``pad_to`` overrides the padding multiple (testing hook).
+
+    Dirty-tracking: after a dispatch each machine's advanced slice stays
+    parked as a lazy view into the cached stacked state. Only machines
+    whose control plane actually fired (any state/params mutation or a
+    pending ``OwnerSegments`` rebuild) are re-uploaded before the next
+    dispatch — a no-op dispatch performs zero host->device state uploads
+    (``upload_stats`` counts restacked machines and segment rebuilds;
+    locked by a regression test).
 
     Machines must agree on every SHAPE-defining knob (num_pages,
     max_tenants, queue_size, exact_sampling); traced parameters (budgets,
@@ -144,7 +306,12 @@ class FleetManager:
     unaffected (the budget itself is traced).
     """
 
-    def __init__(self, machines: Sequence[CentralManager]):
+    def __init__(
+        self,
+        machines: Sequence[CentralManager],
+        devices=None,
+        pad_to: Optional[int] = None,
+    ):
         assert len(machines) > 0, "fleet needs at least one machine"
         self.machines: List[CentralManager] = list(machines)
         first = self.machines[0]
@@ -165,6 +332,48 @@ class FleetManager:
         self.exact_sampling = first.exact_sampling
         self.plan_size = max(m.plan_size for m in self.machines)
 
+        if devices is None:
+            devs = list(jax.devices())
+        elif isinstance(devices, int):
+            assert devices >= 1, "devices must be >= 1"
+            local = list(jax.devices())
+            assert devices <= len(local), (
+                f"requested {devices} devices, only {len(local)} visible"
+            )
+            devs = local[:devices]
+        else:
+            devs = list(devices)
+        self.devices = devs
+        self.num_shards = len(devs)
+        self.mesh = (
+            Mesh(np.array(devs), ("machines",)) if len(devs) > 1 else None
+        )
+        K = len(self.machines)
+        multiple = pad_to if pad_to is not None else self.num_shards
+        assert multiple >= 1
+        self.num_padded = K + (-K) % multiple
+        if self.mesh is not None:
+            assert self.num_padded % self.num_shards == 0, (
+                f"padded machine count {self.num_padded} must divide over "
+                f"{self.num_shards} devices (pad_to must be a shard multiple)"
+            )
+        # dirty-tracking: cached stacked state/params + per-machine params
+        # identity from the moment each slice was last uploaded
+        self._fstate = None
+        self._fparams = None
+        self._written_params: List[object] = [None] * K
+        self._inert_state = None
+        # the dispatch worker: one thread so device programs serialize
+        # naturally while the main thread keeps the host pipeline busy
+        self._executor = None
+        self._inflight = None
+        self.upload_stats = {
+            "dispatches": 0,
+            "clean_dispatches": 0,
+            "restacked_machines": 0,
+            "seg_rebuilds": 0,
+        }
+
     @property
     def num_machines(self) -> int:
         return len(self.machines)
@@ -172,11 +381,169 @@ class FleetManager:
     def __len__(self) -> int:
         return len(self.machines)
 
+    # ------------------------------------------------------------ stacking
+    def _machine_dirty(self, m: CentralManager) -> bool:
+        """True when the machine's row in the cached stack is stale: any
+        state setter fired since the last dispatch, or an ownership change
+        left a pending ``OwnerSegments`` rebuild. (Params staleness is
+        tracked separately — it re-stacks the tiny params leaves only.)"""
+        return m._mutated or m._segs_owner is not None
+
+    def _make_inert_state(self) -> PolicyState:
+        """A machine that computes but matters to nobody: no tenants, no
+        backlog, the same static shapes as every real machine. Its rows are
+        sliced off every output; its only job is making the machine count a
+        shard multiple."""
+        if self._inert_state is None:
+            state = PolicyState.create(
+                self.num_pages, self.max_tenants, seed=0,
+                queue_size=self.queue_size,
+            )
+            self._inert_state = state._replace(
+                segs=OwnerSegments.build(
+                    np.full((self.num_pages,), -1, np.int32), self.max_tenants
+                )
+            )
+        return self._inert_state
+
+    def _join(self):
+        """Adopt the in-flight dispatch's advanced stacked state (if any).
+        This is the pipeline's sync point: it blocks until the worker's
+        device program — and its telemetry transfer — completed."""
+        if self._inflight is not None:
+            fstate, _host = self._inflight.result()
+            self._fstate = fstate
+            self._inflight = None
+        return self._fstate
+
+    def _assemble(self) -> None:
+        """Bring the cached stacked state/params up to date, uploading only
+        the machines whose control plane fired since the last dispatch."""
+        self._join()
+        K = len(self.machines)
+        pad = self.num_padded - K
+        dirty = [
+            i for i, m in enumerate(self.machines)
+            if self._fstate is None or self._machine_dirty(m)
+        ]
+        for i in dirty:
+            if self.machines[i]._segs_owner is not None:
+                self.upload_stats["seg_rebuilds"] += 1
+            self.machines[i]._ensure_segs()
+        if self._fstate is None or len(dirty) == K:
+            states = [m._state for m in self.machines]
+            if pad:
+                states = states + [self._make_inert_state()] * pad
+            self._fstate = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+            self.upload_stats["restacked_machines"] += K
+        elif dirty:
+            for i in dirty:
+                self._fstate = _machine_updater()(
+                    self._fstate, self.machines[i]._state, i
+                )
+            self.upload_stats["restacked_machines"] += len(dirty)
+        params_dirty = self._fparams is None or any(
+            m.params is not self._written_params[i]
+            for i, m in enumerate(self.machines)
+        )
+        if params_dirty:
+            plist = [m.params for m in self.machines]
+            if pad:
+                plist = plist + [self.machines[0].params] * pad
+            self._fparams = jax.tree.map(
+                lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *plist
+            )
+        if not dirty and not params_dirty:
+            self.upload_stats["clean_dispatches"] += 1
+
+    def _park_slices(self) -> None:
+        """Point every machine's state at its (lazy) slice of the advanced
+        stack; nothing materializes — and the in-flight dispatch is not
+        even joined — until a control-plane or telemetry path actually
+        reads a machine."""
+
+        def slicer(i: int) -> Callable[[], PolicyState]:
+            return lambda: _machine_slicer()(self._join(), i)
+
+        for i, m in enumerate(self.machines):
+            m._set_fleet_state(slicer(i))
+            self._written_params[i] = m.params
+
+    # ------------------------------------------------------------ dispatch
+    def run_epochs_async(
+        self,
+        k: int,
+        counts: Optional[np.ndarray] = None,
+        collect_plans: bool = False,
+        trim_stats: bool = False,
+    ) -> FleetPendingResult:
+        """Dispatch ``k`` epochs for every machine and return immediately.
+
+        The returned handle's ``result()`` materializes the telemetry; in
+        the meantime the host can record the previous chunk, prepare the
+        next one, or fire control-plane events — the double-buffered sweep
+        pipeline (``scenario.run_sweep``) lives on exactly this overlap.
+        """
+        import concurrent.futures
+
+        K = len(self.machines)
+        pad = self.num_padded - K
+        self._assemble()
+        cn = None
+        if counts is not None:
+            cn = np.asarray(counts)
+            assert cn.ndim in (2, 3) and cn.shape[0] == K, (
+                f"counts must be [K, P] or [K, k, P] with K={K}, got {cn.shape}"
+            )
+            if pad:
+                cn = np.concatenate(
+                    [cn, np.zeros((pad,) + cn.shape[1:], cn.dtype)], axis=0
+                )
+        kw = dict(
+            k=k, max_tenants=self.max_tenants, plan_size=self.plan_size,
+            exact_sampling=self.exact_sampling, collect_plans=collect_plans,
+            trim_stats=trim_stats,
+        )
+        mesh = self.mesh
+        fstate_in, fparams_in = self._fstate, self._fparams
+
+        def work():
+            c = None
+            if cn is not None:
+                # host->device upload of the workload happens in the worker
+                # too — off the main thread's critical path
+                c = jnp.asarray(cn.astype(np.uint32, copy=False))
+            if mesh is not None:
+                fstate, plans, stats, flagged = fleet_multi_epoch_sharded(
+                    fstate_in, fparams_in, c, mesh=mesh, **kw
+                )
+            else:
+                fstate, plans, stats, flagged = fleet_multi_epoch(
+                    fstate_in, fparams_in, c, **kw
+                )
+            host = jax.device_get(
+                (stats, flagged, plans if collect_plans else None)
+            )
+            return fstate, host
+
+        if self._executor is None:
+            self._executor = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="fleet-dispatch"
+            )
+        self._inflight = self._executor.submit(work)
+        self._park_slices()
+        for m in self.machines:
+            m.epoch_index += k
+            m._snap = None
+        self.upload_stats["dispatches"] += 1
+        return FleetPendingResult(self, self._inflight)
+
     def run_epochs(
         self,
         k: int,
         counts: Optional[np.ndarray] = None,
         collect_plans: bool = False,
+        trim_stats: bool = False,
     ) -> FleetMultiEpochResult:
         """Advance every machine by ``k`` epochs in ONE device dispatch.
 
@@ -185,35 +552,32 @@ class FleetManager:
         telemetry is bit-identical to ``CentralManager.run_epochs`` on each
         machine alone.
         """
+        return self.run_epochs_async(
+            k, counts=counts, collect_plans=collect_plans,
+            trim_stats=trim_stats,
+        ).result()
+
+    # ----------------------------------------------------------- telemetry
+    def stacked_placement(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(tier[K, P], owner[K, P]) for every machine in ONE batched
+        device->host transfer, seeding each manager's telemetry snapshot
+        cache — replaces K per-machine ``device_get`` round trips on the
+        sweep pipeline's critical path. Falls back to per-machine snapshots
+        when a machine mutated since the last dispatch (its row in the
+        cached stack is stale)."""
         K = len(self.machines)
-        for m in self.machines:
-            m._ensure_segs()
-        fstate = jax.tree.map(
-            lambda *xs: jnp.stack(xs), *[m._state for m in self.machines]
+        self._join()
+        clean = self._fstate is not None and not any(
+            m._mutated for m in self.machines
         )
-        fparams = jax.tree.map(
-            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
-            *[m.params for m in self.machines],
-        )
-        c = None
-        if counts is not None:
-            c = jnp.asarray(np.asarray(counts).astype(np.uint32, copy=False))
-            assert c.ndim in (2, 3) and c.shape[0] == K, (
-                f"counts must be [K, P] or [K, k, P] with K={K}, got {c.shape}"
+        if clean:
+            tier, owner = jax.device_get(
+                (self._fstate.pages.tier, self._fstate.pages.owner)
             )
-        fstate, plans, stats, flagged = fleet_multi_epoch(
-            fstate, fparams, c,
-            k=k, max_tenants=self.max_tenants, plan_size=self.plan_size,
-            exact_sampling=self.exact_sampling, collect_plans=collect_plans,
-        )
-        for i, m in enumerate(self.machines):
-            m._state = jax.tree.map(lambda a: a[i], fstate)
-            m.epoch_index += k
-            m._snap = None
-        stats, flags, plans = jax.device_get(
-            (stats, flagged, plans if collect_plans else None)
-        )
-        if stats.queue is not None:
+            tier, owner = tier[:K], owner[:K]
             for i, m in enumerate(self.machines):
-                m._fold_queue_stats(jax.tree.map(lambda a: a[i], stats.queue))
-        return FleetMultiEpochResult(stats=stats, plans=plans, flags=flags)
+                m._snap = {"tier": tier[i], "owner": owner[i]}
+            return tier, owner
+        tier = np.stack([m.tiers() for m in self.machines])
+        owner = np.stack([m.owners() for m in self.machines])
+        return tier, owner

@@ -161,6 +161,13 @@ class CentralManager:
             )
         self.num_pages = num_pages
         self.max_tenants = max_tenants
+        # fleet dirty-tracking (core/fleet.py): the policy state lives behind
+        # a property; any setter marks the machine mutated, and a fleet
+        # dispatch parks the advanced slice as a lazy thunk so clean
+        # machines never materialize (or re-upload) per-machine arrays
+        self._state_val = None
+        self._state_thunk = None
+        self._mutated = True
         self.params = PolicyParams(
             fast_capacity=jnp.int32(fast_capacity),
             migration_budget=jnp.int32(migration_budget),
@@ -202,6 +209,29 @@ class CentralManager:
             )
 
     # --------------------------------------------------------- state views
+    @property
+    def _state(self) -> PolicyState:
+        if self._state_thunk is not None:
+            self._state_val = self._state_thunk()
+            self._state_thunk = None
+        return self._state_val
+
+    @_state.setter
+    def _state(self, value: PolicyState) -> None:
+        self._state_val = value
+        self._state_thunk = None
+        self._mutated = True
+
+    def _set_fleet_state(self, thunk) -> None:
+        """Park the machine's advanced state as a lazy slice of the fleet's
+        stacked pytree (core/fleet.py). The slice only materializes if a
+        control-plane or telemetry path actually reads it; until a setter
+        fires, the fleet knows this machine's row in its cached stack is
+        current and skips the restack entirely."""
+        self._state_val = None
+        self._state_thunk = thunk
+        self._mutated = False
+
     @property
     def pages(self) -> PageState:
         return self._state.pages

@@ -70,6 +70,8 @@ def _donate_state() -> bool:
     return jax.default_backend() != "cpu"
 
 
+
+
 def _per_tenant_pages(
     pages: PageState,
     max_tenants: int,
@@ -137,14 +139,39 @@ def _select_victims(
     above = total_slow - jnp.where(c_full > 0, cum_at, 0)
     above = jnp.where(c_full < C, above, 0)  # candidates already taken whole
     r_p = pq - above  # residual from the straddling bucket c_full - 1
-    member_p = slow_cand & (key == (c_full - 1)[owner]) & (r_p[owner] > 0)
 
     # cold side: largest count whose whole bucket fits (cum_fast increasing)
     n_full = srch_r(cum_fast, dq)  # buckets taken whole: c < n_full
     below = cum_fast[idx_t, jnp.clip(n_full - 1, 0, C - 1)]
     below = jnp.where(n_full > 0, below, 0)
     r_d = dq - below  # residual from the straddling bucket n_full
-    member_d = fast_cand & (key == n_full[owner]) & (r_d[owner] > 0)
+
+    # The per-page tests below consume four per-tenant scalars (c_full,
+    # n_full, r_p, r_d) — naively eight [T] -> [P] gathers through `owner`,
+    # which dominate the whole selection pass on XLA:CPU. Pack each side's
+    # (cutoff, residual) into ONE u32 table entry so each side costs a
+    # single gather: cutoff in the high bits, residual (clamped at 0 —
+    # the tests only consult positive residuals) in the low `rbits`.
+    # r <= P < 2^rbits and cutoff <= C, so the pack is exact whenever
+    # cbits + rbits <= 32; the unpacked comparands are bit-identical to
+    # the unpacked path, which remains for (huge-P, huge-C) configurations.
+    rbits = int(P).bit_length()
+    cbits = int(C).bit_length()
+    if cbits + rbits <= 32:
+        def _pack(cut, res):
+            return (cut.astype(jnp.uint32) << rbits) | jnp.maximum(res, 0).astype(jnp.uint32)
+
+        sp = _pack(c_full, r_p)[owner]  # one gather for the slow side
+        fp = _pack(n_full, r_d)[owner]  # one gather for the fast side
+        cf_pg = (sp >> rbits).astype(jnp.int32)
+        rp_pg = (sp & ((1 << rbits) - 1)).astype(jnp.int32)
+        nf_pg = (fp >> rbits).astype(jnp.int32)
+        rd_pg = (fp & ((1 << rbits) - 1)).astype(jnp.int32)
+    else:
+        cf_pg, rp_pg = c_full[owner], r_p[owner]
+        nf_pg, rd_pg = n_full[owner], r_d[owner]
+    member_p = slow_cand & (key == cf_pg - 1) & (rp_pg > 0)
+    member_d = fast_cand & (key == nf_pg) & (rd_pg > 0)
 
     if segs is not None:
         occ_p, occ_d = _occ_segments(member_p, member_d, owner, segs)
@@ -164,8 +191,8 @@ def _select_victims(
             safe, _occ_packed, _occ_twopass, member_p, member_d, owner, owner_onehot
         )
 
-    promote = (slow_cand & (key >= c_full[owner])) | (member_p & (occ_p <= r_p[owner]))
-    demote = (fast_cand & (key < n_full[owner])) | (member_d & (occ_d <= r_d[owner]))
+    promote = (slow_cand & (key >= cf_pg)) | (member_p & (occ_p <= rp_pg))
+    demote = (fast_cand & (key < nf_pg)) | (member_d & (occ_d <= rd_pg))
     return promote, demote
 
 
@@ -313,16 +340,24 @@ def _epoch_core(
     is_fast = pages.tier == TIER_FAST
     is_slow = pages.tier == TIER_SLOW
     if segs is not None:
-        tier_s = pages.tier[segs.order]
-        sampled_s = sampled[segs.order].astype(jnp.uint32)
-        s_fast = bins.seg_sums(
-            jnp.where(tier_s == TIER_FAST, sampled_s, jnp.uint32(0)), segs.start
+        # one [2T+1] scatter-add replaces the two global segment cumsums
+        # plus their sorted-order gathers (measurably faster under both
+        # XLA:CPU runtimes); u32 adds are associative mod 2^32, so the
+        # per-tenant totals are bit-identical to the cumsum path whatever
+        # the accumulation order (owned pages are always fast or slow:
+        # allocate/free set owner and tier together, so fast|slow covers
+        # every owned page exactly once)
+        T2 = max_tenants
+        own_ok = pages.owner >= 0
+        idx = jnp.where(
+            own_ok & is_fast, pages.owner,
+            jnp.where(own_ok, T2 + pages.owner, 2 * T2),
         )
-        # segments span exactly the OWNED pages, and owned pages are always
-        # fast or slow (allocate/free set owner and tier together), so the
-        # slow-side sum is the segment total minus the fast side — one
-        # cumsum instead of two, identical u32 arithmetic
-        s_slow = bins.seg_sums(sampled_s, segs.start) - s_fast
+        tbl = jnp.zeros((2 * T2 + 1,), jnp.uint32).at[idx].add(
+            sampled.astype(jnp.uint32), mode="drop"
+        )
+        s_fast = tbl[:T2]
+        s_slow = tbl[T2 : 2 * T2]
     else:
         s_fast = jnp.where(oh & is_fast[None, :], sampled[None, :], 0).sum(axis=1)
         s_slow = jnp.where(oh & is_slow[None, :], sampled[None, :], 0).sum(axis=1)
@@ -717,6 +752,23 @@ def epoch_step(
     )
 
 
+def _trim_stats(stats: EpochStats) -> EpochStats:
+    """Drop the telemetry leaves the sweep record path never reads
+    (DESIGN.md §6): ``cooled``/``slow_pages``, and — the big one in queue
+    mode — the fixed-size drained id lists, whose [W]-wide rows dominate
+    the stacked snapshot transfer. ``None`` leaves are empty pytree
+    subtrees, so stacking, slicing and host copies all skip them. Safe
+    because trimming only runs on paths without a pool-backed data plane
+    (the only consumer of the drained id lists)."""
+    if stats.queue is not None:
+        stats = stats._replace(
+            queue=stats.queue._replace(
+                drained_promote_ids=None, drained_demote_ids=None
+            )
+        )
+    return stats._replace(cooled=None, slow_pages=None)
+
+
 def _multi_epoch_impl(
     state: PolicyState,
     params: PolicyParams,
@@ -728,6 +780,7 @@ def _multi_epoch_impl(
     exact_sampling: bool,
     count_clamp: int,
     collect_plans: bool,
+    trim_stats: bool = False,
 ):
     P = state.pending.shape[0]
     per_epoch = None
@@ -786,6 +839,8 @@ def _multi_epoch_impl(
             pending=jnp.zeros_like(pending), rng=rng,
             queue=queue, epoch=epoch,
         )
+        if trim_stats:
+            stats = _trim_stats(stats)
         return st2, (plan if collect_plans else None, stats, tenants.flagged)
 
     state, (plans, stats, flagged) = jax.lax.scan(step, state, (xs_counts, xs_z), length=k)
@@ -798,7 +853,7 @@ def _jitted_multi_epoch(donate: bool):
         _multi_epoch_impl,
         static_argnames=(
             "k", "max_tenants", "plan_size", "exact_sampling", "count_clamp",
-            "collect_plans",
+            "collect_plans", "trim_stats",
         ),
         donate_argnums=(0,) if donate else (),
     )
@@ -815,6 +870,7 @@ def multi_epoch(
     exact_sampling: bool = False,
     count_clamp: int = COUNT_CLAMP,
     collect_plans: bool = True,
+    trim_stats: bool = False,
 ):
     """Scan the fused epoch across ``k`` epochs in ONE dispatch.
 
@@ -826,10 +882,11 @@ def multi_epoch(
     when ``collect_plans=False`` (metadata-only simulation — the per-tenant
     promoted/demoted telemetry in ``stats`` is still exact). The state
     buffers are donated on accelerator backends — do not reuse the argument
-    there.
+    there. ``trim_stats=True`` drops the telemetry leaves the sweep record
+    path never reads (see :func:`_trim_stats`).
     """
     return _jitted_multi_epoch(_donate_state())(
         state, params, counts, k=k, max_tenants=max_tenants, plan_size=plan_size,
         exact_sampling=exact_sampling, count_clamp=count_clamp,
-        collect_plans=collect_plans,
+        collect_plans=collect_plans, trim_stats=trim_stats,
     )

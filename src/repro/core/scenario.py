@@ -370,12 +370,16 @@ class SweepResult:
     sweep: ScenarioSweep
     results: Dict[str, ScenarioResult]  # per sweep-point name
     wall_s: float = 0.0
+    devices: int = 1  # shards the machine axis ran over
+    pipeline: bool = False  # double-buffered host/device driving was on
 
     def to_jsonable(self) -> dict:
         return {
             "scenario": self.sweep.scenario.name,
             "n_machines": len(self.sweep.points),
             "wall_s": round(self.wall_s, 3),
+            "devices": self.devices,
+            "pipeline": self.pipeline,
             "machines": {k: r.to_jsonable() for k, r in self.results.items()},
         }
 
@@ -393,18 +397,31 @@ def run_sweep(
     epoch_seconds: float = 1.0,
     access_noise: bool = True,
     policy_chunk: int = 16,
+    devices=None,
+    pipeline: bool = True,
+    trim_stats: bool = True,
 ) -> SweepResult:
     """Execute a :class:`ScenarioSweep` against the fleet backend.
 
     Builds one ``CentralManager`` per sweep point (identical shapes, the
     point's traced parameter overrides), wraps them in a
-    ``core.fleet.FleetManager``, and drives the shared event schedule: at
-    every phase boundary the events fire on each machine's simulator
+    ``core.fleet.FleetManager`` — sharded over ``devices`` (default: every
+    visible XLA device) — and drives the shared event schedule: at every
+    phase boundary the events fire on each machine's simulator
     (control-plane host operations — arrive/depart/resize work mid-sweep),
-    and the epochs between boundaries run CHUNKED through the fleet — each
-    simulator freezes its access distribution, the stacked counts advance
-    all machines in one vmapped scan, and one batched telemetry snapshot
-    feeds every machine's cost model (``ColocationSim._chunk_record``).
+    and the epochs between boundaries run CHUNKED through the fleet.
+
+    The chunk driving is a double-buffered pipeline (DESIGN.md §6): while
+    chunk *k* executes on device, the host records chunk *k−1*'s telemetry
+    (its end placement is chunk *k*'s entry placement, captured in ONE
+    stacked transfer that also seeds every manager's snapshot cache) and
+    the cost-model matrices for the next event-free stretch are reused
+    across its chunks. The telemetry snapshot is fetched asynchronously and
+    — with ``trim_stats`` — carries only the fields the record path reads.
+    ``pipeline=False`` serializes prepare → execute → record per chunk (the
+    pre-pipeline driver shape, used as the benchmark baseline leg); the
+    recorded histories are IDENTICAL either way, because every record
+    consumes the same placement and telemetry values in the same order.
 
     Chunk semantics match ``ColocationSim.run_chunk``: within a chunk the
     access distribution is frozen and migration stalls are not modeled;
@@ -432,7 +449,7 @@ def run_sweep(
         if p.migration_bandwidth is not None:
             mgr_kw["migration_bandwidth"] = p.migration_bandwidth
         managers.append(CentralManager(**mgr_kw))
-    fleet = FleetManager(managers)
+    fleet = FleetManager(managers, devices=devices)
     sims = [
         ColocationSim(
             mgr, machine or OPTANE, epoch_seconds=epoch_seconds,
@@ -442,25 +459,62 @@ def run_sweep(
     ]
 
     boundaries = sorted({0, *(ev.epoch for ev in scenario.events), scenario.n_epochs})
+    pending = None  # (handle, k, ctxs) — the chunk currently on device
+    arrays = None  # per-sim cost-model matrices, valid within an event-free stretch
+
+    def flush(tiers: np.ndarray) -> None:
+        """Record the in-flight chunk against its end placement."""
+        nonlocal pending
+        if pending is None:
+            return
+        handle, k, ctxs = pending
+        res = handle.result()
+        for i, (sim, ctx) in enumerate(zip(sims, ctxs)):
+            sim._chunk_record(res.machine(i), k, ctx, tier_end=tiers[i])
+        pending = None
+
     cur = 0
     while cur < scenario.n_epochs:
-        for ev in scenario.events_at(cur):
-            for sim in sims:
-                ev.apply(sim)
-        horizon = min(
-            [b for b in boundaries if b > cur], default=scenario.n_epochs
-        )
-        while cur < horizon:
-            k = min(policy_chunk, horizon - cur)
-            preps = [sim._chunk_prepare() for sim in sims]
-            counts = np.stack([c for c, _ctx in preps])
-            res = fleet.run_epochs(k, counts=counts)
-            for m, (sim, (_c, ctx)) in enumerate(zip(sims, preps)):
-                sim._chunk_record(res.machine(m), k, ctx)
-            cur += k
+        evs = scenario.events_at(cur)
+        if evs:
+            # events read and mutate placement: the in-flight chunk must be
+            # recorded against the PRE-event placement first
+            tiers, _ = fleet.stacked_placement()
+            flush(tiers)
+            for ev in evs:
+                for sim in sims:
+                    ev.apply(sim)
+            arrays = None  # tenant sets / probs may have changed
+        horizon = min(b for b in boundaries if b > cur)
+        k = min(policy_chunk, horizon - cur)
+        # chunk-entry placement: one stacked transfer; blocks until the
+        # previous chunk's device work is done (the pipeline sync point)
+        tiers, _ = fleet.stacked_placement()
+        if arrays is None:
+            arrays = [sim._arrays() for sim in sims]
+        preps = [
+            sim._chunk_prepare(arrays=arr, tier=tiers[i])
+            for i, (sim, arr) in enumerate(zip(sims, arrays))
+        ]
+        counts = np.stack([c for c, _ctx in preps])
+        handle = fleet.run_epochs_async(k, counts=counts, trim_stats=trim_stats)
+        # the previous chunk's end placement IS this chunk's entry: record
+        # it now, overlapped with this chunk's device execution
+        flush(tiers)
+        pending = (handle, k, [ctx for _c, ctx in preps])
+        if not pipeline:
+            end_tiers, _ = fleet.stacked_placement()
+            flush(end_tiers)
+        cur += k
+
+    tiers, _ = fleet.stacked_placement()
+    flush(tiers)
 
     results = {
         p.name: _collect_phases(sim, scenario, 0)
         for p, sim in zip(sweep.points, sims)
     }
-    return SweepResult(sweep=sweep, results=results, wall_s=_time.time() - t0)
+    return SweepResult(
+        sweep=sweep, results=results, wall_s=_time.time() - t0,
+        devices=fleet.num_shards, pipeline=pipeline,
+    )

@@ -258,13 +258,20 @@ class ColocationSim:
         return lat_slow if miss > (1.0 - q) else lat_fast
 
     def _sample_counts(self, M: np.ndarray, ops: np.ndarray) -> np.ndarray:
-        """i64[P] access counts reported to the backend this epoch."""
-        expect = M * ops[:, None]
+        """i64[P] access counts reported to the backend this epoch.
+
+        The backend only ever sees the per-page TOTAL across tenants, and a
+        sum of independent Poissons is itself Poisson of the summed rate —
+        so the noisy path draws ONE [P] sample from the aggregate
+        expectation (``ops @ M``) instead of an [n, P] per-tenant draw:
+        distributionally identical through every observable, and an
+        n-fold cheaper host step on the sweep pipeline's critical path."""
         if self.access_noise:
-            drawn = self.rng.poisson(np.maximum(expect, 0))
-        else:
-            drawn = expect
-        return drawn.astype(np.int64).sum(axis=0)
+            drawn = self.rng.poisson(np.maximum(ops @ M, 0.0))
+            return drawn.astype(np.int64)
+        # noiseless: per-tenant truncation before the sum, exactly as before
+        expect = M * ops[:, None]
+        return expect.astype(np.int64).sum(axis=0)
 
     def _record(
         self, names, miss, tput, measured, fast_pages, mig_frac, fast_op, slow_op,
@@ -364,22 +371,33 @@ class ColocationSim:
             migrated, stalled, queue_depth=queue_depth,
         )
 
-    def _chunk_prepare(self):
+    def _chunk_prepare(self, arrays=None, tier=None):
         """(counts[P], ctx) for a chunked stretch: freeze the access
         distribution at the chunk entry and draw one epoch's worth of
         access counts (replayed every epoch by the scan). ``ctx`` carries
-        the frozen cost-model arrays for :meth:`_chunk_record`."""
-        names, M, page_mask, threads, bpo = self._arrays()
-        tier = np.asarray(self.backend.tiers())
+        the frozen cost-model arrays for :meth:`_chunk_record`.
+
+        ``arrays`` (a prior :meth:`_arrays` result) and ``tier`` (the
+        chunk-entry placement) let the pipelined sweep driver reuse the
+        tenant matrices across the chunks of an event-free stretch and feed
+        the placement from one stacked fleet transfer — same values either
+        way, so the drawn counts (and the RNG stream) are bit-identical to
+        the self-measuring path."""
+        names, M, page_mask, threads, bpo = arrays if arrays is not None else self._arrays()
+        if tier is None:
+            tier = np.asarray(self.backend.tiers())
         miss0 = (M * (tier == TIER_SLOW)[None, :]).sum(axis=1)
         lat, _ = self._latencies(miss0, 0.0, threads, bpo)
         ops = threads / lat * self.epoch_s
         return self._sample_counts(M, ops), (names, M, threads, bpo)
 
-    def _chunk_record(self, res, k: int, ctx) -> List[EpochRecord]:
+    def _chunk_record(self, res, k: int, ctx, tier_end=None) -> List[EpochRecord]:
         """Fold a ``MultiEpochResult`` for a chunk prepared by
         :meth:`_chunk_prepare` into the epoch history (one telemetry
-        snapshot for the whole chunk)."""
+        snapshot for the whole chunk). ``tier_end`` is the post-chunk
+        placement; passing it (captured at the NEXT chunk's prepare) lets
+        the pipelined driver record this chunk while the next one is
+        already executing on device."""
         m = self.machine
         names, M, threads, bpo = ctx
 
@@ -401,7 +419,8 @@ class ColocationSim:
         migrated = res.migrated_per_epoch
         depth = res.queue_depth_per_epoch
         measured_k = np.asarray(res.stats.fmmr_ewma)[:, handles]
-        tier_end = np.asarray(self.backend.tiers())
+        if tier_end is None:
+            tier_end = np.asarray(self.backend.tiers())
         miss_end = (M * (tier_end == TIER_SLOW)[None, :]).sum(axis=1)
         fast_op = m.fast.latency_ns * 1e-9 + bpo / (m.fast.bandwidth_GBps * 1e9)
         for i in range(k):
