@@ -21,7 +21,11 @@ against the committed ``BENCH_policy.json`` / ``BENCH_scenarios.json`` /
     "below_target" when hardware-bound);
   * the finite-bandwidth thrash scenario must complete on all four
     policies, and the smoke fleet sweep must complete on every machine
-    with the sharded-executor overlap metadata (devices/pipeline) present.
+    with the sharded-executor overlap metadata (devices/pipeline) present;
+  * the invariant sentinel with its traced flag OFF must cost within
+    ``PERF_GATE_SENTINEL_TOL`` (default 3%) of a program with the sentinel
+    compiled out — fresh-only, same-host (see :func:`check_sentinel_band`),
+    so the robustness layer can't silently tax the hot path.
 
 Every BENCH payload carries a ``platform`` stamp (host, jax backend, cpu
 count); the committed numbers rarely come from the machine re-measuring
@@ -144,6 +148,23 @@ def check_ordering(scenarios: dict, source: str) -> list:
             "check": f"{source}:thrash_all_policies",
             "status": "ok" if len(thrash.get("completed_policies", ())) == 4 else "fail",
         })
+    faults = scenarios.get("faults")
+    if faults is not None:
+        # the fault-injection contract (DESIGN.md §7): all four policies
+        # survive the machine-fail + bandwidth-degrade schedule, the down
+        # window records zero throughput, MaxMem recovers to 90% of its
+        # pre-fail throughput and ends with conservation invariants intact
+        ok = (
+            len(faults.get("completed_policies", ())) == 4
+            and all(faults.get("down_window_zero_throughput", {}).values())
+            and faults.get("recovery_epochs", {}).get("maxmem") is not None
+            and bool(faults.get("maxmem_deep_validate_ok"))
+        )
+        rows.append({
+            "check": f"{source}:faults_recovery_contract",
+            "status": "ok" if ok else "fail",
+            "recovery_epochs": faults.get("recovery_epochs"),
+        })
     return rows
 
 
@@ -211,6 +232,30 @@ def check_fleet(committed_fleet: dict, fresh_fleet: dict) -> list:
     return rows
 
 
+def check_sentinel_band(fresh_policy: dict, tol: float) -> list:
+    """Sentinel-off overhead band (DESIGN.md §7), fresh-only: the
+    production policy program compiles the invariant sentinel gated by a
+    traced flag — with the flag OFF it must cost within ``tol`` of a
+    program with the sentinel compiled out entirely. Both legs come from
+    the SAME fresh run on THIS host (min-of-reps), so no host
+    normalization applies and the committed payloads are not consulted.
+    The section missing fails loudly, like every other gated metric."""
+    sent = fresh_policy.get("policy_epoch_sentinel", {}).get("65536")
+    if not sent:
+        return [{"check": "fresh:sentinel_off_band", "status": "missing"}]
+    over = float(sent["overhead_off"])
+    return [{
+        "check": "fresh:sentinel_off_band",
+        "status": "ok" if over <= 1.0 + tol else "fail",
+        "overhead_off": round(over, 4),
+        "overhead_on": round(float(sent["overhead_on"]), 4),
+        "tolerance": tol,
+        "ref_us": round(float(sent["ref_us"]), 1),
+        "off_us": round(float(sent["off_us"]), 1),
+        "on_us": round(float(sent["on_us"]), 1),
+    }]
+
+
 def _load_committed() -> dict:
     out = {}
     for key, path in BENCH_FILES.items():
@@ -227,6 +272,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float,
                     default=float(os.environ.get("PERF_GATE_TOL", "0.25")),
                     help="allowed fractional slowdown per metric (default 0.25)")
+    ap.add_argument("--sentinel-tolerance", type=float,
+                    default=float(os.environ.get("PERF_GATE_SENTINEL_TOL", "0.03")),
+                    help="allowed sentinel-off overhead vs the compiled-out "
+                         "reference program (default 0.03)")
     ap.add_argument("--out", default="perf_gate_diff.json",
                     help="diff artifact path")
     args = ap.parse_args(argv)
@@ -264,7 +313,8 @@ def main(argv=None) -> int:
         "metrics": compare_metrics(committed, fresh, args.tolerance),
         "ordering": check_ordering(fresh["scenarios"], "fresh_smoke")
         + check_ordering(committed["scenarios"], "committed")
-        + check_fleet(committed["fleet"], fresh["fleet"]),
+        + check_fleet(committed["fleet"], fresh["fleet"])
+        + check_sentinel_band(fresh["policy"], args.sentinel_tolerance),
     }
     # a metric or file absent on either side means the gate is no longer
     # measuring what it claims to — that must fail loudly, not pass

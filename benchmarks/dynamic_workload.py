@@ -47,7 +47,10 @@ from repro.core.baselines import AutoNUMALike, HeMemStatic, TwoLM
 from repro.core.manager import CentralManager
 from repro.core.scenario import (
     Arrive,
+    BandwidthDegrade,
     Depart,
+    MachineFail,
+    MachineRecover,
     ResizeWorkingSet,
     Scenario,
     ScenarioResult,
@@ -235,6 +238,103 @@ def thrash_scenario(n_pages: int, n_epochs: int) -> Scenario:
         ),
         description="ping-pong working-set thrash under bounded DMA bandwidth",
     )
+
+
+# ------------------------------------------- fault-injection scenario (§7)
+def faults_scenario(n_pages: int, n_epochs: int) -> Scenario:
+    """Machine-failure + bandwidth-degrade schedule (DESIGN.md §7).
+
+    The colocation pair from the default scenario runs into a degraded DMA
+    engine (quarter bandwidth) and then a whole-machine failure; the
+    machine recovers bit-exactly from its frozen state mid-way through the
+    degraded window and bandwidth is restored for the final quarter. The
+    interesting comparison is how fast each policy climbs back to its
+    pre-fail throughput once the machine returns — MaxMem re-converges
+    under the migration budget while the static partition never has to
+    move (its hot set was truncated all along) and tenant-blind policies
+    re-learn placement from scratch-cold access counts."""
+    kvs = (3 * n_pages) // 8
+    gap = n_pages // 4
+    a, f, r, b = (n_epochs // 4, (3 * n_epochs) // 8,
+                  (5 * n_epochs) // 8, (3 * n_epochs) // 4)
+    return Scenario(
+        name=f"faults_fail_degrade_{n_pages // 1024}k",
+        n_epochs=n_epochs,
+        events=(
+            Arrive(0, WorkloadSpec("kvs", n_pages=kvs, t_miss=0.2, threads=4,
+                                   sets=((0.18, 0.9),))),
+            Arrive(0, WorkloadSpec("gapbs", n_pages=gap, t_miss=0.4, threads=8,
+                                   sets=((0.2, 0.7),))),
+            BandwidthDegrade(a, 0.25),
+            MachineFail(f),
+            MachineRecover(r),
+            BandwidthDegrade(b, 1.0),
+        ),
+        description="machine failure inside a degraded-bandwidth window",
+    )
+
+
+def _recovery_epochs(agg: list, fail: int, recover: int, frac: float = 0.9):
+    """Epochs after ``recover`` until aggregate throughput first reaches
+    ``frac`` of the pre-fail mean (the mean over the steady window
+    immediately before the failure). ``None`` if it never does."""
+    pre = agg[max(fail - 8, 0):fail]
+    if not pre:
+        return None
+    target = frac * (sum(pre) / len(pre))
+    for i, v in enumerate(agg[recover:]):
+        if v >= target:
+            return i + 1
+    return None
+
+
+def faults_bench(smoke: bool = False) -> dict:
+    """The ``faults`` section of BENCH_scenarios.json: all four policies on
+    the machine-failure + bandwidth-degrade schedule (MaxMem on the bounded
+    queue data plane so the degrade hits a real drain rate), with the
+    down-window zero-throughput contract and per-policy recovery epochs.
+    The MaxMem backend is deep-validated after the run — a faulted run must
+    end with conservation invariants intact."""
+    from repro.core.faults import deep_validate
+
+    n_pages = 4096 if smoke else 262144
+    n_epochs = 64 if smoke else 96
+    sc = faults_scenario(n_pages, n_epochs)
+    fail, recover = (3 * n_epochs) // 8, (5 * n_epochs) // 8
+
+    results = {}
+    validated = None
+    for name, mk in scenario_backends(n_pages, bounded=True).items():
+        backend = mk()
+        chunk = 8 if name == "maxmem" else 1
+        sim = ColocationSim(backend, OPTANE, seed=4, policy_chunk=chunk)
+        t0 = time.time()
+        results[name] = sim.run_scenario(sc)
+        results[name].wall_s = time.time() - t0
+        if name == "maxmem":
+            deep_validate(backend)
+            validated = True
+    recovery, down_zero = {}, {}
+    for k, r in results.items():
+        agg = [sum(rec.throughput.values()) for rec in r.history]
+        recovery[k] = _recovery_epochs(agg, fail, recover)
+        down_zero[k] = bool(all(v == 0.0 for v in agg[fail:recover]))
+    return {
+        "scenario": {
+            "name": sc.name, "n_pages": n_pages, "n_epochs": n_epochs,
+            "events": [ev.label() + "@" + str(ev.epoch) for ev in sc.events],
+        },
+        "policies": {
+            k: {**r.to_jsonable(), "wall_s": round(r.wall_s, 2)}
+            for k, r in results.items()
+        },
+        "recovery_epochs": recovery,
+        "down_window_zero_throughput": down_zero,
+        "maxmem_deep_validate_ok": validated,
+        "completed_policies": sorted(results),
+        "recovered_policies": sorted(k for k, v in recovery.items()
+                                     if v is not None),
+    }
 
 
 # --------------------------------------- fleet sweep mode (BENCH_fleet.json)
@@ -634,6 +734,9 @@ def scenarios_bench(smoke: bool = False) -> dict:
             ),
             "completed_policies": sorted(thrash),
         },
+        # machine-failure + bandwidth-degrade schedule (DESIGN.md §7):
+        # recovery epochs per policy + down-window/conservation contracts
+        "faults": faults_bench(smoke=smoke),
     }
     if not smoke:
         vec = vectorization_bench()
@@ -721,10 +824,34 @@ def vectorization_bench(P: int = 65536, tenants: int = 12, reps: int = 9) -> dic
     return out
 
 
+def _print_faults(fl: dict) -> int:
+    rec = fl["recovery_epochs"]
+    print(f"faults_scenario,0.000,"
+          f"policies={len(fl['completed_policies'])};"
+          f"recovered={len(fl['recovered_policies'])};"
+          + ";".join(f"recovery_{k}={rec[k]}" for k in sorted(rec)))
+    rc = 0
+    if len(fl["completed_policies"]) != 4:
+        print("FAIL: faults scenario did not complete on all four policies")
+        rc = 1
+    if not all(fl["down_window_zero_throughput"].values()):
+        print("FAIL: non-zero throughput recorded inside the down window")
+        rc = 1
+    if rec.get("maxmem") is None:
+        print("FAIL: MaxMem did not recover to 90% of pre-fail throughput")
+        rc = 1
+    if not fl["maxmem_deep_validate_ok"]:
+        print("FAIL: MaxMem failed deep validation after the faulted run")
+        rc = 1
+    return rc
+
+
 def main(argv) -> int:
     smoke = "--smoke" in argv
     if "--sweep-point" in argv:
         return serial_sweep_point_main(argv)
+    if "--faults" in argv:
+        return _print_faults(faults_bench(smoke=smoke))
     if "--sweep" in argv:
         payload = sweep_bench(smoke=smoke)
         s, sp, f1, f = (payload["serial"], payload["serial_per_process"],
@@ -763,6 +890,7 @@ def main(argv) -> int:
           f"policies={len(th['completed_policies'])};"
           f"maxmem_migration_MB={th['maxmem_migration_bytes'] / 1e6:.1f};"
           f"maxmem_peak_queue_depth={th['maxmem_peak_queue_depth']}")
+    faults_rc = _print_faults(payload["faults"])
     if not smoke:
         vec = payload["baseline_vectorization_64k"]
         for n in ("hemem", "autonuma", "twolm", "suite"):
@@ -779,6 +907,8 @@ def main(argv) -> int:
     if len(payload["thrash"]["completed_policies"]) != 4:
         print("FAIL: thrash scenario did not complete on all four policies")
         return 1
+    if faults_rc:
+        return faults_rc
     return 0
 
 

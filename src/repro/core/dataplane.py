@@ -54,6 +54,18 @@ class PagePool:
         self._free_fast = list(range(fast_capacity - 1, -1, -1))
         self._free_slow = list(range(self.trash - 1, fast_capacity - 1, -1))
         self.moved_pages = 0  # cumulative pages DMA'd by migrations
+        # Fault injection (core/faults.py). With an injector attached each
+        # page move runs through its bounded-retry loop; moves that exhaust
+        # the budget are abandoned — the page keeps its source-tier frame
+        # (commit-on-completion fallback: degraded, never corrupt) and its
+        # id lands in ``last_failed`` so the manager can revert the
+        # already-flipped tier metadata.
+        self.fault_injector = None
+        self.last_failed = (np.empty(0, np.int64), np.empty(0, np.int64))
+
+    def set_fault_injector(self, injector) -> None:
+        """Attach (or with ``None`` detach) a ``FaultInjector``."""
+        self.fault_injector = injector
 
     # ------------------------------------------------------------ control
     def on_allocate(self, page_ids: Sequence[int], tiers: Sequence[int]) -> None:
@@ -108,8 +120,20 @@ class PagePool:
         pro = np.asarray(promote_ids).ravel()
         dem = dem[dem >= 0]
         pro = pro[pro >= 0]
+        fi = self.fault_injector
+        failed_dem, failed_pro = [], []
         src, dst = [], []
         for p in dem:
+            if fi is not None and int(self.frame[p]) >= self.fast_capacity:
+                # already physically slow: an earlier promote of this page
+                # failed, and the policy has now demoted it again — the
+                # "move" is already satisfied, no DMA needed
+                continue
+            if fi is not None and not fi.attempt_move():
+                # abandoned after the retry budget: the page keeps its fast
+                # frame, so this batch's promotes have one fewer slot
+                failed_dem.append(int(p))
+                continue
             f = int(self.frame[p])
             src.append(f)
             dst.append(self._free_slow.pop())
@@ -117,12 +141,30 @@ class PagePool:
             self._free_fast.append(f)  # reusable by this batch's promotes
         freed_slow = []
         for p in pro:
+            if fi is not None:
+                if int(self.frame[p]) < self.fast_capacity:
+                    # already physically fast (an earlier failed demote
+                    # kept its frame): nothing to move
+                    continue
+                if not self._free_fast:
+                    # a failed demote kept its frame: refuse rather than
+                    # oversubscribe the fast tier
+                    fi.no_frame += 1
+                    failed_pro.append(int(p))
+                    continue
+                if not fi.attempt_move():
+                    failed_pro.append(int(p))
+                    continue
             f = int(self.frame[p])
             src.append(f)
             dst.append(self._free_fast.pop())
             self.frame[p] = dst[-1]
             freed_slow.append(f)  # released only after the sweep: a demote
             # destination must never alias a row this sweep still reads
+        self.last_failed = (
+            np.asarray(failed_dem, np.int64),
+            np.asarray(failed_pro, np.int64),
+        )
         n = len(src)
         M = self.plan_slots
         for lo in range(0, n, M):

@@ -43,9 +43,14 @@ Surface:
 """
 from __future__ import annotations
 
+import atexit
+import concurrent.futures
 import dataclasses
+import queue as queue_mod
+import threading
+import time
 from functools import lru_cache, partial
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +75,7 @@ def fleet_multi_epoch(
     count_clamp: int = policy.COUNT_CLAMP,
     collect_plans: bool = False,
     trim_stats: bool = False,
+    compile_sentinel: bool = True,
 ):
     """Advance K stacked machines by ``k`` epochs in one dispatch.
 
@@ -86,19 +92,19 @@ def fleet_multi_epoch(
         fstate, fparams, counts, k=k, max_tenants=max_tenants,
         plan_size=plan_size, exact_sampling=exact_sampling,
         count_clamp=count_clamp, collect_plans=collect_plans,
-        trim_stats=trim_stats,
+        trim_stats=trim_stats, compile_sentinel=compile_sentinel,
     )
 
 
 def _fleet_impl(
     fstate, fparams, counts, *, k, max_tenants, plan_size, exact_sampling,
-    count_clamp, collect_plans, trim_stats=False,
+    count_clamp, collect_plans, trim_stats=False, compile_sentinel=True,
 ):
     step = partial(
         policy._multi_epoch_impl, k=k, max_tenants=max_tenants,
         plan_size=plan_size, exact_sampling=exact_sampling,
         count_clamp=count_clamp, collect_plans=collect_plans,
-        trim_stats=trim_stats,
+        trim_stats=trim_stats, compile_sentinel=compile_sentinel,
     )
     if counts is None:
         return jax.vmap(lambda s, p: step(s, p, None))(fstate, fparams)
@@ -141,7 +147,7 @@ def _jitted_fleet(donate: bool):
         _fleet_impl,
         static_argnames=(
             "k", "max_tenants", "plan_size", "exact_sampling", "count_clamp",
-            "collect_plans", "trim_stats",
+            "collect_plans", "trim_stats", "compile_sentinel",
         ),
         donate_argnums=(0,) if donate else (),
     )
@@ -151,7 +157,7 @@ def _jitted_fleet(donate: bool):
 def _jitted_sharded_fleet(
     mesh: Mesh, donate: bool, has_counts: bool, k: int, max_tenants: int,
     plan_size: int, exact_sampling: bool, count_clamp: int,
-    collect_plans: bool, trim_stats: bool,
+    collect_plans: bool, trim_stats: bool, compile_sentinel: bool = True,
 ):
     """One compiled shard_map program per (mesh, static-config) pair.
 
@@ -165,6 +171,7 @@ def _jitted_sharded_fleet(
         _fleet_impl, k=k, max_tenants=max_tenants, plan_size=plan_size,
         exact_sampling=exact_sampling, count_clamp=count_clamp,
         collect_plans=collect_plans, trim_stats=trim_stats,
+        compile_sentinel=compile_sentinel,
     )
     spec = PartitionSpec("machines")
     if has_counts:
@@ -193,6 +200,7 @@ def fleet_multi_epoch_sharded(
     count_clamp: int = policy.COUNT_CLAMP,
     collect_plans: bool = False,
     trim_stats: bool = False,
+    compile_sentinel: bool = True,
 ):
     """:func:`fleet_multi_epoch` with the machine axis partitioned over
     ``mesh`` (axis name ``machines``). The leading dimension of every leaf
@@ -202,6 +210,7 @@ def fleet_multi_epoch_sharded(
     fn = _jitted_sharded_fleet(
         mesh, policy._donate_state(), counts is not None, k, max_tenants,
         plan_size, exact_sampling, count_clamp, collect_plans, trim_stats,
+        compile_sentinel,
     )
     if counts is None:
         return fn(fstate, fparams)
@@ -237,6 +246,68 @@ class FleetMultiEpochResult:
         )
 
 
+class DispatchError(RuntimeError):
+    """The fleet dispatch worker failed or timed out; the fleet state is
+    still the pre-dispatch one — ``FleetManager.recover_dispatch`` rolls the
+    epoch clocks back so the chunk can be retried (DESIGN.md §7)."""
+
+
+class _DispatchWorker:
+    """The fleet's dedicated dispatch thread.
+
+    A plain ``ThreadPoolExecutor`` has two lifecycle hazards here: its
+    atexit hook JOINS the worker, so a wedged device program blocks
+    interpreter exit forever, and a leaked executor keeps the process alive.
+    This minimal worker is a daemon thread draining a queue of (future,
+    thunk) pairs — it can never hold the interpreter hostage — and
+    ``close()`` (registered with atexit, bounded join) gives orderly
+    shutdown when the worker is healthy. ``FleetManager.recover_dispatch``
+    simply abandons a wedged worker and starts a fresh one."""
+
+    def __init__(self):
+        self._q: "queue_mod.Queue" = queue_mod.Queue()
+        self._thread = threading.Thread(
+            target=self._loop, name="fleet-dispatch", daemon=True
+        )
+        self._closed = False
+        self._thread.start()
+        atexit.register(self.close)
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fut, fn = item
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                fut.set_result(fn())
+            except BaseException as e:  # propagate EVERYTHING to the future
+                fut.set_exception(e)
+
+    def submit(self, fn) -> "concurrent.futures.Future":
+        if self._closed:
+            raise RuntimeError("dispatch worker is closed")
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        self._q.put((fut, fn))
+        return fut
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Ask the thread to drain and exit; join at most ``timeout``
+        seconds (a wedged device program is abandoned, not waited on)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(None)
+        if timeout > 0:
+            self._thread.join(timeout)
+        try:
+            atexit.unregister(self.close)
+        except Exception:
+            pass
+
+
 class FleetPendingResult:
     """A fleet advance running on the fleet's dispatch worker thread.
 
@@ -256,9 +327,25 @@ class FleetPendingResult:
         self._future = future
         self._result: Optional[FleetMultiEpochResult] = None
 
-    def result(self) -> FleetMultiEpochResult:
+    def result(self, timeout: Optional[float] = None) -> FleetMultiEpochResult:
+        """Join the dispatch. ``timeout`` (seconds) bounds the wait: on
+        expiry a :class:`DispatchError` is raised and the dispatch keeps
+        running — call again to keep waiting, or let the sweep supervisor
+        recover and fall back to the serialized path."""
         if self._result is None:
-            _fstate, (stats, flags, plans) = self._future.result()
+            try:
+                _fstate, (stats, flags, plans) = self._future.result(timeout)
+            except concurrent.futures.TimeoutError:
+                raise DispatchError(
+                    f"fleet dispatch did not complete within {timeout}s"
+                ) from None
+            except concurrent.futures.CancelledError:
+                raise
+            except BaseException as e:
+                # uniform fault surface: whatever the worker raised arrives
+                # as a DispatchError (cause preserved) so supervisors need
+                # one except clause, not a taxonomy
+                raise DispatchError(f"fleet dispatch failed: {e!r}") from e
             K = len(self._fleet.machines)
             stats, flags, plans = jax.tree.map(
                 lambda a: a[:K], (stats, flags, plans)
@@ -365,8 +452,22 @@ class FleetManager:
         self._inert_state = None
         # the dispatch worker: one thread so device programs serialize
         # naturally while the main thread keeps the host pipeline busy
-        self._executor = None
+        self._worker: Optional[_DispatchWorker] = None
         self._inflight = None
+        self._inflight_k = 0
+        # first worker exception, noted at FAULT time by a done-callback —
+        # every subsequent fleet operation raises it promptly instead of
+        # deferring to the next .result() (satellite: prompt propagation)
+        self._dispatch_error: Optional[BaseException] = None
+        # failed machines: slot -> the real PolicyState parked at fail time
+        # (the machine itself runs as an inert row until recovery)
+        self._parked: Dict[int, PolicyState] = {}
+        # optional worker supervision (enable_supervision): host 0 is the
+        # dispatch worker; it beats when a dispatch starts and completes
+        self.heartbeat = None
+        # chaos hooks (tests): fail the next n dispatches / delay each one
+        self._chaos_fail_n = 0
+        self._chaos_delay_s = 0.0
         self.upload_stats = {
             "dispatches": 0,
             "clean_dispatches": 0,
@@ -406,12 +507,26 @@ class FleetManager:
             )
         return self._inert_state
 
+    def _check_dispatch_error(self) -> None:
+        """Surface a worker fault NOW (not at the next ``.result()``). The
+        error stays sticky until ``recover_dispatch`` clears it."""
+        if self._dispatch_error is not None:
+            raise DispatchError(
+                f"fleet dispatch worker failed: {self._dispatch_error!r}"
+            ) from self._dispatch_error
+
     def _join(self):
         """Adopt the in-flight dispatch's advanced stacked state (if any).
         This is the pipeline's sync point: it blocks until the worker's
         device program — and its telemetry transfer — completed."""
+        self._check_dispatch_error()
         if self._inflight is not None:
-            fstate, _host = self._inflight.result()
+            try:
+                fstate, _host = self._inflight.result()
+            except concurrent.futures.CancelledError:
+                raise
+            except BaseException as e:
+                raise DispatchError(f"fleet dispatch failed: {e!r}") from e
             self._fstate = fstate
             self._inflight = None
         return self._fstate
@@ -476,6 +591,7 @@ class FleetManager:
         counts: Optional[np.ndarray] = None,
         collect_plans: bool = False,
         trim_stats: bool = False,
+        inline: bool = False,
     ) -> FleetPendingResult:
         """Dispatch ``k`` epochs for every machine and return immediately.
 
@@ -483,9 +599,11 @@ class FleetManager:
         the meantime the host can record the previous chunk, prepare the
         next one, or fire control-plane events — the double-buffered sweep
         pipeline (``scenario.run_sweep``) lives on exactly this overlap.
+        ``inline=True`` runs the same program synchronously on the calling
+        thread and returns a pre-resolved handle — the serialized fallback
+        the sweep supervisor degrades to when the worker misbehaves.
         """
-        import concurrent.futures
-
+        self._check_dispatch_error()
         K = len(self.machines)
         pad = self.num_padded - K
         self._assemble()
@@ -506,8 +624,19 @@ class FleetManager:
         )
         mesh = self.mesh
         fstate_in, fparams_in = self._fstate, self._fparams
+        hb = self.heartbeat
+        chaos_fail = self._chaos_fail_n > 0
+        if chaos_fail:
+            self._chaos_fail_n -= 1
+        chaos_delay = self._chaos_delay_s
 
         def work():
+            if hb is not None:
+                hb.beat(0)
+            if chaos_delay:
+                time.sleep(chaos_delay)
+            if chaos_fail:
+                raise RuntimeError("injected dispatch failure (chaos hook)")
             c = None
             if cn is not None:
                 # host->device upload of the workload happens in the worker
@@ -524,19 +653,122 @@ class FleetManager:
             host = jax.device_get(
                 (stats, flagged, plans if collect_plans else None)
             )
+            if hb is not None:
+                hb.beat(0)
             return fstate, host
 
-        if self._executor is None:
-            self._executor = concurrent.futures.ThreadPoolExecutor(
-                max_workers=1, thread_name_prefix="fleet-dispatch"
-            )
-        self._inflight = self._executor.submit(work)
+        if inline:
+            # serialized fallback: run on the calling thread; failures raise
+            # here directly and leave the pre-dispatch state intact
+            fut: concurrent.futures.Future = concurrent.futures.Future()
+            fut.set_result(work())
+            self._inflight = fut
+        else:
+            if self._worker is None:
+                self._worker = _DispatchWorker()
+            self._inflight = self._worker.submit(work)
+            self._inflight.add_done_callback(self._note_dispatch_outcome)
+        self._inflight_k = k
         self._park_slices()
         for m in self.machines:
             m.epoch_index += k
             m._snap = None
         self.upload_stats["dispatches"] += 1
         return FleetPendingResult(self, self._inflight)
+
+    def _note_dispatch_outcome(self, fut) -> None:
+        """Done-callback on the worker future: record the first failure at
+        FAULT time so the main thread learns about it at its next fleet
+        call, not only when it finally asks for the result."""
+        if fut.cancelled() or getattr(fut, "_fleet_abandoned", False):
+            return
+        exc = fut.exception()
+        if exc is not None and self._dispatch_error is None:
+            self._dispatch_error = exc
+
+    def recover_dispatch(self) -> None:
+        """Reset after a failed (or wedged) dispatch so the chunk can be
+        retried. The stacked state is still the pre-dispatch assembly (the
+        CPU path never donates it), so recovery is: drop the in-flight
+        future, clear the sticky error, roll the per-machine epoch clocks
+        back by the dispatched k, and abandon the worker thread — a fresh
+        daemon is created on the next dispatch. A supervised fleet also gets
+        a fresh ``HeartbeatTracker`` (the old one latched the worker dead).
+        """
+        if self._inflight is not None:
+            # flag before cancel: an abandoned-but-running future resolves
+            # later and must not re-arm the sticky error we just cleared
+            self._inflight._fleet_abandoned = True
+            self._inflight.cancel()
+            self._inflight = None
+            for m in self.machines:
+                m.epoch_index -= self._inflight_k
+                m._snap = None
+            # the parked lazy slices point at _join(); with the in-flight
+            # future dropped they resolve to the pre-dispatch stack rows
+        self._inflight_k = 0
+        self._dispatch_error = None
+        if self._worker is not None:
+            self._worker.close(timeout=0.0)  # abandon, never block on a wedge
+            self._worker = None
+        if self.heartbeat is not None:
+            self.enable_supervision(
+                timeout=self.heartbeat.timeout, clock=self.heartbeat.clock
+            )
+
+    # ---------------------------------------------------------- supervision
+    def enable_supervision(self, timeout: float = 60.0, clock=None) -> None:
+        """Watch the dispatch worker with the seed's ``HeartbeatTracker``
+        (host id 0 = the worker; it beats at dispatch start and completion).
+        ``check_worker()`` returning a non-empty list means the worker has
+        been silent longer than ``timeout`` — the sweep supervisor then
+        recovers and falls back to the serialized path. ``clock`` is
+        injectable for tests (fake time)."""
+        from repro.runtime.fault_tolerance import HeartbeatTracker
+
+        kw = {} if clock is None else {"clock": clock}
+        self.heartbeat = HeartbeatTracker([0], timeout=timeout, **kw)
+
+    def check_worker(self) -> List[int]:
+        """Newly-dead host ids from the supervision tracker ([] when
+        healthy or supervision is off)."""
+        if self.heartbeat is None:
+            return []
+        return self.heartbeat.check()
+
+    # --------------------------------------------------------- machine faults
+    @property
+    def failed_machines(self) -> List[int]:
+        return sorted(self._parked)
+
+    def fail_machine(self, i: int) -> None:
+        """Drop machine ``i`` mid-sweep (the MachineFail scenario event).
+
+        Its real ``PolicyState`` is parked host-side and the machine runs as
+        an inert row — same static shapes, no tenants, no backlog — so the
+        fleet program's geometry never changes. The PRNG stream and queue
+        are frozen exactly where the failure left them; ``recover_machine``
+        restores them bit-identically. The machine's ``epoch_index`` keeps
+        advancing while parked: it is the fleet's wall clock, and the down
+        window is real elapsed time (the simulator records it as zero
+        throughput)."""
+        if i in self._parked:
+            raise ValueError(f"machine {i} is already failed")
+        m = self.machines[i]
+        m._ensure_segs()  # park a self-consistent state (segs current)
+        self._parked[i] = m._state  # materializes the lazy slice
+        m._state = self._make_inert_state()
+        m._snap = None
+
+    def recover_machine(self, i: int) -> None:
+        """Restore machine ``i``'s parked state (the MachineRecover event).
+        The state setter marks the row dirty, so the next dispatch uploads
+        the real state back into the stack."""
+        if i not in self._parked:
+            raise ValueError(f"machine {i} is not failed")
+        m = self.machines[i]
+        m._state = self._parked.pop(i)
+        m._snap = None
 
     def run_epochs(
         self,

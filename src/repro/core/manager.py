@@ -143,6 +143,7 @@ class CentralManager:
         migration_bandwidth: Optional[int] = None,
         migration_latency: int = 0,
         data_plane_elems: Optional[int] = None,
+        sentinel: bool = False,
     ):
         """``queue_size > 0`` enables the asynchronous migration data plane
         (DESIGN.md §4): selections are queued and committed by a bounded
@@ -152,7 +153,12 @@ class CentralManager:
         pre-data-plane behavior. ``data_plane_elems`` additionally backs
         every page with ``data_plane_elems`` elements of real content in a
         :class:`~repro.core.dataplane.PagePool`; drained migrations then
-        move actual bytes through the Pallas page-move kernel."""
+        move actual bytes through the Pallas page-move kernel.
+        ``sentinel=True`` turns on the in-trace invariant sentinel
+        (DESIGN.md §7): each epoch's stats carry a violation bitmask
+        (``EpochStats.sentinel``, core/faults.py SENTINEL_*). The flag is a
+        traced parameter — toggling it via :meth:`set_sentinel` never
+        retraces."""
         assert fast_capacity <= num_pages
         if migration_bandwidth is not None and queue_size == 0:
             raise ValueError(
@@ -180,6 +186,7 @@ class CentralManager:
                 else migration_bandwidth
             ),
             migration_latency=jnp.int32(migration_latency),
+            sentinel=jnp.int32(1 if sentinel else 0),
         )
         self.plan_size = int(migration_budget)
         self.queue_size = int(queue_size)
@@ -201,6 +208,9 @@ class CentralManager:
         self.queue_drained = 0
         self.queue_cancelled = 0
         self.queue_dropped = 0
+        # pages whose DMA move was abandoned by the fault injector and whose
+        # tier flip was reverted (commit-on-completion fallback)
+        self.migration_failures = 0
         self.pool: Optional[PagePool] = None
         if data_plane_elems is not None:
             self.pool = PagePool(
@@ -406,6 +416,45 @@ class CentralManager:
         self.queue_cancelled += int(np.asarray(q.cancelled).sum())
         self.queue_dropped += int(np.asarray(q.dropped).sum())
 
+    def _pool_execute(self, dem_ids, pro_ids, failed_dem: set, failed_pro: set) -> None:
+        """Run one drained batch through the pool, folding fault outcomes.
+
+        Pages moved successfully drop out of the accumulated failed sets (a
+        later retry superseded the earlier failure); freshly failed ids are
+        added. With no injector attached this is exactly ``pool.execute``.
+        """
+        self.pool.execute(dem_ids, pro_ids)
+        if self.pool.fault_injector is None:
+            return
+        fd, fp = self.pool.last_failed
+        dem = np.asarray(dem_ids).ravel()
+        pro = np.asarray(pro_ids).ravel()
+        ok = set(dem[dem >= 0].tolist()) | set(pro[pro >= 0].tolist())
+        ok -= set(fd.tolist()) | set(fp.tolist())
+        failed_dem -= ok
+        failed_pro -= ok
+        failed_dem.update(fd.tolist())
+        failed_pro.update(fp.tolist())
+
+    def _revert_failed_moves(self, failed_dem: set, failed_pro: set) -> None:
+        """Commit-on-completion fallback: a page whose DMA move was
+        abandoned stays in its SOURCE tier — roll the policy's optimistic
+        tier flip back so placements and frames never diverge. Degraded
+        (the policy will re-select the page next epoch), never corrupt."""
+        if not failed_dem and not failed_pro:
+            return
+        tier = np.asarray(self.pages.tier).copy()
+        if failed_dem:
+            tier[list(failed_dem)] = TIER_FAST
+        if failed_pro:
+            tier[list(failed_pro)] = TIER_SLOW
+        # ownership is untouched, so the owner-sorted segments stay valid
+        self._state = self._state._replace(
+            pages=self.pages._replace(tier=jnp.asarray(tier))
+        )
+        self._snap = None
+        self.migration_failures += len(failed_dem) + len(failed_pro)
+
     def run_epoch(self) -> EpochResult:
         """Policy-thread tick: sample -> policy -> migrate, one dispatch."""
         self._ensure_segs()
@@ -418,15 +467,18 @@ class CentralManager:
         )
         self.epoch_index += 1
         self._snap = None
+        fd, fp = set(), set()
         if stats.queue is not None:
             self._fold_queue_stats(stats.queue)
             if self.pool is not None:
-                self.pool.execute(
+                self._pool_execute(
                     np.asarray(stats.queue.drained_demote_ids),
                     np.asarray(stats.queue.drained_promote_ids),
+                    fd, fp,
                 )
         elif self.pool is not None:
-            self.pool.execute(np.asarray(plan.demote), np.asarray(plan.promote))
+            self._pool_execute(np.asarray(plan.demote), np.asarray(plan.promote), fd, fp)
+        self._revert_failed_moves(fd, fp)
         return EpochResult(stats=stats, plan=plan, flags=np.asarray(self._state.tenants.flagged))
 
     def run_epochs(
@@ -459,18 +511,24 @@ class CentralManager:
         )
         self.epoch_index += k
         self._snap = None
+        # With faults injected, failed moves accumulate over the k-epoch host
+        # loop and the tier flips are reverted ONCE at chunk end: the in-scan
+        # trajectory is internally consistent (it committed optimistically),
+        # and the chunk boundary is where placements and frames reconverge.
+        fd, fp = set(), set()
         if stats.queue is not None:
             self._fold_queue_stats(stats.queue)
             if self.pool is not None:
                 dem = np.asarray(stats.queue.drained_demote_ids)
                 pro = np.asarray(stats.queue.drained_promote_ids)
                 for i in range(k):
-                    self.pool.execute(dem[i], pro[i])
+                    self._pool_execute(dem[i], pro[i], fd, fp)
         elif self.pool is not None:
             dem = np.asarray(plans.demote)
             pro = np.asarray(plans.promote)
             for i in range(k):
-                self.pool.execute(dem[i], pro[i])
+                self._pool_execute(dem[i], pro[i], fd, fp)
+        self._revert_failed_moves(fd, fp)
         return MultiEpochResult(stats=stats, plans=plans, flags=np.asarray(flagged))
 
     # ------------------------------------------------------- data plane
@@ -500,6 +558,49 @@ class CentralManager:
 
     def set_migration_latency(self, epochs: int) -> None:
         self.params = self.params._replace(migration_latency=jnp.int32(epochs))
+
+    # --------------------------------------------------- faults & sentinel
+    def set_sentinel(self, on: bool) -> None:
+        """Toggle the in-trace invariant sentinel (traced: no retrace)."""
+        self.params = self.params._replace(sentinel=jnp.int32(1 if on else 0))
+
+    def set_fault_injector(self, injector) -> None:
+        """Attach a ``core.faults.FaultInjector`` to the page data plane
+        (or detach with ``None``). Requires a pool — without real frames
+        there is nothing whose move can fail."""
+        if self.pool is None:
+            raise ValueError(
+                "data-plane fault injection requires a page pool: construct "
+                "CentralManager(data_plane_elems=...)"
+            )
+        self.pool.set_fault_injector(injector)
+
+    def poison_telemetry(self, kind: str = "tier") -> None:
+        """Corrupt one cell of the policy state (the TelemetryCorrupt
+        scenario event): ``"tier"`` unplaces the first owned page (its owner
+        survives — an owned page with no tier), ``"nan"`` drops a NaN into
+        an active tenant's FMMR EWMA. Both are exactly the corruptions the
+        invariant sentinel exists to catch; tests assert it does."""
+        snap = self._snapshot()
+        if kind == "tier":
+            owned = np.flatnonzero(snap["owner"] >= 0)
+            if len(owned) == 0:
+                raise RuntimeError("no owned pages to poison")
+            tier = snap["tier"].copy()
+            tier[owned[0]] = TIER_NONE
+            self._state = self._state._replace(
+                pages=self.pages._replace(tier=jnp.asarray(tier))
+            )
+            self._snap = None
+        elif kind == "nan":
+            act = np.flatnonzero(np.asarray(self.tenants.active))
+            if len(act) == 0:
+                raise RuntimeError("no active tenants to poison")
+            self.tenants = self.tenants._replace(
+                a_miss=self.tenants.a_miss.at[int(act[0])].set(jnp.nan)
+            )
+        else:
+            raise ValueError(f"unknown poison kind: {kind!r}")
 
     def queue_depth(self) -> int:
         """In-flight migrations right now (0 when the queue is off)."""

@@ -33,11 +33,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bins, fmmr
+from repro.core.faults import (
+    SENTINEL_NAN,
+    SENTINEL_OCCUPANCY,
+    SENTINEL_ORPHAN,
+    SENTINEL_OWNERSHIP,
+    SENTINEL_QUEUE,
+)
 from repro.core.sampler import sample_accesses
 from repro.core.types import (
     DIR_DEMOTE,
     DIR_PROMOTE,
     TIER_FAST,
+    TIER_NONE,
     TIER_SLOW,
     EpochStats,
     MigrationPlan,
@@ -696,6 +704,59 @@ def _commit(state, pages, tenants, pm, dm, plan, stats, params):
     return pages, queue, state.epoch + 1, stats._replace(queue=qstats)
 
 
+def _sentinel_bits(
+    pages: PageState,
+    tenants: TenantState,
+    params: PolicyParams,
+    max_tenants: int,
+    qstats: Optional[QueueStats],
+    depth_before: Optional[jax.Array],
+) -> jax.Array:
+    """Invariant-sentinel bitmask (core/faults.py SENTINEL_*), computed on the
+    POST-commit state inside the fused tick. A handful of O(P) reductions —
+    cheap next to the tick itself — gated by the traced ``params.sentinel``
+    flag so flipping the sentinel never retraces. The host-side
+    :func:`repro.core.faults.deep_validate` is the exhaustive counterpart.
+
+    The reductions sit under ``lax.cond`` so a flag-OFF program SKIPS them
+    at runtime, not just masks their result — that is what keeps the
+    perf-gate's sentinel-off overhead band tight. (Inside the vmapped
+    fleet tick the cond lowers to a select and both branches execute; the
+    gated band is the single-machine tick, and the fleet's per-machine
+    epoch cost dwarfs the reductions.)"""
+    i32 = jnp.int32
+
+    def compute(_):
+        fast_occ = (pages.tier == TIER_FAST).sum()
+        bits = jnp.where(
+            fast_occ > params.fast_capacity, i32(SENTINEL_OCCUPANCY), i32(0)
+        )
+        owned = pages.owner >= 0
+        placed = pages.tier != TIER_NONE
+        bits = bits | jnp.where(
+            jnp.any(owned != placed), i32(SENTINEL_OWNERSHIP), i32(0)
+        )
+        own = jnp.clip(pages.owner, 0, max_tenants - 1)
+        orphan = owned & ~tenants.active[own]
+        bits = bits | jnp.where(jnp.any(orphan), i32(SENTINEL_ORPHAN), i32(0))
+        bad = jnp.any(~jnp.isfinite(tenants.a_miss))
+        bits = bits | jnp.where(bad, i32(SENTINEL_NAN), i32(0))
+        if qstats is not None and depth_before is not None:
+            flow = (
+                qstats.enqueued
+                - qstats.drained_promote
+                - qstats.drained_demote
+                - qstats.cancelled
+                - qstats.dropped
+            )
+            bits = bits | jnp.where(
+                qstats.depth != depth_before + flow, i32(SENTINEL_QUEUE), i32(0)
+            )
+        return bits
+
+    return jax.lax.cond(params.sentinel > 0, compute, lambda _: i32(0), None)
+
+
 def _epoch_step_impl(
     state: PolicyState,
     params: PolicyParams,
@@ -704,15 +765,23 @@ def _epoch_step_impl(
     plan_size: int,
     exact_sampling: bool,
     count_clamp: int,
+    compile_sentinel: bool = True,
 ):
     rng, sub = jax.random.split(state.rng)
     sampled = sample_accesses(sub, state.pending, params.sample_period, exact=exact_sampling)
+    depth_before = None
+    if state.queue is not None and state.queue.size > 0:
+        depth_before = state.queue.depth
     pages, tenants, pm, dm, plan, stats = _epoch_core(
         state.pages, state.tenants, sampled, params, max_tenants, plan_size,
         count_clamp, collect_plan=True, exclude=_inflight_mask(state),
         segs=state.segs,
     )
     pages, queue, epoch, stats = _commit(state, pages, tenants, pm, dm, plan, stats, params)
+    if compile_sentinel:
+        stats = stats._replace(sentinel=_sentinel_bits(
+            pages, tenants, params, max_tenants, stats.queue, depth_before
+        ))
     new_state = state._replace(
         pages=pages, tenants=tenants,
         pending=jnp.zeros_like(state.pending), rng=rng,
@@ -725,7 +794,10 @@ def _epoch_step_impl(
 def _jitted_epoch_step(donate: bool):
     return jax.jit(
         _epoch_step_impl,
-        static_argnames=("max_tenants", "plan_size", "exact_sampling", "count_clamp"),
+        static_argnames=(
+            "max_tenants", "plan_size", "exact_sampling", "count_clamp",
+            "compile_sentinel",
+        ),
         donate_argnums=(0,) if donate else (),
     )
 
@@ -738,6 +810,7 @@ def epoch_step(
     plan_size: int,
     exact_sampling: bool = False,
     count_clamp: int = COUNT_CLAMP,
+    compile_sentinel: bool = True,
 ):
     """Fused policy tick: sample -> policy -> migrate, one dispatch.
 
@@ -745,10 +818,15 @@ def epoch_step(
     in the state; returns (state', plan, stats) with ``pending`` zeroed and
     the migration already applied to the metadata. The state buffers are
     donated on accelerator backends — do not reuse the argument there.
+    ``compile_sentinel=False`` omits the invariant-sentinel reductions from
+    the program entirely (the reference point for the perf-gate overhead
+    band); the default compiles them in, gated by the traced
+    ``params.sentinel`` flag.
     """
     return _jitted_epoch_step(_donate_state())(
         state, params, max_tenants=max_tenants, plan_size=plan_size,
         exact_sampling=exact_sampling, count_clamp=count_clamp,
+        compile_sentinel=compile_sentinel,
     )
 
 
@@ -781,6 +859,7 @@ def _multi_epoch_impl(
     count_clamp: int,
     collect_plans: bool,
     trim_stats: bool = False,
+    compile_sentinel: bool = True,
 ):
     P = state.pending.shape[0]
     per_epoch = None
@@ -828,12 +907,17 @@ def _multi_epoch_impl(
         sampled = sample_accesses(
             sub, pending, params.sample_period, exact=exact_sampling, z=z
         )
+        depth_before = st.queue.depth if queue_mode else None
         pages, tenants, pm, dm, plan, stats = _epoch_core(
             st.pages, st.tenants, sampled, params, max_tenants, plan_size,
             count_clamp, collect_plan=collect_plans or queue_mode,
             exclude=_inflight_mask(st), segs=st.segs,
         )
         pages, queue, epoch, stats = _commit(st, pages, tenants, pm, dm, plan, stats, params)
+        if compile_sentinel:
+            stats = stats._replace(sentinel=_sentinel_bits(
+                pages, tenants, params, max_tenants, stats.queue, depth_before
+            ))
         st2 = st._replace(
             pages=pages, tenants=tenants,
             pending=jnp.zeros_like(pending), rng=rng,
@@ -853,7 +937,7 @@ def _jitted_multi_epoch(donate: bool):
         _multi_epoch_impl,
         static_argnames=(
             "k", "max_tenants", "plan_size", "exact_sampling", "count_clamp",
-            "collect_plans", "trim_stats",
+            "collect_plans", "trim_stats", "compile_sentinel",
         ),
         donate_argnums=(0,) if donate else (),
     )
@@ -871,6 +955,7 @@ def multi_epoch(
     count_clamp: int = COUNT_CLAMP,
     collect_plans: bool = True,
     trim_stats: bool = False,
+    compile_sentinel: bool = True,
 ):
     """Scan the fused epoch across ``k`` epochs in ONE dispatch.
 
@@ -889,4 +974,5 @@ def multi_epoch(
         state, params, counts, k=k, max_tenants=max_tenants, plan_size=plan_size,
         exact_sampling=exact_sampling, count_clamp=count_clamp,
         collect_plans=collect_plans, trim_stats=trim_stats,
+        compile_sentinel=compile_sentinel,
     )

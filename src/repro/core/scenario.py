@@ -29,6 +29,22 @@ in the order they appear in ``Scenario.events``):
                                 without a data plane clamp their per-epoch
                                 migration budget instead
 
+Fault events (DESIGN.md §7) share the same surface; each takes an optional
+``machine`` index that a fleet sweep (:func:`run_sweep`) uses to target one
+machine (None = all), while single-sim runs apply it to the whole backend:
+
+  ``MachineFail(...)``          drop a machine: its fleet row is parked and
+                                runs inert; epochs record as down-time
+  ``MachineRecover(...)``       restore the parked state bit-identically
+  ``BandwidthDegrade(...)``     scale migration bandwidth RELATIVE to the
+                                configured value (degraded DMA engine);
+                                factor=1.0 restores
+  ``DataPlaneError(...)``       attach a seeded ``FaultInjector`` to the
+                                page pool: moves fail probabilistically
+                                with bounded retry; no-op without a pool
+  ``TelemetryCorrupt(...)``     poison one cell of the policy state — the
+                                corruption the invariant sentinel catches
+
 Epoch boundaries at which any event fires split the timeline into *phases*;
 :class:`ScenarioResult` aggregates per-tenant throughput/p99/FMMR per phase
 (plus migration bytes and mean queue depth), which is exactly the shape of
@@ -39,8 +55,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import SentinelError
 from repro.core.manager import CentralManager
 from repro.core.simulator import OPTANE, ColocationSim, EpochRecord, WorkloadSpec
 
@@ -77,6 +95,13 @@ class ResizeWorkingSet:
     set_index: int
     frac_pages: float
 
+    def validate(self) -> None:
+        if not (np.isfinite(self.frac_pages) and 0.0 <= self.frac_pages <= 1.0):
+            raise ValueError(
+                f"ResizeWorkingSet frac_pages must be finite in [0, 1], "
+                f"got {self.frac_pages!r}"
+            )
+
     def apply(self, sim: ColocationSim) -> None:
         sim.tenants[self.name].resize_set(self.set_index, self.frac_pages)
 
@@ -103,6 +128,13 @@ class SkewChange:
     set_index: int
     frac_accesses: float
 
+    def validate(self) -> None:
+        if not (np.isfinite(self.frac_accesses) and 0.0 <= self.frac_accesses <= 1.0):
+            raise ValueError(
+                f"SkewChange frac_accesses must be finite in [0, 1], "
+                f"got {self.frac_accesses!r}"
+            )
+
     def apply(self, sim: ColocationSim) -> None:
         sim.tenants[self.name].set_skew(self.set_index, self.frac_accesses)
 
@@ -115,6 +147,12 @@ class Retarget:
     epoch: int
     name: str
     t_miss: float
+
+    def validate(self) -> None:
+        if not (np.isfinite(self.t_miss) and 0.0 < self.t_miss <= 1.0):
+            raise ValueError(
+                f"Retarget t_miss must be finite in (0, 1], got {self.t_miss!r}"
+            )
 
     def apply(self, sim: ColocationSim) -> None:
         sim.set_target(self.name, self.t_miss)
@@ -140,6 +178,14 @@ class SetMigrationBandwidth:
     epoch: int
     pages_per_epoch: Optional[int]  # None = unlimited
 
+    def validate(self) -> None:
+        bw = self.pages_per_epoch
+        if bw is not None and (not np.isfinite(bw) or int(bw) < 0):
+            raise ValueError(
+                f"SetMigrationBandwidth pages_per_epoch must be None or a "
+                f"non-negative int, got {bw!r}"
+            )
+
     def apply(self, sim: ColocationSim) -> None:
         backend = sim.backend
         if hasattr(backend, "set_migration_bandwidth"):
@@ -164,8 +210,180 @@ class SetMigrationBandwidth:
         return f"bw={bw}"
 
 
+# ----------------------------------------------------------- fault events
+def _machine_tag(machine: Optional[int]) -> str:
+    return "*" if machine is None else str(machine)
+
+
+@dataclass(frozen=True)
+class MachineFail:
+    """Drop a machine mid-run (DESIGN.md §7).
+
+    In a fleet sweep the targeted machine's ``PolicyState`` is parked
+    host-side and the row runs inert until :class:`MachineRecover`; its
+    epochs record as down-time (zero throughput, all-miss). On a single sim
+    the whole backend freezes (``ColocationSim.fail``)."""
+
+    epoch: int
+    machine: Optional[int] = None  # sweep machine index; None = all
+
+    def apply(self, sim: ColocationSim) -> None:
+        sim.fail()
+
+    def label(self) -> str:
+        return f"fail[{_machine_tag(self.machine)}]"
+
+
+@dataclass(frozen=True)
+class MachineRecover:
+    """Restore a failed machine's parked state bit-identically; its PRNG
+    stream and migration queue resume exactly where the failure froze
+    them."""
+
+    epoch: int
+    machine: Optional[int] = None
+
+    def apply(self, sim: ColocationSim) -> None:
+        sim.recover()
+
+    def label(self) -> str:
+        return f"recover[{_machine_tag(self.machine)}]"
+
+
+@dataclass(frozen=True)
+class BandwidthDegrade:
+    """Scale migration bandwidth RELATIVE to the configured value (a
+    degraded DMA engine / interconnect), unlike the absolute
+    :class:`SetMigrationBandwidth`. ``factor=1.0`` restores full bandwidth.
+    A queue-mode manager running unlimited is first pinned to its migration
+    budget (the engine's nominal peak) so there is a finite value to scale;
+    hardware-managed baselines (TwoLM) have no migration engine and no-op."""
+
+    epoch: int
+    factor: float
+    machine: Optional[int] = None
+
+    def validate(self) -> None:
+        if not (np.isfinite(self.factor) and 0.0 < self.factor <= 1.0):
+            raise ValueError(
+                f"BandwidthDegrade factor must be finite in (0, 1], "
+                f"got {self.factor!r}"
+            )
+
+    def apply(self, sim: ColocationSim) -> None:
+        backend = sim.backend
+        if hasattr(backend, "set_migration_bandwidth") and getattr(backend, "queue_size", 0) > 0:
+            # queue-mode manager: scale the drain bandwidth (traced param)
+            if not hasattr(backend, "_undegraded_bandwidth"):
+                bw = int(backend.params.migration_bandwidth)
+                backend._undegraded_bandwidth = None if bw < 0 else bw
+            orig = backend._undegraded_bandwidth
+            if self.factor >= 1.0:
+                backend.set_migration_bandwidth(orig)
+            else:
+                nominal = int(backend.params.migration_budget) if orig is None else orig
+                backend.set_migration_bandwidth(max(1, int(nominal * self.factor)))
+            return
+        if hasattr(backend, "migration_budget"):
+            # instant-apply baselines: the per-epoch budget IS the bandwidth.
+            # budget None = unlimited (AutoNUMA's default) — no finite
+            # engine rate exists to scale, so degradation is a no-op there
+            if not hasattr(backend, "_undegraded_migration_budget"):
+                backend._undegraded_migration_budget = backend.migration_budget
+            orig = backend._undegraded_migration_budget
+            if orig is not None:
+                backend.migration_budget = (
+                    orig if self.factor >= 1.0 else max(1, int(orig * self.factor))
+                )
+            return
+        if hasattr(backend, "params") and hasattr(backend.params, "migration_budget"):
+            # instant-apply CentralManager: scale the traced budget leaf
+            if not hasattr(backend, "_undegraded_migration_budget"):
+                backend._undegraded_migration_budget = int(backend.params.migration_budget)
+            orig = backend._undegraded_migration_budget
+            new = orig if self.factor >= 1.0 else max(1, int(orig * self.factor))
+            backend.params = backend.params._replace(migration_budget=jnp.int32(new))
+        # hardware-managed placement (TwoLM): nothing to degrade
+
+    def label(self) -> str:
+        return f"bw*{self.factor:g}[{_machine_tag(self.machine)}]"
+
+
+@dataclass(frozen=True)
+class DataPlaneError:
+    """Attach a seeded ``core.faults.FaultInjector`` to the backend's page
+    pool: each DMA page move fails with probability ``rate``, retried with
+    exponential backoff up to ``max_retries`` times; abandoned moves stay in
+    their source tier (commit-on-completion fallback — degraded, never
+    corrupt). ``rate=0`` detaches. No-op on backends without a pool."""
+
+    epoch: int
+    rate: float
+    max_retries: int = 3
+    seed: int = 0
+    machine: Optional[int] = None
+
+    def validate(self) -> None:
+        if not (np.isfinite(self.rate) and 0.0 <= self.rate <= 1.0):
+            raise ValueError(
+                f"DataPlaneError rate must be finite in [0, 1], got {self.rate!r}"
+            )
+        if self.max_retries < 0:
+            raise ValueError(
+                f"DataPlaneError max_retries must be >= 0, got {self.max_retries!r}"
+            )
+
+    def apply(self, sim: ColocationSim) -> None:
+        backend = sim.backend
+        if getattr(backend, "pool", None) is None or not hasattr(backend, "set_fault_injector"):
+            return  # no page data plane — nothing whose move can fail
+        if self.rate <= 0.0:
+            backend.set_fault_injector(None)
+        else:
+            from repro.core.faults import FaultInjector
+
+            backend.set_fault_injector(FaultInjector(
+                move_fail_rate=self.rate, max_retries=self.max_retries,
+                seed=self.seed,
+            ))
+
+    def label(self) -> str:
+        return f"dma-err={self.rate:g}[{_machine_tag(self.machine)}]"
+
+
+@dataclass(frozen=True)
+class TelemetryCorrupt:
+    """Poison one cell of the policy state (``kind='tier'`` unplaces an
+    owned page, ``'nan'`` drops NaN into an FMMR EWMA) — exactly the
+    corruptions the invariant sentinel exists to catch. Transient: a sweep
+    restoring from a checkpoint does NOT replay an already-fired poison
+    (else detect -> restore would loop forever)."""
+
+    epoch: int
+    kind: str = "tier"
+    machine: Optional[int] = None
+
+    transient = True  # class attr: one-shot, skipped on restore replay
+
+    def validate(self) -> None:
+        if self.kind not in ("tier", "nan"):
+            raise ValueError(
+                f"TelemetryCorrupt kind must be 'tier' or 'nan', got {self.kind!r}"
+            )
+
+    def apply(self, sim: ColocationSim) -> None:
+        backend = sim.backend
+        if hasattr(backend, "poison_telemetry"):
+            backend.poison_telemetry(self.kind)
+
+    def label(self) -> str:
+        return f"poison:{self.kind}[{_machine_tag(self.machine)}]"
+
+
 ScenarioEvent = Union[Arrive, Depart, ResizeWorkingSet, ShiftWorkingSet,
-                      SkewChange, Retarget, PingPongShift, SetMigrationBandwidth]
+                      SkewChange, Retarget, PingPongShift, SetMigrationBandwidth,
+                      MachineFail, MachineRecover, BandwidthDegrade,
+                      DataPlaneError, TelemetryCorrupt]
 
 
 def pingpong_schedule(name: str, start: int, end: int, period: int) -> Tuple[PingPongShift, ...]:
@@ -193,6 +411,12 @@ class Scenario:
             assert 0 <= ev.epoch < self.n_epochs, (
                 f"event {ev} outside [0, {self.n_epochs})"
             )
+            # events with value constraints self-validate at construction
+            # (NaN/negative rates, bandwidths, working-set fractions fail
+            # HERE with a clear message, not as silent NaN downstream)
+            validate = getattr(ev, "validate", None)
+            if validate is not None:
+                validate()
 
     def events_at(self, epoch: int) -> List[ScenarioEvent]:
         return [ev for ev in self.events if ev.epoch == epoch]
@@ -372,6 +596,9 @@ class SweepResult:
     wall_s: float = 0.0
     devices: int = 1  # shards the machine axis ran over
     pipeline: bool = False  # double-buffered host/device driving was on
+    partial: bool = False  # stopped at a checkpoint via ``stop_after``
+    fallbacks: int = 0  # dispatch faults recovered onto the inline path
+    restores: int = 0  # sentinel-triggered checkpoint restores
 
     def to_jsonable(self) -> dict:
         return {
@@ -380,6 +607,9 @@ class SweepResult:
             "wall_s": round(self.wall_s, 3),
             "devices": self.devices,
             "pipeline": self.pipeline,
+            "partial": self.partial,
+            "fallbacks": self.fallbacks,
+            "restores": self.restores,
             "machines": {k: r.to_jsonable() for k, r in self.results.items()},
         }
 
@@ -400,6 +630,14 @@ def run_sweep(
     devices=None,
     pipeline: bool = True,
     trim_stats: bool = True,
+    sentinel: bool = False,
+    checkpoint_every: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
+    dispatch_timeout: Optional[float] = None,
+    stop_after: Optional[int] = None,
+    max_restores: int = 3,
+    on_fleet: Optional[Callable] = None,
 ) -> SweepResult:
     """Execute a :class:`ScenarioSweep` against the fleet backend.
 
@@ -427,10 +665,40 @@ def run_sweep(
     access distribution is frozen and migration stalls are not modeled;
     chunk boundaries (every event epoch, at least every ``policy_chunk``
     epochs) re-measure placement exactly.
+
+    Fault tolerance (DESIGN.md §7):
+
+      * ``sentinel=True`` compiles each machine's tick with the in-trace
+        invariant sentinel; a non-zero bitmask in a chunk's telemetry
+        raises :class:`~repro.core.faults.SentinelError` BEFORE the chunk
+        is recorded, and — when checkpointing is on — the sweep restores
+        from the last checkpoint and replays (transient corruptions like
+        ``TelemetryCorrupt`` are not re-fired). After ``max_restores``
+        round trips the error propagates.
+      * ``checkpoint_every=N`` (requires ``checkpoint_dir``) saves the
+        complete sweep state at the first fully-flushed chunk boundary
+        every N epochs; ``resume=True`` continues from the latest step,
+        bit-identically to an uninterrupted run. ``stop_after=E`` returns
+        a partial result right after the first checkpoint at/past epoch E
+        (the kill-simulation hook the resume-parity tests drive).
+      * ``dispatch_timeout`` bounds every wait on the async dispatch
+        worker (and arms the fleet's heartbeat supervision); a timeout or
+        worker fault rolls the epoch clocks back, re-runs the chunk on the
+        serialized inline path with the SAME pre-drawn access counts, and
+        degrades the rest of the sweep to serialized dispatch — recorded
+        histories are unaffected.
+      * ``on_fleet(fleet)`` runs right after fleet construction (chaos
+        tests use it to arm failure hooks).
     """
     import time as _time
 
-    from repro.core.fleet import FleetManager
+    from repro.core.fleet import DispatchError, FleetManager
+    from repro.runtime.fault_tolerance import DispatchSupervisor, SweepCheckpoint
+
+    if checkpoint_every is not None and checkpoint_dir is None:
+        raise ValueError("checkpoint_every requires checkpoint_dir")
+    if resume and checkpoint_dir is None:
+        raise ValueError("resume=True requires checkpoint_dir")
 
     t0 = _time.time()
     scenario = sweep.scenario
@@ -445,11 +713,16 @@ def run_sweep(
             else p.sample_period,
             seed=p.seed, queue_size=queue_size,
             migration_latency=p.migration_latency,
+            sentinel=sentinel,
         )
         if p.migration_bandwidth is not None:
             mgr_kw["migration_bandwidth"] = p.migration_bandwidth
         managers.append(CentralManager(**mgr_kw))
     fleet = FleetManager(managers, devices=devices)
+    if on_fleet is not None:
+        on_fleet(fleet)
+    supervisor = DispatchSupervisor(fleet, timeout=dispatch_timeout)
+    ckpt = SweepCheckpoint(checkpoint_dir) if checkpoint_dir is not None else None
     sims = [
         ColocationSim(
             mgr, machine or OPTANE, epoch_seconds=epoch_seconds,
@@ -457,58 +730,203 @@ def run_sweep(
         )
         for mgr, p in zip(managers, sweep.points)
     ]
+    K = len(sims)
+    for ev in scenario.events:
+        mt = getattr(ev, "machine", None)
+        if mt is not None and not (0 <= int(mt) < K):
+            raise ValueError(
+                f"event {ev.label()} targets machine {mt}; sweep has {K}"
+            )
 
     boundaries = sorted({0, *(ev.epoch for ev in scenario.events), scenario.n_epochs})
-    pending = None  # (handle, k, ctxs) — the chunk currently on device
+    pending = None  # (handle, k, ctxs, counts) — the chunk currently on device
     arrays = None  # per-sim cost-model matrices, valid within an event-free stretch
+    fired: set = set()  # id() of transient events already applied this process
+    restores = 0
+    cur = 0
+    last_ckpt = 0
+
+    if resume:
+        step = ckpt.latest()
+        if step is not None:
+            cur = ckpt.restore(fleet, sims)
+            last_ckpt = cur
+
+    def redispatch_pending() -> None:
+        """Dispatch-fault recovery: roll the epoch clocks back and re-run
+        the in-flight chunk on the serialized inline path. The retry
+        consumes the SAME pre-drawn access counts against the SAME
+        pre-dispatch state, so the recorded history is bit-identical to
+        what the worker should have produced. Degrades the rest of the
+        sweep to serialized dispatch (sticky)."""
+        nonlocal pending
+        fleet.recover_dispatch()
+        supervisor.note_fallback()
+        if pending is not None:
+            handle, k, ctxs, counts = pending
+            handle = fleet.run_epochs_async(
+                k, counts=counts, trim_stats=trim_stats, inline=True
+            )
+            pending = (handle, k, ctxs, counts)
+
+    def join_pending() -> None:
+        """Bounded wait on the in-flight chunk (the supervision point)."""
+        if pending is None:
+            return
+        try:
+            supervisor.join(pending[0])
+        except DispatchError:
+            redispatch_pending()
+
+    def sync_placement():
+        try:
+            return fleet.stacked_placement()
+        except DispatchError:
+            redispatch_pending()
+            return fleet.stacked_placement()
 
     def flush(tiers: np.ndarray) -> None:
-        """Record the in-flight chunk against its end placement."""
+        """Record the in-flight chunk against its end placement. With the
+        sentinel armed, a violation raises BEFORE anything is recorded —
+        corrupted telemetry never reaches the history."""
         nonlocal pending
         if pending is None:
             return
-        handle, k, ctxs = pending
+        handle, k, ctxs, _counts = pending
         res = handle.result()
+        if sentinel:
+            bits = np.asarray(res.stats.sentinel)
+            if bits.any():
+                where = np.argwhere(bits != 0)[:4].tolist()
+                pending = None
+                raise SentinelError(
+                    f"sentinel bits {sorted({int(v) for v in bits[bits != 0]})} "
+                    f"at (machine, chunk-epoch) {where}"
+                )
         for i, (sim, ctx) in enumerate(zip(sims, ctxs)):
-            sim._chunk_record(res.machine(i), k, ctx, tier_end=tiers[i])
+            if ctx is None:  # machine was down for this chunk
+                sim._record_down(k)
+            else:
+                sim._chunk_record(res.machine(i), k, ctx, tier_end=tiers[i])
         pending = None
 
-    cur = 0
-    while cur < scenario.n_epochs:
+    def restore_from_checkpoint() -> bool:
+        nonlocal cur, last_ckpt, pending, arrays, restores
+        if ckpt is None or ckpt.latest() is None or restores >= max_restores:
+            return False
+        restores += 1
+        pending = None
+        arrays = None
+        cur = ckpt.restore(fleet, sims)
+        last_ckpt = cur
+        return True
+
+    def flush_checked(tiers: np.ndarray) -> bool:
+        """flush(); on a sentinel violation restore from the last
+        checkpoint. False = the caller must restart the loop at the
+        restored cursor."""
+        try:
+            flush(tiers)
+        except SentinelError:
+            if not restore_from_checkpoint():
+                raise
+            return False
+        return True
+
+    def fire_events(evs) -> None:
+        for ev in evs:
+            if getattr(ev, "transient", False) and id(ev) in fired:
+                continue  # one-shot fault already injected before a restore
+            if isinstance(ev, (Arrive, Depart)) and fleet.failed_machines:
+                raise ValueError(
+                    f"{ev.label()} while machines {fleet.failed_machines} are "
+                    "down: tenant churn on an inert row is lost at recovery "
+                    "(schedule contract, DESIGN.md §7)"
+                )
+            targets = (
+                range(K) if getattr(ev, "machine", None) is None
+                else [int(ev.machine)]
+            )
+            if isinstance(ev, MachineFail):
+                for i in targets:
+                    fleet.fail_machine(i)
+                    sims[i].fail()
+            elif isinstance(ev, MachineRecover):
+                for i in targets:
+                    fleet.recover_machine(i)
+                    sims[i].recover()
+            elif hasattr(ev, "machine"):
+                for i in targets:
+                    ev.apply(sims[i])
+            else:
+                for sim in sims:
+                    ev.apply(sim)
+            fired.add(id(ev))
+
+    partial = False
+    while True:
+        if cur >= scenario.n_epochs:
+            join_pending()
+            tiers, _ = sync_placement()
+            if not flush_checked(tiers):
+                continue
+            break
         evs = scenario.events_at(cur)
         if evs:
             # events read and mutate placement: the in-flight chunk must be
             # recorded against the PRE-event placement first
-            tiers, _ = fleet.stacked_placement()
-            flush(tiers)
-            for ev in evs:
-                for sim in sims:
-                    ev.apply(sim)
+            join_pending()
+            tiers, _ = sync_placement()
+            if not flush_checked(tiers):
+                continue
+            fire_events(evs)
             arrays = None  # tenant sets / probs may have changed
         horizon = min(b for b in boundaries if b > cur)
         k = min(policy_chunk, horizon - cur)
         # chunk-entry placement: one stacked transfer; blocks until the
         # previous chunk's device work is done (the pipeline sync point)
-        tiers, _ = fleet.stacked_placement()
+        join_pending()
+        tiers, _ = sync_placement()
         if arrays is None:
-            arrays = [sim._arrays() for sim in sims]
-        preps = [
-            sim._chunk_prepare(arrays=arr, tier=tiers[i])
-            for i, (sim, arr) in enumerate(zip(sims, arrays))
-        ]
+            arrays = [None if sim.failed else sim._arrays() for sim in sims]
+        preps = []
+        for i, sim in enumerate(sims):
+            if sim.failed:
+                # down machine: no accesses drawn (its PRNG stream freezes
+                # with the parked state), its inert fleet row ticks on zeros
+                preps.append((np.zeros(num_pages, np.int64), None))
+            else:
+                preps.append(sim._chunk_prepare(arrays=arrays[i], tier=tiers[i]))
         counts = np.stack([c for c, _ctx in preps])
-        handle = fleet.run_epochs_async(k, counts=counts, trim_stats=trim_stats)
+        handle = supervisor.dispatch(k, counts=counts, trim_stats=trim_stats)
         # the previous chunk's end placement IS this chunk's entry: record
         # it now, overlapped with this chunk's device execution
-        flush(tiers)
-        pending = (handle, k, [ctx for _c, ctx in preps])
-        if not pipeline:
-            end_tiers, _ = fleet.stacked_placement()
-            flush(end_tiers)
+        if not flush_checked(tiers):
+            continue
+        pending = (handle, k, [ctx for _c, ctx in preps], counts)
+        if not pipeline or supervisor.degraded:
+            join_pending()
+            end_tiers, _ = sync_placement()
+            if not flush_checked(end_tiers):
+                continue
         cur += k
-
-    tiers, _ = fleet.stacked_placement()
-    flush(tiers)
+        if (
+            ckpt is not None and checkpoint_every is not None
+            and cur - last_ckpt >= checkpoint_every
+        ):
+            # checkpoint only fully-flushed states: join + record the chunk
+            # that just ran, then save. The extra flush here consumes the
+            # same placement/telemetry values the next iteration would —
+            # recorded histories are unchanged by checkpointing (tested).
+            join_pending()
+            t2, _ = sync_placement()
+            if not flush_checked(t2):
+                continue
+            ckpt.save(cur, fleet, sims)
+            last_ckpt = cur
+            if stop_after is not None and cur >= stop_after and cur < scenario.n_epochs:
+                partial = True  # simulated kill right after the save
+                break
 
     results = {
         p.name: _collect_phases(sim, scenario, 0)
@@ -516,5 +934,6 @@ def run_sweep(
     }
     return SweepResult(
         sweep=sweep, results=results, wall_s=_time.time() - t0,
-        devices=fleet.num_shards, pipeline=pipeline,
+        devices=fleet.num_shards, pipeline=pipeline and not supervisor.degraded,
+        partial=partial, fallbacks=supervisor.fallbacks, restores=restores,
     )

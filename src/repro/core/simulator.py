@@ -63,6 +63,26 @@ class WorkloadSpec:
     sets: Tuple[Tuple[float, float], ...] = ()
     value_bytes: int = 64  # per-op payload (16 KB for the KVS workload)
 
+    def __post_init__(self):
+        # Reject NaN/negative/degenerate workload parameters at construction
+        # (DESIGN.md §7): a poisoned spec must fail loudly HERE, not as a
+        # silent NaN deep inside the cost-model fixed point.
+        if not (isinstance(self.n_pages, (int, np.integer)) and self.n_pages > 0):
+            raise ValueError(f"{self.name}: n_pages must be a positive int, got {self.n_pages!r}")
+        if not (np.isfinite(self.t_miss) and 0.0 < self.t_miss <= 1.0):
+            raise ValueError(f"{self.name}: t_miss must be finite in (0, 1], got {self.t_miss!r}")
+        if not (isinstance(self.threads, (int, np.integer)) and self.threads >= 1):
+            raise ValueError(f"{self.name}: threads must be an int >= 1, got {self.threads!r}")
+        for i, (fp, fa) in enumerate(self.sets):
+            if not (np.isfinite(fp) and 0.0 <= fp <= 1.0 and np.isfinite(fa) and 0.0 <= fa <= 1.0):
+                raise ValueError(
+                    f"{self.name}: sets[{i}] fractions must be finite in [0, 1], got {(fp, fa)!r}"
+                )
+        if not (isinstance(self.value_bytes, (int, np.integer)) and self.value_bytes > 0):
+            raise ValueError(
+                f"{self.name}: value_bytes must be a positive int, got {self.value_bytes!r}"
+            )
+
 
 class TenantSim:
     def __init__(self, spec: WorkloadSpec, page_ids: np.ndarray, rng: np.random.Generator):
@@ -182,6 +202,9 @@ class ColocationSim:
         self.access_noise = access_noise
         self.policy_chunk = policy_chunk
         self._stall_epochs = 0.0
+        # machine failure (scenario MachineFail): a failed sim is frozen —
+        # no accesses, no policy ticks; epochs are recorded as down-time
+        self.failed = False
 
     # ----------------------------------------------------------- lifecycle
     def add_tenant(self, spec: WorkloadSpec) -> TenantSim:
@@ -196,6 +219,43 @@ class ColocationSim:
         h = self.handles.pop(name)
         self.backend.unregister(h)
         del self.tenants[name]
+
+    def fail(self):
+        """Machine failure: freeze the backend (scenario ``MachineFail``).
+        Nothing mutates while down; :meth:`_record_down` fills the history
+        with zero-throughput epochs so the down window is visible in every
+        figure. Idempotence is rejected — failing a failed machine is a
+        schedule bug."""
+        if self.failed:
+            raise ValueError("machine is already failed")
+        self.failed = True
+
+    def recover(self):
+        """Machine recovery (scenario ``MachineRecover``): the backend
+        resumes exactly where the failure froze it."""
+        if not self.failed:
+            raise ValueError("machine is not failed")
+        self.failed = False
+
+    def _record_down(self, k: int = 1) -> List[EpochRecord]:
+        """Record ``k`` down-time epochs: zero throughput, all-miss FMMR,
+        no fast pages, no migrations. Keeps per-epoch histories aligned
+        across a fleet when one machine is failed."""
+        names = list(self.tenants)
+        zero = {nm: 0.0 for nm in names}
+        one = {nm: 1.0 for nm in names}
+        for _ in range(k):
+            self.history.append(EpochRecord(
+                epoch=len(self.history),
+                throughput=dict(zero),
+                fmmr_true=dict(one),
+                fmmr_measured=dict(one),
+                fast_pages={nm: 0 for nm in names},
+                p50=dict(zero), p90=dict(zero), p99=dict(zero),
+                migrated_pages=0, stalled=False,
+                migration_bytes=0.0, queue_depth=0,
+            ))
+        return self.history[-k:]
 
     def set_target(self, name: str, t_miss: float):
         self.backend.set_target(self.handles[name], t_miss)
@@ -457,6 +517,9 @@ class ColocationSim:
             cur = len(self.history)
             if cur in events:
                 events[cur](self)
+            if self.failed:
+                self._record_down(1)
+                continue
             chunkable = (
                 self.policy_chunk > 1
                 and self.tenants

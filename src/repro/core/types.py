@@ -48,6 +48,11 @@ class PolicyParams(NamedTuple):
     migration_bandwidth: jnp.int32 = BANDWIDTH_UNLIMITED
     # latency: epochs an entry waits in the queue before it may commit.
     migration_latency: jnp.int32 = 0
+    # Invariant sentinel (DESIGN.md §7): when > 0 the fused tick emits a
+    # violation bitmask (core/faults.py SENTINEL_*) in EpochStats.sentinel.
+    # Traced, so flipping it never retraces; compiling the checks out
+    # entirely is the static ``compile_sentinel`` knob on the entry points.
+    sentinel: jnp.int32 = 0
 
 
 class TenantState(NamedTuple):
@@ -272,3 +277,7 @@ class EpochStats(NamedTuple):
     demoted: jax.Array  # i32[T]
     cooled: jax.Array  # bool[T] cooling event fired
     queue: Optional["QueueStats"] = None  # data-plane telemetry (queue mode)
+    # Invariant-sentinel bitmask (i32[], core/faults.py SENTINEL_*); zero
+    # when green, and identically zero when params.sentinel == 0. None when
+    # the checks were compiled out (compile_sentinel=False).
+    sentinel: Optional[jax.Array] = None

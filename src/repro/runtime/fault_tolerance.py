@@ -21,6 +21,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class HostState:
@@ -133,3 +135,258 @@ class ElasticRunner:
 
 class HostFailure(RuntimeError):
     pass
+
+
+# --------------------------------------------------------------------------
+# Fleet sweep fault tolerance (DESIGN.md §7): supervision of the dispatch
+# worker and checkpoint/resume for scenario sweeps. The generic pieces above
+# (HeartbeatTracker, Checkpointer) are the substrate; these two classes wire
+# them to core.fleet.FleetManager / core.scenario.run_sweep.
+# --------------------------------------------------------------------------
+
+class DispatchSupervisor:
+    """Supervises a fleet's async dispatch worker during a sweep.
+
+    ``join`` bounds every wait on an in-flight chunk by ``timeout`` (None =
+    wait forever); a timeout or worker fault surfaces as ``DispatchError``
+    and the sweep driver recovers (``FleetManager.recover_dispatch``), calls
+    :meth:`note_fallback`, and re-runs the chunk through :meth:`dispatch` —
+    which, once degraded, runs every subsequent chunk on the serialized
+    inline path (``pipeline=False`` semantics). With a timeout set the
+    fleet's ``HeartbeatTracker`` supervision is enabled too (host 0 = the
+    worker; it beats at dispatch start and completion)."""
+
+    def __init__(self, fleet, timeout: Optional[float] = None):
+        self.fleet = fleet
+        self.timeout = timeout
+        self.degraded = False  # sticky: once fallen back, stay serialized
+        self.fallbacks = 0
+        if timeout is not None:
+            fleet.enable_supervision(timeout=timeout)
+
+    def dispatch(self, k: int, counts=None, trim_stats: bool = True):
+        return self.fleet.run_epochs_async(
+            k, counts=counts, trim_stats=trim_stats, inline=self.degraded
+        )
+
+    def join(self, handle):
+        """Bounded wait on a ``FleetPendingResult``; raises DispatchError on
+        timeout or worker fault (the caller recovers + falls back)."""
+        return handle.result(self.timeout)
+
+    def note_fallback(self) -> None:
+        self.degraded = True
+        self.fallbacks += 1
+
+
+_BIGINT_KEY = "$bigint"
+_PARAM_FLOAT_FIELDS = ("ewma_lambda", "hysteresis")
+
+
+def _sanitize_meta(obj):
+    """Make a meta tree msgpack-encodable: numpy scalars -> python, ints
+    beyond 64 bits (the PCG64 state words are 128-bit) -> tagged strings."""
+    if isinstance(obj, dict):
+        return {k: _sanitize_meta(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sanitize_meta(v) for v in obj]
+    if isinstance(obj, (bool, np.bool_)):
+        return bool(obj)
+    if isinstance(obj, (int, np.integer)):
+        v = int(obj)
+        if v > 2**63 - 1 or v < -(2**63):
+            return {_BIGINT_KEY: str(v)}
+        return v
+    if isinstance(obj, (float, np.floating)):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return [_sanitize_meta(v) for v in obj.tolist()]
+    return obj
+
+
+def _unsanitize_meta(obj):
+    if isinstance(obj, dict):
+        if set(obj) == {_BIGINT_KEY}:
+            return int(obj[_BIGINT_KEY])
+        return {k: _unsanitize_meta(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unsanitize_meta(v) for v in obj]
+    return obj
+
+
+def _params_to_meta(params) -> dict:
+    """PolicyParams -> plain dict. The params can't ride in the leaf pytree:
+    ``fair_mode`` is a static python bool, not an array leaf."""
+    out = {}
+    for f, v in params._asdict().items():
+        if f == "fair_mode":
+            out[f] = bool(v)
+        elif f in _PARAM_FLOAT_FIELDS:
+            out[f] = float(v)
+        else:
+            out[f] = int(v)
+    return out
+
+
+def _params_from_meta(meta: dict):
+    import jax.numpy as jnp
+
+    from repro.core.types import PolicyParams
+
+    kw = {}
+    for f, v in meta.items():
+        if f == "fair_mode":
+            kw[f] = bool(v)
+        elif f in _PARAM_FLOAT_FIELDS:
+            kw[f] = jnp.float32(v)
+        else:
+            kw[f] = jnp.int32(v)
+    return PolicyParams(**kw)
+
+
+def _sim_to_meta(sim) -> dict:
+    from dataclasses import asdict
+
+    tenants = []
+    for nm, t in sim.tenants.items():
+        ent = {
+            "name": nm,
+            "spec": asdict(t.spec),
+            "page_ids": np.asarray(t.page_ids).tolist(),
+            "perm": np.asarray(t._perm).tolist(),
+        }
+        if hasattr(t, "_pp_perms"):
+            ent["pp_perms"] = [np.asarray(p).tolist() for p in t._pp_perms]
+            ent["pp_side"] = int(t._pp_side)
+        tenants.append(ent)
+    return {
+        "rng": sim.rng.bit_generator.state,
+        "stall_epochs": float(sim._stall_epochs),
+        "failed": bool(sim.failed),
+        "handles": {nm: int(h) for nm, h in sim.handles.items()},
+        "tenants": tenants,
+        "history": [asdict(r) for r in sim.history],
+    }
+
+
+def _sim_from_meta(sim, meta: dict) -> None:
+    from repro.core.simulator import EpochRecord, TenantSim, WorkloadSpec
+
+    sim.rng.bit_generator.state = meta["rng"]
+    sim._stall_epochs = float(meta["stall_epochs"])
+    sim.failed = bool(meta["failed"])
+    sim.handles = {nm: int(h) for nm, h in meta["handles"].items()}
+    sim.tenants = {}
+    for ent in meta["tenants"]:
+        spec_d = dict(ent["spec"])
+        spec_d["sets"] = tuple(tuple(s) for s in spec_d.get("sets", ()))
+        spec = WorkloadSpec(**spec_d)
+        t = TenantSim.__new__(TenantSim)
+        t.spec = spec
+        t.page_ids = np.asarray(ent["page_ids"], np.int64)
+        t.rng = sim.rng
+        t._perm = np.asarray(ent["perm"], np.int64)
+        t.probs = TenantSim._build_probs(spec, len(t.page_ids))[t._perm]
+        if "pp_perms" in ent:
+            t._pp_perms = tuple(np.asarray(p, np.int64) for p in ent["pp_perms"])
+            t._pp_side = int(ent["pp_side"])
+        sim.tenants[ent["name"]] = t
+    sim.history = [EpochRecord(**r) for r in meta["history"]]
+
+
+class SweepCheckpoint:
+    """Checkpoint/resume for fleet scenario sweeps (``scenario.run_sweep``).
+
+    Everything a sweep needs to continue BIT-IDENTICALLY rides in one
+    atomic checkpoint step (checkpoint/checkpointer.py: tmp + rename):
+
+      * device pytree ``{"m<i>": PolicyState}`` — every machine's full
+        policy state (for a failed machine, the PARKED real state, so the
+        saved structure never depends on which machines happen to be down);
+      * msgpack meta — per-machine params/epoch clock/queue counters/failed
+        flags, and per-sim host state: the numpy PRNG stream (PCG64 state,
+        128-bit words as tagged strings), tenant specs + page maps +
+        scatter permutations, and the recorded epoch history.
+
+    A sweep killed at any chunk boundary and resumed from the latest step
+    replays the remaining epochs to the exact histories of an uninterrupted
+    run (locked by tests/test_chaos.py)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        self.ckpt = Checkpointer(directory, keep=keep)
+
+    def latest(self) -> Optional[int]:
+        return self.ckpt.latest_step()
+
+    def save(self, cur: int, fleet, sims) -> None:
+        device_tree = {}
+        machines_meta = []
+        for i, m in enumerate(fleet.machines):
+            failed = i in fleet._parked
+            if failed:
+                state = fleet._parked[i]
+            else:
+                m._ensure_segs()  # checkpoint a self-consistent state
+                state = m._state
+            device_tree[f"m{i}"] = state
+            machines_meta.append({
+                "params": _params_to_meta(m.params),
+                "epoch_index": int(m.epoch_index),
+                "arrival_seq": int(m._arrival_seq),
+                "queue": {
+                    "enqueued": int(m.queue_enqueued),
+                    "drained": int(m.queue_drained),
+                    "cancelled": int(m.queue_cancelled),
+                    "dropped": int(m.queue_dropped),
+                },
+                "migration_failures": int(m.migration_failures),
+                "failed": failed,
+            })
+        meta = _sanitize_meta({
+            "cur": int(cur),
+            "machines": machines_meta,
+            "sims": [_sim_to_meta(s) for s in sims],
+        })
+        self.ckpt.save(int(cur), device_tree, meta=meta, blocking=True)
+
+    def restore(self, fleet, sims, step: Optional[int] = None) -> int:
+        """Restore fleet + sims in place; returns the sweep cursor."""
+        from repro.core.types import OwnerSegments, PolicyState
+
+        K = len(fleet.machines)
+        target = {}
+        for i in range(K):
+            st = PolicyState.create(
+                fleet.num_pages, fleet.max_tenants, seed=0,
+                queue_size=fleet.queue_size,
+            )
+            target[f"m{i}"] = st._replace(segs=OwnerSegments.build(
+                np.full(fleet.num_pages, -1, np.int32), fleet.max_tenants
+            ))
+        tree, meta = self.ckpt.restore(target, step=step)
+        meta = _unsanitize_meta(meta)
+        # un-fail whatever is failed NOW; the checkpoint's flags re-park below
+        for i in list(fleet.failed_machines):
+            fleet.recover_machine(i)
+        for i, m in enumerate(fleet.machines):
+            mm = meta["machines"][i]
+            m._state = tree[f"m{i}"]
+            m._segs_owner = None  # restored segs are current by construction
+            m.params = _params_from_meta(mm["params"])
+            m.epoch_index = int(mm["epoch_index"])
+            m._arrival_seq = int(mm["arrival_seq"])
+            q = mm["queue"]
+            m.queue_enqueued = int(q["enqueued"])
+            m.queue_drained = int(q["drained"])
+            m.queue_cancelled = int(q["cancelled"])
+            m.queue_dropped = int(q["dropped"])
+            m.migration_failures = int(mm["migration_failures"])
+            m._snap = None
+        for sim, sm in zip(sims, meta["sims"]):
+            _sim_from_meta(sim, sm)
+        for i, mm in enumerate(meta["machines"]):
+            if mm["failed"]:
+                fleet.fail_machine(i)
+        return int(meta["cur"])

@@ -1,0 +1,451 @@
+"""Chaos suite (DESIGN.md §7): fault injection, invariant sentinel,
+checkpoint/resume, and dispatch-worker supervision.
+
+The load-bearing locks:
+
+  * kill-at-every-chunk-boundary resume parity — a sweep checkpointed and
+    killed at ANY boundary, then resumed, replays to the BIT-IDENTICAL
+    history of an uninterrupted run (including a kill while a machine is
+    down);
+  * fault-injected runs never violate the conservation invariants — the
+    data plane degrades (moves fail, stay in source tier) but never
+    corrupts (frame table + tier metadata stay consistent, contents
+    survive);
+  * the in-trace sentinel detects poisoned state, and detection triggers
+    restore-from-checkpoint with the post-restore history matching a clean
+    run;
+  * randomized fault schedules (hypothesis, deterministic fallback sweep
+    on clean checkouts) stay green for all four policies.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # clean checkout: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.faults import (
+    SENTINEL_NAN,
+    SENTINEL_OWNERSHIP,
+    FaultInjector,
+    SentinelError,
+    deep_validate,
+)
+from repro.core.manager import CentralManager
+from repro.core.scenario import (
+    Arrive,
+    BandwidthDegrade,
+    DataPlaneError,
+    MachineFail,
+    MachineRecover,
+    Retarget,
+    Scenario,
+    ScenarioSweep,
+    SweepPoint,
+    TelemetryCorrupt,
+    run_sweep,
+)
+from repro.core.simulator import OPTANE, ColocationSim, WorkloadSpec
+
+P, FAST, BUDGET, CHUNK = 256, 96, 16, 4
+SWEEP_KW = dict(num_pages=P, fast_capacity=FAST, migration_budget=BUDGET,
+                policy_chunk=CHUNK)
+
+
+def _scenario(events=(), n_epochs=16):
+    return Scenario(name="chaos", n_epochs=n_epochs, events=(
+        Arrive(0, WorkloadSpec("a", n_pages=80, t_miss=0.4, sets=((0.2, 0.8),))),
+        Arrive(0, WorkloadSpec("b", n_pages=100, t_miss=0.5)),
+        *events,
+    ))
+
+
+def _sweep(scn):
+    return ScenarioSweep(scenario=scn, points=(
+        SweepPoint(name="p0", seed=0), SweepPoint(name="p1", seed=1),
+    ))
+
+
+def _hist(res):
+    return {k: [r.__dict__ for r in v.history] for k, v in res.results.items()}
+
+
+def _assert_same_history(h1, h2, label=""):
+    assert h1.keys() == h2.keys()
+    for k in h1:
+        assert len(h1[k]) == len(h2[k]), (label, k)
+        for i, (a, b) in enumerate(zip(h1[k], h2[k])):
+            for f in a:
+                va, vb = a[f], b[f]
+                same = (va == vb) or (
+                    isinstance(va, float) and np.isnan(va) and np.isnan(vb)
+                )
+                assert same, (label, k, i, f, va, vb)
+
+
+# ------------------------------------------------------------- sentinel
+class TestSentinel:
+    def test_sentinel_on_matches_off_and_stays_green(self):
+        """The sentinel is observability, not behavior: identical histories
+        with the flag on, zero trips on a clean run."""
+        off = run_sweep(_sweep(_scenario()), **SWEEP_KW)
+        on = run_sweep(_sweep(_scenario()), sentinel=True, **SWEEP_KW)
+        _assert_same_history(_hist(off), _hist(on))
+        assert on.restores == 0 and on.fallbacks == 0
+
+    @pytest.mark.parametrize("kind,bit", [("tier", SENTINEL_OWNERSHIP),
+                                          ("nan", SENTINEL_NAN)])
+    def test_poisoned_telemetry_detected(self, kind, bit):
+        evt = [TelemetryCorrupt(epoch=8, kind=kind, machine=0)]
+        with pytest.raises(SentinelError) as ei:
+            run_sweep(_sweep(_scenario(evt)), sentinel=True, **SWEEP_KW)
+        assert str(bit) in str(ei.value)
+
+    def test_sentinel_triggers_restore_and_finishes_clean(self, tmp_path):
+        """Detection -> restore-from-checkpoint -> replay (the transient
+        corruption is not re-fired) -> history identical to a clean run
+        with the same chunk boundaries."""
+        evt = [TelemetryCorrupt(epoch=8, kind="tier", machine=0)]
+        res = run_sweep(_sweep(_scenario(evt)), sentinel=True,
+                        checkpoint_every=CHUNK, checkpoint_dir=str(tmp_path),
+                        **SWEEP_KW)
+        assert res.restores >= 1
+        noop = [BandwidthDegrade(epoch=8, factor=1.0, machine=1)]
+        gold = run_sweep(_sweep(_scenario(noop)), **SWEEP_KW)
+        _assert_same_history(_hist(gold), _hist(res), "restore == clean")
+
+    def test_deep_validate_green_after_faulted_run(self):
+        m = CentralManager(num_pages=128, fast_capacity=32, migration_budget=8,
+                           max_tenants=3, sample_period=1, seed=0,
+                           data_plane_elems=8)
+        h = m.register(0.2)
+        m.allocate(h, 100)
+        rng = np.random.default_rng(0)
+        m.set_fault_injector(FaultInjector(move_fail_rate=0.5, seed=1))
+        for _ in range(8):
+            c = np.zeros(128, np.int64)
+            hot = rng.choice(128, 24, replace=False)
+            c[hot] = rng.integers(20, 200, 24)
+            m.record_access(c)
+            m.run_epoch()
+        deep_validate(m)
+
+
+# -------------------------------------------------- data-plane fault model
+class TestDataPlaneFaults:
+    def _mgr(self, rate, seed, queue_size=0, bandwidth=None):
+        m = CentralManager(
+            num_pages=128, fast_capacity=32, migration_budget=16,
+            max_tenants=3, sample_period=1, exact_sampling=True, seed=3,
+            queue_size=queue_size, migration_bandwidth=bandwidth,
+            data_plane_elems=16,
+        )
+        for n_pages, t_miss in ((60, 0.1), (40, 0.8)):
+            m.allocate(m.register(t_miss), n_pages)
+        if rate > 0:
+            m.set_fault_injector(FaultInjector(move_fail_rate=rate, seed=seed))
+        return m
+
+    @pytest.mark.parametrize("queue_size,bandwidth",
+                             [(0, None), (64, 3)], ids=["instant", "queue"])
+    def test_degraded_never_corrupt(self, queue_size, bandwidth):
+        """Failed moves stay in the source tier; the frame table, free
+        lists and tier metadata remain mutually consistent after every
+        epoch of a heavily-faulted schedule."""
+        m = self._mgr(0.5, seed=7, queue_size=queue_size, bandwidth=bandwidth)
+        rng = np.random.default_rng(10)
+        for _ in range(12):
+            c = np.zeros(128, np.int64)
+            hot = rng.choice(128, 24, replace=False)
+            c[hot] = rng.integers(20, 200, 24)
+            m.record_access(c)
+            m.run_epoch()
+            m.pool.check(m.tiers())
+        fi = m.pool.fault_injector
+        assert fi.failures > 0, "fault schedule never fired"
+        assert m.migration_failures > 0
+        ctr = fi.counters()
+        assert ctr["attempts"] >= ctr["failures"] >= ctr["gave_up"]
+        assert ctr["retries"] >= ctr["gave_up"] * fi.max_retries
+
+    def test_page_contents_survive_faults(self):
+        m = self._mgr(0.4, seed=5)
+        rng = np.random.default_rng(2)
+        data = {}
+        for h in (0, 1):
+            pages = np.flatnonzero(np.asarray(m.owners()) == h)[:8]
+            rows = rng.normal(size=(len(pages), m.pool.row_elems)).astype(np.float32)
+            m.pool.write_pages(pages, rows)
+            for p, r in zip(pages, rows):
+                data[int(p)] = r
+        for _ in range(10):
+            c = np.zeros(128, np.int64)
+            hot = rng.choice(128, 24, replace=False)
+            c[hot] = rng.integers(20, 200, 24)
+            m.record_access(c)
+            m.run_epoch()
+        m.pool.check(m.tiers())
+        for p, want in data.items():
+            np.testing.assert_array_equal(m.pool.read_page(p), want, str(p))
+
+    @settings(max_examples=8, deadline=None)
+    @given(rate=st.floats(min_value=0.05, max_value=0.95),
+           seed=st.integers(min_value=0, max_value=2**16))
+    def test_random_fault_rates_never_corrupt(self, rate, seed):
+        m = self._mgr(rate, seed=seed)
+        rng = np.random.default_rng(seed)
+        for _ in range(6):
+            c = np.zeros(128, np.int64)
+            hot = rng.choice(128, 24, replace=False)
+            c[hot] = rng.integers(20, 200, 24)
+            m.record_access(c)
+            m.run_epoch()
+            m.pool.check(m.tiers())
+        deep_validate(m)
+
+    def test_zero_rate_injector_is_transparent(self):
+        """rate=0 with an injector attached == no injector at all."""
+        a, b = self._mgr(0.0, seed=0), self._mgr(0.0, seed=0)
+        a.set_fault_injector(FaultInjector(move_fail_rate=0.0, seed=9))
+        rng_a, rng_b = np.random.default_rng(4), np.random.default_rng(4)
+        for _ in range(6):
+            for m, rng in ((a, rng_a), (b, rng_b)):
+                c = np.zeros(128, np.int64)
+                hot = rng.choice(128, 24, replace=False)
+                c[hot] = rng.integers(20, 200, 24)
+                m.record_access(c)
+                m.run_epoch()
+        assert (a.tiers() == b.tiers()).all()
+        assert a.migration_failures == 0
+
+
+# --------------------------------------------------- checkpoint / resume
+class TestCheckpointResume:
+    def test_kill_at_every_chunk_boundary_resumes_bit_identically(self, tmp_path):
+        gold = _hist(run_sweep(_sweep(_scenario()), **SWEEP_KW))
+        for stop in range(CHUNK, 16, CHUNK):
+            ckdir = str(tmp_path / f"stop{stop}")
+            part = run_sweep(_sweep(_scenario()), checkpoint_every=CHUNK,
+                             checkpoint_dir=ckdir, stop_after=stop, **SWEEP_KW)
+            assert part.partial, stop
+            full = run_sweep(_sweep(_scenario()), checkpoint_every=CHUNK,
+                             checkpoint_dir=ckdir, resume=True, **SWEEP_KW)
+            assert not full.partial
+            _assert_same_history(gold, _hist(full), f"resume@{stop}")
+
+    def test_kill_while_machine_down_resumes_bit_identically(self, tmp_path):
+        """The checkpoint saves the PARKED real state of a failed machine
+        and re-parks it on restore; a kill inside the down window still
+        resumes to the uninterrupted history."""
+        evs = [MachineFail(epoch=4, machine=1), MachineRecover(epoch=12, machine=1)]
+        gold = _hist(run_sweep(_sweep(_scenario(evs)), **SWEEP_KW))
+        ckdir = str(tmp_path / "down")
+        part = run_sweep(_sweep(_scenario(evs)), checkpoint_every=CHUNK,
+                         checkpoint_dir=ckdir, stop_after=8, **SWEEP_KW)
+        assert part.partial
+        full = run_sweep(_sweep(_scenario(evs)), checkpoint_every=CHUNK,
+                         checkpoint_dir=ckdir, resume=True, **SWEEP_KW)
+        _assert_same_history(gold, _hist(full), "resume-while-down")
+
+    def test_resume_without_checkpoint_dir_rejected(self):
+        with pytest.raises(ValueError):
+            run_sweep(_sweep(_scenario()), resume=True, **SWEEP_KW)
+        with pytest.raises(ValueError):
+            run_sweep(_sweep(_scenario()), checkpoint_every=4, **SWEEP_KW)
+
+
+# ------------------------------------------------- dispatch supervision
+class TestDispatchSupervision:
+    def test_worker_fault_falls_back_inline_bit_identically(self):
+        """An injected dispatch-worker crash mid-sweep: the sweep recovers,
+        re-runs the chunk serialized with the same drawn counts, degrades
+        to pipeline=False, and the recorded history is unchanged."""
+        gold = _hist(run_sweep(_sweep(_scenario()), **SWEEP_KW))
+        seen = {}
+
+        def arm(fleet):
+            seen["fleet"] = fleet
+            fleet._chaos_fail_n = 1
+
+        res = run_sweep(_sweep(_scenario()), on_fleet=arm,
+                        dispatch_timeout=60.0, **SWEEP_KW)
+        assert res.fallbacks == 1
+        assert res.pipeline is False
+        _assert_same_history(gold, _hist(res), "fallback")
+
+    def test_result_timeout_and_recovery(self):
+        """A hung worker surfaces as DispatchError at result(timeout=), and
+        recover_dispatch + inline retry reproduces the lost chunk."""
+        from repro.core.fleet import DispatchError, FleetManager
+
+        mgrs = [CentralManager(num_pages=128, fast_capacity=32,
+                               migration_budget=8, max_tenants=3,
+                               sample_period=1, seed=s) for s in (0, 1)]
+        for m in mgrs:
+            m.allocate(m.register(0.3), 100)
+        fleet = FleetManager(mgrs)
+        counts = np.zeros((2, 128), np.int64)
+        counts[:, :24] = 50
+        clean = fleet.run_epochs(2, counts=counts)
+        fmmr_clean = np.asarray(clean.stats.fmmr_now)
+
+        mgrs2 = [CentralManager(num_pages=128, fast_capacity=32,
+                                migration_budget=8, max_tenants=3,
+                                sample_period=1, seed=s) for s in (0, 1)]
+        for m in mgrs2:
+            m.allocate(m.register(0.3), 100)
+        fleet2 = FleetManager(mgrs2)
+        fleet2._chaos_delay_s = 30.0
+        handle = fleet2.run_epochs_async(2, counts=counts)
+        with pytest.raises(DispatchError):
+            handle.result(timeout=0.05)
+        fleet2.recover_dispatch()
+        res = fleet2.run_epochs_async(2, counts=counts, inline=True).result()
+        np.testing.assert_array_equal(np.asarray(res.stats.fmmr_now), fmmr_clean)
+
+    def test_heartbeat_detects_silent_worker(self):
+        from repro.runtime.fault_tolerance import HeartbeatTracker
+
+        now = [0.0]
+        hb = HeartbeatTracker([0], timeout=5.0, clock=lambda: now[0])
+        hb.beat(0)
+        now[0] = 3.0
+        assert hb.check() == []
+        now[0] = 9.0
+        assert hb.check() == [0]
+        hb.beat(0)  # liveness latches: a late beat does not resurrect
+        assert hb.alive_hosts() == []
+
+
+# -------------------------------------------------- machine fail/recover
+class TestMachineFailures:
+    def test_fail_recover_window_and_isolation(self):
+        evs = [MachineFail(epoch=4, machine=1), MachineRecover(epoch=8, machine=1)]
+        res = run_sweep(_sweep(_scenario(evs)), sentinel=True, **SWEEP_KW)
+        h = _hist(res)
+        for r in h["p1"][4:8]:
+            assert sum(r["throughput"].values()) == 0.0
+            assert r["migrated_pages"] == 0
+        for r in h["p1"][8:]:
+            assert sum(r["throughput"].values()) > 0.0
+        # machine 0 bit-identical to the same schedule with machine-1
+        # failures replaced by no-ops at the SAME epochs (chunk boundaries
+        # derive from event epochs, so they must match for draw parity)
+        noop = [BandwidthDegrade(epoch=4, factor=1.0, machine=1),
+                BandwidthDegrade(epoch=8, factor=1.0, machine=1)]
+        ref = run_sweep(_sweep(_scenario(noop)), **SWEEP_KW)
+        _assert_same_history({"p0": h["p0"]}, {"p0": _hist(ref)["p0"]}, "isolation")
+
+    def test_tenant_churn_while_down_rejected(self):
+        evs = [MachineFail(epoch=4, machine=1),
+               Arrive(6, WorkloadSpec("c", n_pages=10, t_miss=0.5)),
+               MachineRecover(epoch=8, machine=1)]
+        with pytest.raises(ValueError, match="schedule contract"):
+            run_sweep(_sweep(_scenario(evs)), **SWEEP_KW)
+
+    def test_machine_target_out_of_range_rejected(self):
+        with pytest.raises(ValueError, match="targets machine"):
+            run_sweep(_sweep(_scenario([MachineFail(epoch=4, machine=9)])),
+                      **SWEEP_KW)
+
+
+# --------------------------------------------------- input validation
+class TestValidation:
+    def test_workload_spec_rejects_bad_values(self):
+        with pytest.raises(ValueError, match="t_miss"):
+            WorkloadSpec("x", n_pages=10, t_miss=float("nan"))
+        with pytest.raises(ValueError, match="n_pages"):
+            WorkloadSpec("x", n_pages=-4, t_miss=0.5)
+        with pytest.raises(ValueError, match="sets"):
+            WorkloadSpec("x", n_pages=10, t_miss=0.5, sets=((float("nan"), 0.5),))
+
+    def test_events_validate_at_scenario_construction(self):
+        with pytest.raises(ValueError, match="t_miss"):
+            _scenario([Retarget(epoch=4, name="a", t_miss=float("nan"))])
+        with pytest.raises(ValueError, match="factor"):
+            _scenario([BandwidthDegrade(epoch=4, factor=-0.5)])
+        with pytest.raises(ValueError, match="rate"):
+            _scenario([DataPlaneError(epoch=4, rate=1.5)])
+        with pytest.raises(ValueError, match="kind"):
+            _scenario([TelemetryCorrupt(epoch=4, kind="bogus")])
+
+
+# ------------------------------------ randomized schedules, four policies
+def _serial_backends(seed):
+    from repro.core.baselines import AutoNUMALike, HeMemStatic, TwoLM
+
+    fast = P // 4
+    return {
+        "maxmem": lambda: CentralManager(
+            num_pages=P, fast_capacity=fast, migration_budget=BUDGET,
+            max_tenants=8, sample_period=100, seed=seed),
+        "hemem": lambda: HeMemStatic(
+            P, fast, partitions={0: fast // 2, 1: fast // 2}, hot_threshold=8,
+            migration_budget=BUDGET, seed=seed),
+        "autonuma": lambda: AutoNUMALike(P, fast, seed=seed),
+        "twolm": lambda: TwoLM(P, fast, seed=seed),
+    }
+
+
+class TestRandomizedChaosSchedules:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=1000),
+           fail_at=st.integers(min_value=2, max_value=6),
+           down_for=st.integers(min_value=1, max_value=4),
+           factor=st.floats(min_value=0.25, max_value=1.0))
+    def test_all_four_policies_survive_random_schedules(
+            self, seed, fail_at, down_for, factor):
+        """Randomized fail/recover + bandwidth-degrade schedules on the
+        serial scenario path: every policy completes, the down window
+        records zero throughput, no telemetry NaNs, and fast-tier
+        occupancy never exceeds capacity (the sentinel's conservation
+        invariant, checked host-side for the non-traced baselines)."""
+        n_epochs = 12
+        recover_at = min(fail_at + down_for, n_epochs - 2)
+        sc = Scenario(name="rand_chaos", n_epochs=n_epochs, events=(
+            Arrive(0, WorkloadSpec("a", n_pages=P // 2, t_miss=0.4,
+                                   sets=((0.2, 0.8),))),
+            Arrive(0, WorkloadSpec("b", n_pages=P // 4, t_miss=0.6)),
+            MachineFail(epoch=fail_at),
+            BandwidthDegrade(epoch=max(1, fail_at - 1), factor=factor),
+            MachineRecover(epoch=recover_at),
+        ))
+        fast = P // 4
+        for name, mk in _serial_backends(seed % 7).items():
+            backend = mk()
+            sim = ColocationSim(backend, OPTANE, seed=seed)
+            res = sim.run_scenario(sc)
+            assert len(res.history) == n_epochs, name
+            for r in res.history[fail_at:recover_at]:
+                assert sum(r.throughput.values()) == 0.0, name
+            for r in res.history:
+                vals = [*r.throughput.values(), *r.fmmr_true.values(),
+                        *r.p99.values()]
+                assert np.isfinite(vals).all(), (name, r.epoch)
+                assert sum(r.fast_pages.values()) <= fast, (name, r.epoch)
+            if name == "maxmem":
+                deep_validate(backend)
+
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=1000),
+           fail_at=st.integers(min_value=2, max_value=8),
+           factor=st.floats(min_value=0.25, max_value=0.9))
+    def test_fleet_sweep_sentinel_green_under_random_faults(
+            self, seed, fail_at, factor):
+        """Randomized fault schedules through the FLEET path with the
+        in-trace sentinel armed: no trips, clean completion."""
+        fail_at = 2 * (fail_at // 2) or 2  # chunk-aligned-ish, any is legal
+        evs = [MachineFail(epoch=fail_at, machine=1),
+               BandwidthDegrade(epoch=fail_at, factor=factor),
+               MachineRecover(epoch=min(fail_at + 4, 14), machine=1)]
+        scn = _scenario(evs, n_epochs=16)
+        sweep = ScenarioSweep(scenario=scn, points=(
+            SweepPoint(name="p0", seed=seed % 11),
+            SweepPoint(name="p1", seed=(seed + 1) % 11),
+        ))
+        res = run_sweep(sweep, sentinel=True, **SWEEP_KW)
+        assert res.restores == 0
+        for recs in _hist(res).values():
+            assert len(recs) == 16
