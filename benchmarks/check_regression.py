@@ -1,9 +1,10 @@
 """CI perf-regression gate (the ``perf-gate`` job in ci.yml).
 
-Re-measures the policy-engine microbench, the ``--smoke`` scenario suite and
-a smoke-scale fleet engine/sweep run on the current checkout, then compares
-against the committed ``BENCH_policy.json`` / ``BENCH_scenarios.json`` /
-``BENCH_fleet.json``:
+Re-measures the policy-engine microbench, the ``--smoke`` scenario suite, a
+smoke-scale fleet engine/sweep run and the smoke serving-colocation legs on
+the current checkout, then compares against the committed
+``BENCH_policy.json`` / ``BENCH_scenarios.json`` / ``BENCH_fleet.json`` /
+``BENCH_serving.json``:
 
   * per-metric slowdown beyond the tolerance band (default 25%, override
     with ``--tolerance`` or ``PERF_GATE_TOL``) fails the gate — the gated
@@ -22,6 +23,10 @@ against the committed ``BENCH_policy.json`` / ``BENCH_scenarios.json`` /
   * the finite-bandwidth thrash scenario must complete on all four
     policies, and the smoke fleet sweep must complete on every machine
     with the sharded-executor overlap metadata (devices/pipeline) present;
+  * the committed serving payload must carry a PASSING LS-p99 claim row
+    (MaxMem <= static AND <= fixed partition, with migrated pages > 0),
+    and the fresh smoke serving legs must all complete with the maxmem leg
+    migrating and both baselines frozen (see :func:`check_serving`);
   * the invariant sentinel with its traced flag OFF must cost within
     ``PERF_GATE_SENTINEL_TOL`` (default 3%) of a program with the sentinel
     compiled out — fresh-only, same-host (see :func:`check_sentinel_band`),
@@ -46,6 +51,7 @@ BENCH_FILES = {
     "policy": "BENCH_policy.json",
     "scenarios": "BENCH_scenarios.json",
     "fleet": "BENCH_fleet.json",
+    "serving": "BENCH_serving.json",
 }
 
 # (payload key, json path) -> gated metric; all are lower-is-better
@@ -60,6 +66,13 @@ GATED_METRICS = (
     ("fleet", ("engine_smoke", "fleet", "per_machine_epoch_us")),
     ("fleet", ("engine_smoke", "fleet_sharded", "per_machine_epoch_us")),
     ("fleet", ("engine_smoke", "serial_scan", "per_machine_epoch_us")),
+    # real-engine serving decode: mean wall time per step, per placement
+    # leg (committed full run vs fresh smoke run — same engine config,
+    # only n_steps differs, so per-step cost is comparable and the
+    # per-payload host factor absorbs the residual warmup skew)
+    ("serving", ("legs", "maxmem", "_engine", "step_us")),
+    ("serving", ("legs", "static", "_engine", "step_us")),
+    ("serving", ("legs", "fixed", "_engine", "step_us")),
 )
 
 
@@ -232,6 +245,60 @@ def check_fleet(committed_fleet: dict, fresh_fleet: dict) -> list:
     return rows
 
 
+def check_serving(committed_serving: dict, fresh_serving: dict) -> list:
+    """Serving colocation claim rows (DESIGN.md §8).
+
+    The committed payload must carry a PASSING claim: MaxMem's LS p99 step
+    latency <= the static no-migration baseline AND <= the fixed HeMem-style
+    KV partition, with migrated_pages > 0 and both baselines frozen (zero
+    migrations) — a payload whose claim row fails or went missing means the
+    headline serving result no longer holds and must fail the gate.
+
+    The fresh smoke leg re-runs the three placements on the gate host and
+    checks MECHANISM, not margins (latency orderings on a 60-step smoke run
+    are noise-prone): every leg completes requests for both tenants, the
+    maxmem leg actually migrates KV pages, and the frozen baselines move
+    zero — a serving stack that silently stopped migrating (or started
+    migrating in the static leg) must not pass."""
+    rows = []
+    claim = committed_serving.get("claim")
+    rows.append({
+        "check": "committed:serving_claim_ls_p99",
+        "status": ("missing" if claim is None
+                   else ("ok" if claim.get("pass") else "fail")),
+        "ls_p99_us": (claim or {}).get("ls_p99_us"),
+        "migrated_pages": (claim or {}).get("migrated_pages"),
+    })
+    from benchmarks.serving_colocation import TENANTS
+
+    legs = fresh_serving.get("legs", {})
+    completed = {
+        m: sum(leg.get(t.name, {}).get("completed", 0) for t in TENANTS)
+        for m, leg in legs.items()
+    }
+    all_legs = set(completed) == {"maxmem", "static", "fixed"}
+    rows.append({
+        "check": "fresh_smoke:serving_all_legs_complete",
+        "status": "ok" if all_legs and all(
+            n > 0 for n in completed.values()
+        ) else "fail",
+        "completed": completed,
+    })
+    migrated = {
+        m: leg.get("_engine", {}).get("migrated_pages") for m, leg in legs.items()
+    }
+    rows.append({
+        "check": "fresh_smoke:serving_maxmem_migrates_baselines_frozen",
+        "status": "ok" if (
+            (migrated.get("maxmem") or 0) > 0
+            and migrated.get("static") == 0
+            and migrated.get("fixed") == 0
+        ) else "fail",
+        "migrated_pages": migrated,
+    })
+    return rows
+
+
 def check_sentinel_band(fresh_policy: dict, tol: float) -> list:
     """Sentinel-off overhead band (DESIGN.md §7), fresh-only: the
     production policy program compiles the invariant sentinel gated by a
@@ -288,7 +355,7 @@ def main(argv=None) -> int:
     ]
     committed = {k: v or {} for k, v in committed.items()}
 
-    from benchmarks import dynamic_workload, microbench
+    from benchmarks import dynamic_workload, microbench, serving_colocation
 
     fresh = {
         "policy": microbench.policy_bench(),
@@ -302,6 +369,7 @@ def main(argv=None) -> int:
             # scenarios job's --sweep --smoke run)
             "sweep_smoke": dynamic_workload.sweep_fleet_smoke(),
         },
+        "serving": serving_colocation.serving_bench(smoke=True),
     }
 
     diff = {
@@ -314,6 +382,7 @@ def main(argv=None) -> int:
         "ordering": check_ordering(fresh["scenarios"], "fresh_smoke")
         + check_ordering(committed["scenarios"], "committed")
         + check_fleet(committed["fleet"], fresh["fleet"])
+        + check_serving(committed["serving"], fresh["serving"])
         + check_sentinel_band(fresh["policy"], args.sentinel_tolerance),
     }
     # a metric or file absent on either side means the gate is no longer

@@ -19,8 +19,12 @@ all four policies: per-phase throughput/p99 curves, the paper's qualitative
 ordering check, and the vectorized-vs-seed baseline epoch timings) and
 ``BENCH_fleet.json`` (the fleet-vectorized sweep engine: one vmapped
 K-machine scan vs the serial per-machine drivers, engine-level and full
-ScenarioSweep) so the perf trajectory is tracked across PRs. All payloads
-carry a ``platform`` stamp for cross-host normalization in the perf gate.
+ScenarioSweep) and ``BENCH_serving.json`` (multi-tenant open-loop serving
+colocation on the REAL engine: per-tenant p50/p99 step latency, throughput
+and migrated bytes under maxmem vs static vs fixed-partition placement,
+plus the gated LS-p99 claim row) so the perf trajectory is tracked across
+PRs. All payloads carry a ``platform`` stamp for cross-host normalization
+in the perf gate.
 """
 import json
 import sys
@@ -66,6 +70,17 @@ def write_fleet_json(path: str = "BENCH_fleet.json", smoke: bool = False) -> Non
     print(f"wrote {path}")
 
 
+def write_serving_json(path: str = "BENCH_serving.json", smoke: bool = False) -> None:
+    """Multi-tenant serving colocation payload: the three placement legs
+    (maxmem / static / fixed) on the real engine plus the gated LS-p99
+    claim row (see benchmarks/serving_colocation.py)."""
+    from benchmarks import serving_colocation
+
+    with open(path, "w") as f:
+        json.dump(serving_colocation.serving_bench(smoke=smoke), f, indent=2)
+    print(f"wrote {path}")
+
+
 def main() -> None:
     from benchmarks import (
         dynamic_workload,
@@ -76,6 +91,7 @@ def main() -> None:
         microbench,
         param_sensitivity,
         roofline,
+        serving_colocation,
     )
 
     sections = [
@@ -85,6 +101,7 @@ def main() -> None:
         ("fig8", dynamic_workload),
         ("fig9_10", param_sensitivity),
         ("engine_qos", engine_qos),
+        ("serving_colo", serving_colocation),
         ("roofline", roofline),
         ("micro", microbench),
     ]
@@ -114,6 +131,11 @@ def main() -> None:
     except Exception as e:
         failures += 1
         print(f"section_fleet_json_FAILED,0,{e!r}")
+    try:
+        write_serving_json()
+    except Exception as e:
+        failures += 1
+        print(f"section_serving_json_FAILED,0,{e!r}")
     if failures:
         sys.exit(1)
 

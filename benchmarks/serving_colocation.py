@@ -1,0 +1,203 @@
+"""Multi-tenant serving colocation on the REAL engine (DESIGN.md §8).
+
+The paper's Fig. 5-7 colocation claim, re-staged on the actual serving
+stack instead of the simulator: an LS tenant (tight ``t_miss``) decodes
+through the tiered paged KV cache next to a BE co-runner (``t_miss`` ~ 1.0)
+that floods the machine, under THREE placements driven by the SAME
+open-loop Poisson arrival stream (same seed -> same request sequence;
+placement policy is the only difference):
+
+  maxmem — queue-mode bounded-bandwidth FMMR control: epoch selections
+           enqueue, drained batches commit KV-block moves
+           (commit-on-completion) through the Pallas ``page_move`` kernel
+  static — the same traced program with ``migration_bandwidth=0``:
+           first-touch placement frozen forever (no-migration baseline)
+  fixed  — HeMem-style per-tenant fast partition: each tenant gets a fixed
+           fast-page quota at allocation, no migration
+
+All three legs share one ``epoch_step`` trace (identical ``num_pages`` /
+``max_tenants`` / ``queue_size`` / ``plan_size``; only traced
+``PolicyParams`` differ) — sweeping the legs does not retrace.
+
+Claim row (gated in ``check_regression.py``): MaxMem's LS p99 step latency
+is <= the static no-migration baseline AND <= the fixed KV partition,
+with ``migrated_pages > 0`` (the win must come from actual migration, not
+from a degenerate no-op run).
+
+Writes ``BENCH_serving.json`` via ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+
+from benchmarks.common import Rows, platform_metadata
+from repro.configs import get_config
+from repro.kvcache.paged import TieredPagedKV
+from repro.models.model import get_model
+from repro.serving.baselines import make_serving_manager
+from repro.serving.driver import OpenLoopDriver, TenantSpec
+from repro.serving.engine import ServingEngine
+
+_STATE: dict = {}
+
+# one smoke-scale machine: 16 fast + 80 slow KV pages (fast tier fits ~1/6
+# of the working set, like the paper's 128 GB DRAM under a 896 GB footprint)
+FAST_PAGES = 16
+SLOW_PAGES = 80
+PAGE_TOKENS = 4
+MAX_BATCH = 4
+PAGES_PER_SEQ = 8
+EPOCH_STEPS = 2
+QUEUE_SIZE = 32
+BANDWIDTH = 8  # drained pages per epoch (bounded-bandwidth data plane)
+# TPP-style fast-page reserve (maxmem leg only): the policy stops refilling
+# the last ALLOC_HEADROOM fast pages, so an LS burst's first-touch
+# allocation lands fast instead of eating a whole slow-resident epoch —
+# that epoch is exactly what dominated the LS p99 tail without it
+ALLOC_HEADROOM = 6
+
+# the LS tenant's per-request working set (3 prompt + 4 decode pages = 7,
+# two lanes often live at once) OVERFLOWS its fixed quota (8 fast pages):
+# the partition can neither borrow idle fast pages from the BE co-runner
+# nor follow the hot set — exactly the regime where the paper's occupancy
+# control wins. The BE flood also churns through static's recycled fast
+# pages, so first-touch placement cannot stay lucky for the LS tenant.
+TENANTS = (
+    TenantSpec("ls", t_miss=0.1, arrival_rate=0.10,
+               prompt_tokens=12, max_new_tokens=16),
+    TenantSpec("be", t_miss=1.0, arrival_rate=0.15,
+               prompt_tokens=16, max_new_tokens=24),
+)
+
+MODES = ("maxmem", "static", "fixed")
+
+
+def _setup():
+    if "setup" not in _STATE:
+        cfg = get_config("yi-6b").smoke()
+        api = get_model(cfg)
+        _STATE["setup"] = (cfg, api.init(jax.random.PRNGKey(0)))
+    return _STATE["setup"]
+
+
+def _engine(cfg, params, mode: str) -> ServingEngine:
+    manager = make_serving_manager(
+        mode,
+        num_pages=FAST_PAGES + SLOW_PAGES,
+        fast_capacity=FAST_PAGES,
+        migration_budget=BANDWIDTH,
+        queue_size=QUEUE_SIZE,
+        migration_bandwidth=BANDWIDTH,
+        # split the fast tier evenly between the tenants (the
+        # provisioned-for-peak deployment the paper argues against)
+        fast_quota={"ls": FAST_PAGES // 2, "be": FAST_PAGES // 2},
+        alloc_headroom=ALLOC_HEADROOM,
+        max_tenants=4,
+    )
+    kv = TieredPagedKV(cfg, FAST_PAGES, SLOW_PAGES, page_tokens=PAGE_TOKENS)
+    return ServingEngine(
+        cfg, params, manager, kv,
+        max_batch=MAX_BATCH, pages_per_seq=PAGES_PER_SEQ,
+        quest_pages=2, epoch_steps=EPOCH_STEPS,
+    )
+
+
+# untimed leading steps: long enough to hit every compile path (prefill,
+# decode, epoch tick, queue drain + page_move) so ``step_us`` is a
+# steady-state number — otherwise smoke (60-step) and full (160-step) runs
+# amortize one-off JIT cost differently and the perf gate's committed-vs-
+# fresh ratio measures compile time, not the engine
+WARMUP_STEPS = 24
+
+
+def _leg(cfg, params, mode: str, n_steps: int, seed: int) -> Dict[str, dict]:
+    eng = _engine(cfg, params, mode)
+    driver = OpenLoopDriver(eng, TENANTS, seed=seed)
+    driver.run(WARMUP_STEPS)
+    t0 = time.time()
+    rep = driver.run(n_steps)
+    wall = time.time() - t0
+    rep["_engine"]["wall_s"] = round(wall, 3)
+    rep["_engine"]["step_us"] = round(wall / n_steps * 1e6, 1)
+    return rep
+
+
+def serving_bench(smoke: bool = False, seed: int = 7) -> dict:
+    cfg, params = _setup()
+    n_steps = 60 if smoke else 160
+    legs = {m: _leg(cfg, params, m, n_steps, seed) for m in MODES}
+
+    def _p99(mode: str) -> float:
+        return legs[mode]["ls"]["latency"].get("p99", float("inf")) * 1e6
+
+    ls_p99 = {m: round(_p99(m), 2) for m in MODES}
+    migrated = legs["maxmem"]["_engine"]["migrated_pages"]
+    frozen = all(
+        legs[m]["_engine"]["migrated_pages"] == 0 for m in ("static", "fixed")
+    )
+    claim = {
+        "ls_p99_us": ls_p99,
+        "maxmem_leq_static": ls_p99["maxmem"] <= ls_p99["static"],
+        "maxmem_leq_fixed": ls_p99["maxmem"] <= ls_p99["fixed"],
+        "migrated_pages": migrated,
+        "baselines_frozen": frozen,
+        "pass": (
+            ls_p99["maxmem"] <= ls_p99["static"]
+            and ls_p99["maxmem"] <= ls_p99["fixed"]
+            and migrated > 0
+            and frozen
+        ),
+    }
+    return {
+        "platform": platform_metadata(),
+        "config": {
+            "model": cfg.name,
+            "fast_pages": FAST_PAGES,
+            "slow_pages": SLOW_PAGES,
+            "page_tokens": PAGE_TOKENS,
+            "max_batch": MAX_BATCH,
+            "epoch_steps": EPOCH_STEPS,
+            "queue_size": QUEUE_SIZE,
+            "migration_bandwidth": BANDWIDTH,
+            "alloc_headroom": ALLOC_HEADROOM,
+            "n_steps": n_steps,
+            "warmup_steps": WARMUP_STEPS,
+            "smoke": smoke,
+            "seed": seed,
+            "tenants": [t.__dict__ for t in TENANTS],
+        },
+        "legs": legs,
+        "claim": claim,
+    }
+
+
+def run() -> Rows:
+    """CSV rows for the ``benchmarks/run.py`` harness."""
+    rows = Rows()
+    payload = serving_bench(smoke=True)
+    for mode in MODES:
+        leg = payload["legs"][mode]
+        ls = leg["ls"]["latency"]
+        rows.add(
+            f"serving_colo_{mode}_ls",
+            ls.get("mean", 0) * 1e6,
+            f"p50us={ls.get('p50', 0) * 1e6:.1f};"
+            f"p99us={ls.get('p99', 0) * 1e6:.1f};"
+            f"migrated={leg['_engine']['migrated_pages']};"
+            f"blocked={leg['_engine']['admission_blocked']}",
+        )
+    c = payload["claim"]
+    rows.add(
+        "serving_colo_claim_ls_p99", 0.0,
+        f"maxmem<=static={c['maxmem_leq_static']};"
+        f"maxmem<=fixed={c['maxmem_leq_fixed']};"
+        f"migrated={c['migrated_pages']};pass={c['pass']}",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run().print()

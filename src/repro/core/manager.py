@@ -144,6 +144,7 @@ class CentralManager:
         migration_latency: int = 0,
         data_plane_elems: Optional[int] = None,
         sentinel: bool = False,
+        alloc_headroom: int = 0,
     ):
         """``queue_size > 0`` enables the asynchronous migration data plane
         (DESIGN.md §4): selections are queued and committed by a bounded
@@ -158,7 +159,10 @@ class CentralManager:
         (DESIGN.md §7): each epoch's stats carry a violation bitmask
         (``EpochStats.sentinel``, core/faults.py SENTINEL_*). The flag is a
         traced parameter — toggling it via :meth:`set_sentinel` never
-        retraces."""
+        retraces. ``alloc_headroom`` reserves that many fast pages the
+        policy never promotes into, so first-touch allocations of new pages
+        can land fast (TPP-style allocation reserve, DESIGN.md §8); also
+        traced."""
         assert fast_capacity <= num_pages
         if migration_bandwidth is not None and queue_size == 0:
             raise ValueError(
@@ -187,6 +191,7 @@ class CentralManager:
             ),
             migration_latency=jnp.int32(migration_latency),
             sentinel=jnp.int32(1 if sentinel else 0),
+            alloc_headroom=jnp.int32(alloc_headroom),
         )
         self.plan_size = int(migration_budget)
         self.queue_size = int(queue_size)

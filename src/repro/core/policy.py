@@ -413,7 +413,15 @@ def _epoch_core(
         )
 
     # ---- 3. proportional reallocation (budget R/2) ---------------------------
-    free_fast = params.fast_capacity - fast_hold.sum()
+    # alloc_headroom fast pages are reserved for first-touch allocation
+    # (DESIGN.md §8): the policy never promotes into them, so a new page's
+    # allocation can land fast instead of waiting an epoch for promotion.
+    # Allocations may transiently consume the reserve (holdings then exceed
+    # the promotion ceiling) — clamp at zero rather than forcing net
+    # demotions; request churn regenerates the headroom on free.
+    free_fast = jnp.maximum(
+        params.fast_capacity - params.alloc_headroom - fast_hold.sum(), 0
+    )
     realloc_budget = params.migration_budget // 2
     ra = fmmr.reallocate(
         tenants, fast_hold, free_fast, realloc_budget,
@@ -654,7 +662,10 @@ def _queue_tick(
     drain_d = is_d & (jnp.cumsum(is_d) <= bw)
     n_d = drain_d.sum()
     fast_occ = (pages.tier == TIER_FAST).sum()
-    room = params.fast_capacity - (fast_occ - n_d)
+    # drained promotions respect the allocation reserve too: a promotion
+    # selected before an allocation burst must not retake the headroom the
+    # burst just consumed (it stays queued until room reappears)
+    room = params.fast_capacity - params.alloc_headroom - (fast_occ - n_d)
     drain_p = is_p & (jnp.cumsum(is_p) <= jnp.minimum(bw - n_d, room))
     n_p = drain_p.sum()
 

@@ -53,6 +53,14 @@ class PolicyParams(NamedTuple):
     # Traced, so flipping it never retraces; compiling the checks out
     # entirely is the static ``compile_sentinel`` knob on the entry points.
     sentinel: jnp.int32 = 0
+    # Allocation headroom (DESIGN.md §8, TPP-style): fast pages the policy
+    # leaves unfilled so first-touch allocations of NEW pages can land fast
+    # instead of waiting an epoch for promotion. The policy treats
+    # ``fast_capacity - alloc_headroom`` as its promotion ceiling; the
+    # allocator still fills to ``fast_capacity``, and request churn
+    # (free -> allocate) keeps regenerating the reserve. Traced: the
+    # serving benchmark legs flip it without retracing.
+    alloc_headroom: jnp.int32 = 0
 
 
 class TenantState(NamedTuple):

@@ -13,10 +13,19 @@ and rewrites the mapping — block tables hold logical ids and never change.
 
 Page heat summaries (Quest-style per-page key min/max) ride along for the
 top-k page selector in the serving engine.
+
+Free/reuse invariant (DESIGN.md §8): the slot of an unallocated logical page
+always holds zeroed K/V content and reset (±inf) Quest summaries. Two paths
+maintain it: :meth:`TieredPagedKV.free_pages` scrubs slots when a sequence
+finishes, and :meth:`TieredPagedKV.migrate` re-scrubs the vacated source
+rows its swaps hand to free holders (``page_move`` has gather semantics, so
+a swapped-out row otherwise retains a stale copy of the migrated page).
+Without the invariant, a reused page's ``write_tokens`` folds max/min
+against the PREVIOUS owner's summaries, corrupting Quest top-k selection.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -92,7 +101,45 @@ class TieredPagedKV:
                 self.k_max = self.k_max.at[:, slot].set(kmax)
                 self.k_min = self.k_min.at[:, slot].set(kmin)
 
+    def _scrub_slots(self, slots: np.ndarray) -> None:
+        """Reset the given physical slots to the free-slot state: zero K/V
+        content, ±inf Quest summaries (one fused device update per pool)."""
+        if len(slots) == 0:
+            return
+        s = jnp.asarray(np.asarray(slots, np.int32))
+        self.k_pool = self.k_pool.at[:, s].set(0)
+        self.v_pool = self.v_pool.at[:, s].set(0)
+        self.k_max = self.k_max.at[:, s].set(-jnp.inf)
+        self.k_min = self.k_min.at[:, s].set(jnp.inf)
+
+    def free_pages(self, logical_pages) -> None:
+        """Scrub the slots of freed logical pages (call BEFORE or after the
+        manager's ``free`` — the slot mapping is engine-owned either way).
+
+        Without this, a reused page's ``write_tokens`` does maximum/minimum
+        against the previous owner's stale Quest summaries — corrupting
+        top-k page selection — and its pool slot leaks the prior sequence's
+        KV bytes. The reuse round-trip test locks decode on a reused cache
+        bit-equal to a fresh one."""
+        ids = np.asarray(logical_pages, np.int32)
+        if ids.size == 0:
+            return
+        self._scrub_slots(self.slot_of[ids])
+
     # ------------------------------------------------------------ migration
+    def apply_drained(self, promote_ids, demote_ids, manager: CentralManager) -> int:
+        """Commit a drained queue batch (commit-on-completion): the manager's
+        queue tick already flipped the tier metadata of exactly these pages,
+        so the KV pool moves the same ids. -1-padded id lists as emitted in
+        ``QueueStats.drained_promote_ids`` / ``drained_demote_ids``."""
+        return self.migrate(
+            MigrationPlan(
+                promote=jnp.asarray(np.asarray(promote_ids, np.int32).ravel()),
+                demote=jnp.asarray(np.asarray(demote_ids, np.int32).ravel()),
+            ),
+            manager,
+        )
+
     def migrate(self, plan: MigrationPlan, manager: CentralManager) -> int:
         """Execute a MaxMem plan: move page data across the tier boundary and
         rewrite slot_of. Demotions first (they free fast slots). Returns the
@@ -165,8 +212,24 @@ class TieredPagedKV:
         self.k_min = ops.page_move(
             self.k_min.reshape(L * n, Es), src_all, dst_all
         ).reshape(self.k_min.shape)
+        # page_move is a gather: a swapped-out source row keeps a stale COPY
+        # of the migrated page's data. Any such row now held by a free
+        # logical page must be re-scrubbed or the free/reuse invariant
+        # breaks the moment a migration swaps with a free holder.
+        freed_rows = np.asarray(
+            [r for r in moves_src if owner[inv[r]] < 0], np.int32
+        )
+        self._scrub_slots(freed_rows)
         return len(moves_src)
 
     # ------------------------------------------------------------ telemetry
     def tier_of_pages(self, logical_pages: np.ndarray) -> np.ndarray:
         return np.where(self.slots_for(logical_pages) < self.n_fast, TIER_FAST, TIER_SLOW)
+
+    def read_page(self, logical_page: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Host copy of one logical page's (k, v) contents — [L, page, nkv,
+        dh] each, independent of where the page physically lives. The
+        migration-integrity tests read pages back across a migrate() and
+        assert bit-equality."""
+        slot = int(self.slot_of[int(logical_page)])
+        return np.asarray(self.k_pool[:, slot]), np.asarray(self.v_pool[:, slot])

@@ -3,13 +3,22 @@
 Continuous batching: requests from multiple tenants (each with its own MaxMem
 ``t_miss`` target) share one fixed decode batch. Every step:
 
-  1. admit queued requests into free batch lanes (dense prefill -> pages)
+  1. admit queued requests into free batch lanes (dense prefill -> pages);
+     a request whose pages cannot be allocated yet exerts *backpressure*
+     (it waits in FIFO order) without head-of-line blocking smaller
+     requests behind it
   2. one batched paged-decode step (Quest top-k page selection)
   3. report the selected-page access stream to the central manager
   4. on page-boundary crossings, first-touch allocate new pages
-  5. every ``epoch_steps`` decode steps: run the MaxMem epoch and execute the
-     migration plan on the pools (Pallas page_copy)
-  6. finished sequences free their pages back to the tiered pool
+  5. every ``epoch_steps`` decode steps: run the MaxMem epoch. With a
+     queue-mode manager (``queue_size > 0``) the epoch's DRAINED batch is
+     committed to the KV pools (commit-on-completion: selections still in
+     flight move no bytes); an instant-apply manager executes the whole
+     plan immediately. Either way the Pallas ``page_move`` data plane does
+     the actual copies.
+  6. finished sequences free their pages back to the tiered pool AND scrub
+     their KV slots (zero content, ±inf Quest summaries) so a reused page
+     never folds against a prior owner's stale summaries
 
 A step-latency model (HBM vs host-DMA page reads) attributes per-tenant
 decode latency so QoS benchmarks can measure p50/p99 per tenant.
@@ -20,7 +29,6 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,7 +50,13 @@ class Request:
     lane: int = -1
     pages: List[int] = dataclasses.field(default_factory=list)
     submit_step: int = 0
+    admit_step: int = -1
     finish_step: int = -1
+
+    @property
+    def queue_delay_steps(self) -> int:
+        """Decode steps spent waiting for admission (backpressure)."""
+        return max(self.admit_step - self.submit_step, 0)
 
 
 @dataclasses.dataclass
@@ -89,8 +103,10 @@ class ServingEngine:
         self._rid = 0
         self._latencies: Dict[str, List[float]] = {}
         self._migrated_pages = 0
+        self.admission_blocked = 0  # allocation-failure backpressure events
         self._epoch_log: List[dict] = []
         self.finished: List[Request] = []
+        self.last_logits: Optional[np.ndarray] = None  # [B, V] of last step
 
     # ------------------------------------------------------------- tenants
     def add_tenant(self, name: str, t_miss: float) -> None:
@@ -102,12 +118,22 @@ class ServingEngine:
 
     # ------------------------------------------------------------- requests
     def submit(self, tenant: str, prompt: np.ndarray, max_new_tokens: int) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        max_tokens = self.n_p * self.kv.page
+        if len(prompt) > max_tokens:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the per-sequence "
+                f"page table: pages_per_seq={self.n_p} x page={self.kv.page} "
+                f"= {max_tokens} tokens"
+            )
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
         self._rid += 1
         self.queue.append(
             Request(
                 rid=self._rid,
                 tenant=tenant,
-                prompt=np.asarray(prompt, np.int32),
+                prompt=prompt,
                 max_new_tokens=max_new_tokens,
                 submit_step=self.step_count,
             )
@@ -116,9 +142,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------- admission
     def _admit(self) -> None:
-        for lane in range(self.max_batch):
-            if self.lanes[lane] is not None or not self.queue:
-                continue
+        free_lanes = [i for i, r in enumerate(self.lanes) if r is None]
+        blocked: List[Request] = []
+        while free_lanes and self.queue:
             req = self.queue.popleft()
             S = len(req.prompt)
             h = self.tenant_handles[req.tenant]
@@ -126,14 +152,19 @@ class ServingEngine:
             try:
                 pages = self.manager.allocate(h, n_pages)
             except MemoryError:
-                self.queue.appendleft(req)
-                return
+                # backpressure: the request keeps waiting (FIFO order is
+                # preserved below) but does NOT head-of-line block smaller
+                # requests behind it from taking this lane
+                self.admission_blocked += 1
+                blocked.append(req)
+                continue
+            lane = free_lanes.pop(0)
             req.pages = list(map(int, pages))
             req.lane = lane
+            req.admit_step = self.step_count
             self.lanes[lane] = req
             self.tables[lane, :] = -1
             self.tables[lane, :n_pages] = req.pages
-            self.positions[lane] = S - 1  # next decode writes position S-1+1?  see below
             # Prefill: dense forward collecting KV, then scatter into pages.
             logits, cache = self.api.prefill(
                 self.params, jnp.asarray(req.prompt[None, :]), S
@@ -149,6 +180,8 @@ class ServingEngine:
             first = int(np.argmax(np.asarray(logits[0])))
             req.generated.append(first)
             self.positions[lane] = S  # next token index to write
+        for req in reversed(blocked):
+            self.queue.appendleft(req)
 
     # ------------------------------------------------------------- stepping
     def _ensure_page(self, lane: int) -> bool:
@@ -210,8 +243,7 @@ class ServingEngine:
         # ---- latency attribution: page tiers touched this step -------------
         lat: Dict[str, StepLatency] = {}
         touched = np.flatnonzero(counts_np > 0)
-        tier = self.manager.tier_of(touched) if len(touched) else np.array([])
-        owner = np.asarray(self.manager.pages.owner)
+        owner = self.manager.owners()
         for name, h in self.tenant_handles.items():
             mine = touched[(owner[touched] == int(h))] if len(touched) else touched
             nf = int((self.manager.tier_of(mine) == TIER_FAST).sum()) if len(mine) else 0
@@ -222,7 +254,8 @@ class ServingEngine:
                 self._latencies[name].append(sec)
 
         # ---- token bookkeeping ---------------------------------------------
-        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        self.last_logits = np.asarray(logits)
+        greedy = np.argmax(self.last_logits, axis=-1)
         for lane, req in enumerate(self.lanes):
             if req is None or not active_mask[lane]:
                 continue
@@ -235,12 +268,22 @@ class ServingEngine:
         # ---- MaxMem epoch ----------------------------------------------------
         if self.step_count % self.epoch_steps == 0:
             res = self.manager.run_epoch()
-            moved = self.kv.migrate(res.plan, self.manager)
+            if res.stats.queue is not None:
+                # queue mode: only the DRAINED batch moves bytes this epoch
+                # (commit-on-completion); enqueued selections still in
+                # flight keep serving from their source tier
+                q = res.stats.queue
+                moved = self.kv.apply_drained(
+                    q.drained_promote_ids, q.drained_demote_ids, self.manager
+                )
+            else:
+                moved = self.kv.migrate(res.plan, self.manager)
             self._migrated_pages += moved
             self._epoch_log.append(
                 {
                     "step": self.step_count,
                     "moved": moved,
+                    "queue_depth": res.queue_depth,
                     "fmmr": {
                         n: float(self.manager.fmmr_of(h))
                         for n, h in self.tenant_handles.items()
@@ -254,6 +297,10 @@ class ServingEngine:
         req.finish_step = self.step_count
         h = self.tenant_handles[req.tenant]
         if req.pages:
+            # scrub the KV slots BEFORE releasing the ids: a freed page's
+            # slot must hold zero content and ±inf Quest summaries so the
+            # next owner starts from a fresh page (free/reuse invariant)
+            self.kv.free_pages(req.pages)
             self.manager.free(h, np.asarray(req.pages, np.int32))
         self.tables[lane, :] = -1
         self.positions[lane] = 0
@@ -265,6 +312,11 @@ class ServingEngine:
             self.step()
 
     # ------------------------------------------------------------- telemetry
+    @property
+    def migrated_bytes(self) -> int:
+        """Bytes physically moved across the tier boundary so far."""
+        return self._migrated_pages * self.kv.page_bytes()
+
     def latency_percentiles(self, tenant: str):
         xs = np.asarray(self._latencies.get(tenant, []))
         if len(xs) == 0:

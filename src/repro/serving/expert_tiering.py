@@ -14,14 +14,14 @@ placement, not just bookkeeping.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, List, NamedTuple, Tuple
+from typing import List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.manager import CentralManager
-from repro.core.types import TIER_FAST, MigrationPlan
+from repro.core.types import MigrationPlan
 from repro.kernels import ops
 
 
@@ -59,6 +59,11 @@ class ExpertTierManager:
         self.epoch_steps = epoch_steps
         self._step = 0
         self.pools: ExpertPools | None = None
+        # plan entries that could not be executed because the 1:1 slot
+        # layout pairs every promotion with a demotion: an odd plan's
+        # remainder is counted here instead of being silently dropped
+        self.unpaired_promotes = 0
+        self.unpaired_demotes = 0
 
     # ------------------------------------------------------------- pools
     def build_pools(self, params) -> ExpertPools:
@@ -111,6 +116,12 @@ class ExpertTierManager:
         dst: List[int] = []
         promote = [int(p) for p in promote if int(self.slot_of[p]) >= self.n_fast]
         demote = [int(p) for p in demote if int(self.slot_of[p]) < self.n_fast]
+        # zip truncates to the shorter side: the unpaired remainder cannot
+        # move (no partner slot in a full 1:1 layout) — count it so the
+        # telemetry shows the plan was wider than the swaps executed; the
+        # policy re-selects still-hot leftovers next epoch
+        self.unpaired_promotes += max(len(promote) - len(demote), 0)
+        self.unpaired_demotes += max(len(demote) - len(promote), 0)
         for pg_up, pg_down in zip(promote, demote):
             s_up = int(self.slot_of[pg_up])  # slow slot
             s_down = int(self.slot_of[pg_down])  # fast slot

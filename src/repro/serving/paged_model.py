@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Dict, NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +62,12 @@ def paged_decode_step(
     cur_off = pos_b % page
     cur_slot = jnp.take_along_axis(slot_tables, cur_p[:, None], axis=1)[:, 0]
     cur_slot = jnp.maximum(cur_slot, 0)
+    # Inactive lanes must not write: their clamped cur_slot would be row 0,
+    # silently corrupting whatever page physically lives there (KV bytes AND
+    # Quest summaries). Route their writes out of bounds so the scatter
+    # drops them.
+    n_slots = pools.k.shape[1]
+    write_slot = jnp.where(active, cur_slot, n_slots)
     seq_lens = jnp.where(active, pos_b + 1, 0)
 
     k_sel_n = min(quest_pages, n_p)
@@ -76,11 +82,11 @@ def paged_decode_step(
         q = L.apply_rope(q, rope_pos, cfg.rope_theta)
         k = L.apply_rope(k, rope_pos, cfg.rope_theta)
 
-        # ---- write new token into its page slot -------------------------
-        kp = kp.at[cur_slot, cur_off].set(k[:, 0].astype(kp.dtype))
-        vp = vp.at[cur_slot, cur_off].set(v[:, 0].astype(vp.dtype))
-        kmx = kmx.at[cur_slot].max(k[:, 0].astype(jnp.float32))
-        kmn = kmn.at[cur_slot].min(k[:, 0].astype(jnp.float32))
+        # ---- write new token into its page slot (idle lanes dropped) -----
+        kp = kp.at[write_slot, cur_off].set(k[:, 0].astype(kp.dtype), mode="drop")
+        vp = vp.at[write_slot, cur_off].set(v[:, 0].astype(vp.dtype), mode="drop")
+        kmx = kmx.at[write_slot].max(k[:, 0].astype(jnp.float32), mode="drop")
+        kmn = kmn.at[write_slot].min(k[:, 0].astype(jnp.float32), mode="drop")
 
         # ---- Quest page scores -------------------------------------------
         st = jnp.maximum(slot_tables, 0)
@@ -145,4 +151,9 @@ def paged_decode_step(
     )
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = (x[:, 0] @ lm_head_weight(params, cfg)).astype(jnp.float32)
+    # an inactive lane's attention gathers whatever page physically sits at
+    # row 0 — layout-dependent garbage. Zero those rows so the step output
+    # is a pure function of logical state (the reuse-parity tests rely on
+    # this, and callers never consume dead-lane logits anyway).
+    logits = jnp.where(active[:, None], logits, 0.0)
     return logits, PagedPools(*new_pools), counts[:-1]

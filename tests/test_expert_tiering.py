@@ -77,6 +77,35 @@ def test_hot_experts_become_fast_resident(setup):
     assert tm.fmmr() < 0.5
 
 
+def test_odd_plan_remainder_counted_not_dropped(setup):
+    """A plan with unpaired promotions (1:1 slots can only swap) must count
+    the remainder in telemetry instead of silently dropping it."""
+    cfg, params = setup
+    from repro.core.types import MigrationPlan
+
+    tm = ExpertTierManager(cfg, n_fast_slots=4, migration_budget=8, epoch_steps=1)
+    tm.build_pools(params)
+    # identity slot_of at boot: pages 4,5,6 are slow-resident, page 0 fast
+    plan = MigrationPlan(
+        promote=jnp.asarray([4, 5, 6, -1], jnp.int32),
+        demote=jnp.asarray([0, -1, -1, -1], jnp.int32),
+    )
+    before = {
+        p: np.asarray(tm.pools.w_gate[tm.slot_of[p]]).copy() for p in (0, 4, 5, 6)
+    }
+    moved = tm._migrate(plan)
+    assert moved == 2, "one executable pair = two page moves"
+    assert tm.unpaired_promotes == 2
+    assert tm.unpaired_demotes == 0
+    # the paired swap really moved data; the unpaired remainder stayed put
+    assert int(tm.slot_of[4]) == 0 and int(tm.slot_of[0]) == 4
+    assert int(tm.slot_of[5]) == 5 and int(tm.slot_of[6]) == 6
+    for p in (0, 4, 5, 6):
+        np.testing.assert_array_equal(
+            before[p], np.asarray(tm.pools.w_gate[tm.slot_of[p]])
+        )
+
+
 def test_real_router_skew_from_moe_model(setup):
     """End-to-end: counts produced by the REAL router on real activations."""
     cfg, params = setup

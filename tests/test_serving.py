@@ -9,6 +9,7 @@ from repro.core.manager import CentralManager
 from repro.core.types import TIER_FAST
 from repro.kvcache.paged import TieredPagedKV
 from repro.models.model import get_model
+from repro.serving.driver import OpenLoopDriver, TenantSpec
 from repro.serving.engine import ServingEngine
 from repro.serving.paged_model import PagedPools, paged_decode_step
 
@@ -29,6 +30,9 @@ def _mk_engine(cfg, params, n_fast=8, n_slow=56, page=4, **kw):
         max_tenants=4,
         sample_period=1,
         exact_sampling=True,
+        queue_size=kw.pop("queue_size", 0),
+        migration_bandwidth=kw.pop("bandwidth", None),
+        migration_latency=kw.pop("latency", 0),
     )
     kv = TieredPagedKV(cfg, n_fast, n_slow, page_tokens=page)
     return ServingEngine(
@@ -143,3 +147,202 @@ class TestEngine:
             eng.step()
             s = np.sort(eng.kv.slot_of)
             assert (s == np.arange(eng.kv.n_slots)).all(), "slot_of not a permutation"
+
+
+class TestFreeReuseInvariant:
+    """The stale-page Quest corruption bugfix: freed pages leave zeroed
+    slots and reset (±inf) summaries, and a reused cache decodes
+    bit-identically to a fresh one."""
+
+    def test_free_scrubs_slots_and_summaries(self, setup):
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, n_fast=4, n_slow=28, page=4,
+                         epoch_steps=2, quest_pages=2)
+        eng.add_tenant("a", t_miss=0.2)
+        eng.submit("a", np.arange(1, 17), max_new_tokens=12)
+        eng.run(20)
+        assert len(eng.finished) == 1
+        assert eng._migrated_pages > 0, "want migrations before the frees"
+        # every slot is back to the free state: the request's own frees plus
+        # the migrate() re-scrub of swapped-out rows
+        assert (np.asarray(eng.kv.k_pool) == 0).all()
+        assert (np.asarray(eng.kv.v_pool) == 0).all()
+        assert np.isneginf(np.asarray(eng.kv.k_max)).all()
+        assert np.isposinf(np.asarray(eng.kv.k_min)).all()
+
+    def test_page_reuse_decode_bit_identical_to_fresh_cache(self, setup):
+        cfg, params = setup
+        kw = dict(n_fast=4, n_slow=28, page=4, epoch_steps=2,
+                  quest_pages=2, budget=6)
+        reused = _mk_engine(cfg, params, **kw)
+        reused.add_tenant("a", t_miss=0.2)
+        # first occupant: dirty the pool + summaries, drive migrations, free
+        rng = np.random.default_rng(7)
+        reused.submit("a", rng.integers(1, cfg.vocab_size, 16), max_new_tokens=14)
+        reused.run(22)
+        assert len(reused.finished) == 1 and reused._migrated_pages > 0
+
+        fresh = _mk_engine(cfg, params, **kw)
+        fresh.add_tenant("a", t_miss=0.2)
+        prompt2 = rng.integers(1, cfg.vocab_size, 12)
+        reused.submit("a", prompt2, max_new_tokens=10)
+        fresh.submit("a", prompt2, max_new_tokens=10)
+        for _ in range(14):
+            reused.step()
+            fresh.step()
+            if reused.last_logits is not None or fresh.last_logits is not None:
+                np.testing.assert_array_equal(
+                    reused.last_logits, fresh.last_logits,
+                    err_msg="reused-page decode diverged from a fresh cache",
+                )
+        assert [r.generated for r in reused.finished[1:]] == [
+            r.generated for r in fresh.finished
+        ]
+
+
+class TestAdmissionValidation:
+    def test_submit_rejects_oversized_prompt(self, setup):
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, pages_per_seq=4, page=4)
+        eng.add_tenant("a", t_miss=0.5)
+        with pytest.raises(ValueError, match="page table"):
+            eng.submit("a", np.arange(1, 18), max_new_tokens=4)  # 17 > 16
+
+    def test_boundary_prompt_exactly_fills_table(self, setup):
+        """S == pages_per_seq * page: admits, prefills, finishes cleanly
+        (no numpy broadcast crash, no decode room -> prefill token only)."""
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, pages_per_seq=4, page=4)
+        eng.add_tenant("a", t_miss=0.5)
+        eng.submit("a", np.arange(1, 17), max_new_tokens=8)  # S = 16
+        eng.run(4)
+        assert len(eng.finished) == 1
+        assert len(eng.finished[0].generated) >= 1
+        assert (np.asarray(eng.manager.pages.owner) == -1).all()
+
+    def test_backpressure_skips_head_of_line(self, setup):
+        """A too-big-for-now request must not block a small one behind it."""
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, n_fast=2, n_slow=6, page=4,
+                         pages_per_seq=8, epoch_steps=64)
+        eng.add_tenant("a", t_miss=0.5)
+        big = eng.submit("a", np.arange(1, 25), max_new_tokens=6)  # 6 pages
+        eng.step()  # big admitted: 6 of 8 pages used
+        big2 = eng.submit("a", np.arange(1, 25), max_new_tokens=6)  # blocked
+        small = eng.submit("a", np.arange(1, 5), max_new_tokens=4)  # 1 page
+        eng.step()
+        admitted = {
+            r.rid for r in list(eng.lanes) + eng.finished
+            if r is not None and r.admit_step >= 0
+        }
+        assert big in admitted
+        assert small in admitted, "small request head-of-line blocked"
+        assert big2 not in admitted, "big2 should be backpressured"
+        assert eng.admission_blocked > 0
+        eng.run(30)
+        done = {r.rid for r in eng.finished}
+        assert {big, big2, small} <= done, "blocked request starved"
+
+
+class TestQueueModeEngine:
+    def test_queue_mode_parity_with_instant(self, setup):
+        """bw=unlimited / latency=0 queue mode is bit-identical to the
+        instant-apply engine: same tokens, latencies, placements, moves."""
+        cfg, params = setup
+        kw = dict(n_fast=4, n_slow=28, page=4, epoch_steps=2,
+                  quest_pages=2, budget=6, max_batch=2)
+        instant = _mk_engine(cfg, params, **kw)
+        queued = _mk_engine(cfg, params, queue_size=16, **kw)
+        assert queued.manager.queue_size > 0
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(1, cfg.vocab_size, 12) for _ in range(3)]
+        for eng in (instant, queued):
+            eng.add_tenant("ls", t_miss=0.1)
+            eng.add_tenant("be", t_miss=1.0)
+            eng.submit("be", prompts[0], max_new_tokens=16)
+            eng.submit("ls", prompts[1], max_new_tokens=16)
+            eng.submit("ls", prompts[2], max_new_tokens=8)
+            eng.run(30)
+        assert instant._migrated_pages > 0
+        assert instant._migrated_pages == queued._migrated_pages
+        assert instant._latencies == queued._latencies
+        np.testing.assert_array_equal(instant.manager.tiers(),
+                                      queued.manager.tiers())
+        assert [r.generated for r in instant.finished] == [
+            r.generated for r in queued.finished
+        ]
+
+    def test_queue_mode_bounded_bandwidth_commits_lag_selections(self, setup):
+        """With a finite drain the engine commits at most bw pages per epoch
+        and the queue carries the rest forward."""
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, n_fast=4, n_slow=60, page=4,
+                         pages_per_seq=16, quest_pages=2, epoch_steps=2,
+                         budget=8, queue_size=16, bandwidth=2)
+        eng.add_tenant("ls", t_miss=0.1)
+        eng.submit("ls", np.arange(1, 25), max_new_tokens=30)
+        eng.run(34)
+        assert eng._migrated_pages > 0
+        per_epoch = [e["moved"] for e in eng._epoch_log]
+        assert max(per_epoch) <= 2, f"drain exceeded bandwidth: {per_epoch}"
+        assert any(e["queue_depth"] > 0 for e in eng._epoch_log), (
+            "bounded drain never left selections in flight"
+        )
+        c = eng.manager.queue_counters()
+        assert c["enqueued"] == (c["drained"] + c["cancelled"]
+                                 + c["dropped"] + c["depth"])
+
+    def test_migration_preserves_kv_bytes(self, setup):
+        """Data integrity: migrating pages moves their exact bytes."""
+        cfg, params = setup
+        n_fast, n_slow, page = 4, 12, 4
+        manager = CentralManager(
+            num_pages=n_fast + n_slow, fast_capacity=n_fast,
+            migration_budget=6, max_tenants=2, sample_period=1,
+            exact_sampling=True,
+        )
+        kv = TieredPagedKV(cfg, n_fast, n_slow, page_tokens=page)
+        h = manager.register(t_miss=0.1)
+        pages = manager.allocate(h, 8)
+        L, nkv, dh = cfg.num_layers, cfg.num_kv_heads, cfg.d_head
+        rng = np.random.default_rng(0)
+        k = rng.normal(size=(L, 1, 8 * page, nkv, dh)).astype(np.float32)
+        v = rng.normal(size=(L, 1, 8 * page, nkv, dh)).astype(np.float32)
+        kv.write_tokens((jnp.asarray(k), jnp.asarray(v)),
+                        pages[None, :].astype(np.int32), start_pos=0)
+        before = {int(p): kv.read_page(p) for p in pages}
+        # make the slow pages hot so the policy promotes (and demotes)
+        counts = np.zeros(manager.num_pages, np.int64)
+        counts[pages[n_fast:]] = 50
+        counts[pages[:n_fast]] = 1
+        moved = 0
+        for _ in range(4):
+            manager.record_access(counts)
+            res = manager.run_epoch()
+            moved += kv.migrate(res.plan, manager)
+        assert moved > 0, "no migration exercised"
+        for p in pages:
+            after_k, after_v = kv.read_page(p)
+            np.testing.assert_array_equal(before[int(p)][0], after_k)
+            np.testing.assert_array_equal(before[int(p)][1], after_v)
+
+
+class TestOpenLoopDriver:
+    def test_poisson_arrivals_and_backpressure_telemetry(self, setup):
+        cfg, params = setup
+        eng = _mk_engine(cfg, params, n_fast=4, n_slow=28, page=4,
+                         max_batch=2, epoch_steps=4)
+        drv = OpenLoopDriver(
+            eng,
+            [TenantSpec("ls", t_miss=0.1, arrival_rate=0.2,
+                        prompt_tokens=8, max_new_tokens=6),
+             TenantSpec("be", t_miss=1.0, arrival_rate=0.4,
+                        prompt_tokens=8, max_new_tokens=8)],
+            seed=5,
+        )
+        rep = drv.run(40)
+        assert rep["ls"]["submitted"] > 0 and rep["be"]["submitted"] > 0
+        assert rep["ls"]["completed"] + rep["be"]["completed"] > 0
+        assert rep["_engine"]["steps"] == 40
+        total = sum(rep[t]["generated_tokens"] for t in ("ls", "be"))
+        assert total > 0
