@@ -27,6 +27,12 @@ the current checkout, then compares against the committed
     (MaxMem <= static AND <= fixed partition, with migrated pages > 0),
     and the fresh smoke serving legs must all complete with the maxmem leg
     migrating and both baselines frozen (see :func:`check_serving`);
+  * the committed autotune payload must carry a PASSING tuned-vs-default
+    claim (>= 2 scenario families with tuned aggregate throughput >=
+    default and LS p99 <= default) and a passing online-recovery claim,
+    with every referenced tuned profile still present under
+    ``src/repro/configs/tuned/``; the fresh smoke leg re-runs the search
+    canary and the smoke-profile replays (see :func:`check_autotune`);
   * the invariant sentinel with its traced flag OFF must cost within
     ``PERF_GATE_SENTINEL_TOL`` (default 3%) of a program with the sentinel
     compiled out — fresh-only, same-host (see :func:`check_sentinel_band`),
@@ -52,6 +58,7 @@ BENCH_FILES = {
     "scenarios": "BENCH_scenarios.json",
     "fleet": "BENCH_fleet.json",
     "serving": "BENCH_serving.json",
+    "autotune": "BENCH_autotune.json",
 }
 
 # (payload key, json path) -> gated metric; all are lower-is-better
@@ -299,6 +306,75 @@ def check_serving(committed_serving: dict, fresh_serving: dict) -> list:
     return rows
 
 
+def check_autotune(committed_autotune: dict, fresh_autotune: dict) -> list:
+    """Autotuner claim rows (DESIGN.md §9).
+
+    Committed payload: the headline claim must PASS — at least two scenario
+    families where the committed tuned profile achieves aggregate
+    throughput >= default AND LS p99 <= default (the replays are
+    deterministic, so equality is a legitimate pass), and the online
+    re-tuner must recover the shifted tenant in fewer epochs than default
+    params after a SkewChange. Every profile the payload references must
+    still exist under ``src/repro/configs/tuned/`` — a bench claiming
+    numbers for a profile that was deleted (or renamed) must fail loudly,
+    not silently re-tune.
+
+    Fresh smoke: the tiny search canary must have completed every
+    generation with a weakly-dominating winner, and the smoke-scale
+    family replays must all complete with passing claims (they replay
+    committed smoke profiles, so this is deterministic, not noise-bound).
+    """
+    rows = []
+    claim = committed_autotune.get("claim")
+    rows.append({
+        "check": "committed:autotune_tuned_geq_default",
+        "status": ("missing" if claim is None
+                   else ("ok" if claim.get("pass") else "fail")),
+        "families_passing": (claim or {}).get("families_passing"),
+    })
+    online = committed_autotune.get("online", {})
+    oc = online.get("claim")
+    rows.append({
+        "check": "committed:autotune_online_recovery",
+        "status": ("missing" if oc is None
+                   else ("ok" if oc.get("pass") else "fail")),
+        "recovery_epochs_default": online.get("recovery_epochs_default"),
+        "recovery_epochs_online": online.get("recovery_epochs_online"),
+    })
+    referenced = committed_autotune.get("profiles_referenced")
+    if referenced is None:
+        rows.append({"check": "committed:autotune_profiles_exist",
+                     "status": "missing"})
+    else:
+        from repro.configs.tuned import profile_names
+
+        have = set(profile_names())
+        gone = sorted(set(referenced) - have)
+        rows.append({
+            "check": "committed:autotune_profiles_exist",
+            "status": "ok" if not gone else "fail",
+            "referenced": referenced,
+            "missing_profiles": gone,
+        })
+    search = fresh_autotune.get("search_smoke", {})
+    rows.append({
+        "check": "fresh_smoke:autotune_search_complete",
+        "status": ("ok" if search.get("claim", {}).get("pass") else "fail"),
+        "generations": search.get("generations"),
+    })
+    fams = fresh_autotune.get("families", {})
+    bad = sorted(
+        f for f, d in fams.items() if not d.get("claim", {}).get("pass")
+    )
+    rows.append({
+        "check": "fresh_smoke:autotune_family_replays",
+        "status": "ok" if fams and not bad else "fail",
+        "families": sorted(fams),
+        "failing": bad,
+    })
+    return rows
+
+
 def check_sentinel_band(fresh_policy: dict, tol: float) -> list:
     """Sentinel-off overhead band (DESIGN.md §7), fresh-only: the
     production policy program compiles the invariant sentinel gated by a
@@ -355,7 +431,12 @@ def main(argv=None) -> int:
     ]
     committed = {k: v or {} for k, v in committed.items()}
 
-    from benchmarks import dynamic_workload, microbench, serving_colocation
+    from benchmarks import (
+        autotune_bench,
+        dynamic_workload,
+        microbench,
+        serving_colocation,
+    )
 
     fresh = {
         "policy": microbench.policy_bench(),
@@ -370,6 +451,7 @@ def main(argv=None) -> int:
             "sweep_smoke": dynamic_workload.sweep_fleet_smoke(),
         },
         "serving": serving_colocation.serving_bench(smoke=True),
+        "autotune": autotune_bench.autotune_bench(smoke=True),
     }
 
     diff = {
@@ -383,6 +465,7 @@ def main(argv=None) -> int:
         + check_ordering(committed["scenarios"], "committed")
         + check_fleet(committed["fleet"], fresh["fleet"])
         + check_serving(committed["serving"], fresh["serving"])
+        + check_autotune(committed["autotune"], fresh["autotune"])
         + check_sentinel_band(fresh["policy"], args.sentinel_tolerance),
     }
     # a metric or file absent on either side means the gate is no longer

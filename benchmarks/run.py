@@ -22,9 +22,11 @@ K-machine scan vs the serial per-machine drivers, engine-level and full
 ScenarioSweep) and ``BENCH_serving.json`` (multi-tenant open-loop serving
 colocation on the REAL engine: per-tenant p50/p99 step latency, throughput
 and migrated bytes under maxmem vs static vs fixed-partition placement,
-plus the gated LS-p99 claim row) so the perf trajectory is tracked across
-PRs. All payloads carry a ``platform`` stamp for cross-host normalization
-in the perf gate.
+plus the gated LS-p99 claim row) and ``BENCH_autotune.json`` (committed
+tuned policy profiles replayed against the paper defaults per scenario
+family, the online SkewChange recovery race, and the autotuner search
+canary) so the perf trajectory is tracked across PRs. All payloads carry
+a ``platform`` stamp for cross-host normalization in the perf gate.
 """
 import json
 import sys
@@ -78,6 +80,17 @@ def write_serving_json(path: str = "BENCH_serving.json", smoke: bool = False) ->
 
     with open(path, "w") as f:
         json.dump(serving_colocation.serving_bench(smoke=smoke), f, indent=2)
+    print(f"wrote {path}")
+
+
+def write_autotune_json(path: str = "BENCH_autotune.json", smoke: bool = False) -> None:
+    """Autotuner claims payload: committed tuned profiles replayed against
+    the paper defaults per scenario family, the online SkewChange recovery
+    race, and the search-completeness canary (benchmarks/autotune_bench.py)."""
+    from benchmarks import autotune_bench
+
+    with open(path, "w") as f:
+        json.dump(autotune_bench.autotune_bench(smoke=smoke), f, indent=2)
     print(f"wrote {path}")
 
 
@@ -136,6 +149,11 @@ def main() -> None:
     except Exception as e:
         failures += 1
         print(f"section_serving_json_FAILED,0,{e!r}")
+    try:
+        write_autotune_json()
+    except Exception as e:
+        failures += 1
+        print(f"section_autotune_json_FAILED,0,{e!r}")
     if failures:
         sys.exit(1)
 

@@ -137,6 +137,7 @@ class CentralManager:
         sample_period: int = 100,
         ewma_lambda: float = 0.5,
         fair_mode: bool = False,
+        hysteresis: float = 0.08,
         seed: int = 0,
         exact_sampling: bool = False,
         queue_size: int = 0,
@@ -185,6 +186,7 @@ class CentralManager:
             ewma_lambda=jnp.float32(ewma_lambda),
             sample_period=jnp.int32(sample_period),
             fair_mode=fair_mode,
+            hysteresis=jnp.float32(hysteresis),
             migration_bandwidth=jnp.int32(
                 BANDWIDTH_UNLIMITED if migration_bandwidth is None
                 else migration_bandwidth

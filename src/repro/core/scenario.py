@@ -569,6 +569,14 @@ class SweepPoint:
     migration_bandwidth: Optional[int] = None  # needs queue_size > 0
     migration_latency: int = 0
     sample_period: Optional[int] = None
+    # remaining traced policy knobs (docs/PARAMS.md is the reference) —
+    # None = the CentralManager default. The autotuner
+    # (repro.launch.hillclimb) maps one candidate config onto each point.
+    ewma_lambda: Optional[float] = None
+    hysteresis: Optional[float] = None
+    num_bins: Optional[int] = None
+    alloc_headroom: Optional[int] = None
+    fast_capacity: Optional[int] = None  # tier size is traced too (≤ num_pages)
 
 
 @dataclass(frozen=True)
@@ -705,7 +713,9 @@ def run_sweep(
     managers = []
     for p in sweep.points:
         mgr_kw = dict(
-            num_pages=num_pages, fast_capacity=fast_capacity,
+            num_pages=num_pages,
+            fast_capacity=fast_capacity if p.fast_capacity is None
+            else p.fast_capacity,
             migration_budget=migration_budget if p.migration_budget is None
             else p.migration_budget,
             max_tenants=max_tenants,
@@ -717,6 +727,10 @@ def run_sweep(
         )
         if p.migration_bandwidth is not None:
             mgr_kw["migration_bandwidth"] = p.migration_bandwidth
+        for knob in ("ewma_lambda", "hysteresis", "num_bins", "alloc_headroom"):
+            v = getattr(p, knob)
+            if v is not None:
+                mgr_kw[knob] = v
         managers.append(CentralManager(**mgr_kw))
     fleet = FleetManager(managers, devices=devices)
     if on_fleet is not None:

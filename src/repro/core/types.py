@@ -62,6 +62,22 @@ class PolicyParams(NamedTuple):
     # serving benchmark legs flip it without retracing.
     alloc_headroom: jnp.int32 = 0
 
+    @classmethod
+    def from_profile(cls, name: str, **overrides) -> "PolicyParams":
+        """Load a committed tuned profile from ``repro.configs.tuned``.
+
+        Profiles are the autotuner's committed winners (one JSON per
+        scenario family × geometry, e.g. ``"thrash_4k"``; see DESIGN.md §9
+        and docs/PARAMS.md). Returns a fully-populated ``PolicyParams``
+        with every leaf cast to its traced dtype; keyword ``overrides``
+        replace individual fields (e.g. a different ``fast_capacity`` when
+        replaying a profile on a machine with another tier geometry).
+        """
+        # lazy import: configs.tuned needs PolicyParams itself
+        from repro.configs.tuned import params_from_profile
+
+        return params_from_profile(name, **overrides)
+
 
 class TenantState(NamedTuple):
     """Per-tenant QoS state. Arrays of length max_tenants."""
