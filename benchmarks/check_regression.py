@@ -36,7 +36,17 @@ the current checkout, then compares against the committed
   * the invariant sentinel with its traced flag OFF must cost within
     ``PERF_GATE_SENTINEL_TOL`` (default 3%) of a program with the sentinel
     compiled out — fresh-only, same-host (see :func:`check_sentinel_band`),
-    so the robustness layer can't silently tax the hot path.
+    so the robustness layer can't silently tax the hot path;
+  * the scaling payload (``BENCH_scale.json``, re-measured fresh as a
+    smoke slope grid plus one 1M x 256 headline epoch) is gated on its
+    fitted per-axis log-log SLOPES — absolute limits, no host
+    normalization, committed and fresh (see :func:`check_scale`); the
+    ~10ms headline bar reports ``below_target`` non-fatally on
+    hardware-bound hosts, exactly like the fleet 1.8x row;
+  * every size-row in the schema'd BENCH sections must carry its full
+    metric key set (see :func:`check_row_schema`) — a row that silently
+    dropped a key (the old 256k ``policy_epoch`` row had no
+    ``speedup_vs_seed``) fails loudly instead of being skipped.
 
 Every BENCH payload carries a ``platform`` stamp (host, jax backend, cpu
 count); the committed numbers rarely come from the machine re-measuring
@@ -59,6 +69,37 @@ BENCH_FILES = {
     "fleet": "BENCH_fleet.json",
     "serving": "BENCH_serving.json",
     "autotune": "BENCH_autotune.json",
+    "scale": "BENCH_scale.json",
+}
+
+# Per-axis fitted log-log slope ceilings for the scaling payload
+# (benchmarks/scale_bench.py). Slopes are dimensionless and host-robust —
+# a uniformly slower gate host moves every point, not the fit — so they
+# are gated ABSOLUTELY, with no host normalization, on the committed full
+# payload AND the fresh smoke grid. pages: 1.0 is linear; the measured
+# engine sits well below (fixed per-tick overheads amortize), so > 1.15
+# means a superlinear term crept back in. tenants/machines: the tick is
+# P-dominated and the fleet scan batches, so both axes must stay nearly
+# flat.
+SCALE_SLOPE_LIMITS = {
+    "pages": ("fitted", 1.15),
+    "pages_scan": ("scan_fitted", 1.15),
+    "tenants": ("fitted", 0.55),
+    "machines": ("fitted", 0.35),
+}
+
+# Every size-row inside these BENCH sections must carry its full metric
+# key set on BOTH sides of the gate. A row that silently dropped a key
+# (the pre-PR-9 256k policy_epoch row omitted speedup_vs_seed) fails
+# loudly here instead of being skipped by whichever check reads it.
+REQUIRED_ROW_KEYS = {
+    ("policy", "policy_epoch"): ("us", "epochs_per_sec", "speedup_vs_seed"),
+    ("policy", "policy_epoch_queue"): ("us", "instant_us", "overhead_vs_instant"),
+    ("policy", "run_epochs_k16"): ("scan_per_epoch_us", "singles_per_epoch_us"),
+    ("policy", "live_bytes"): ("solo_instant", "solo_queue", "fleet4_stacked"),
+    ("scale", "pages_axis"): ("epoch_us", "scan_epoch_us", "state_bytes"),
+    ("scale", "tenants_axis"): ("epoch_us",),
+    ("scale", "machines_axis"): ("per_machine_epoch_us", "fleet_live_bytes"),
 }
 
 # (payload key, json path) -> gated metric; all are lower-is-better
@@ -375,6 +416,86 @@ def check_autotune(committed_autotune: dict, fresh_autotune: dict) -> list:
     return rows
 
 
+def check_row_schema(committed: dict, fresh: dict) -> list:
+    """Metric-key completeness per size-row (see REQUIRED_ROW_KEYS): a
+    BENCH section whose rows dropped a key must fail loudly — the old
+    behavior was that downstream consumers silently skipped such rows."""
+    rows = []
+    for (payload_key, section), keys in REQUIRED_ROW_KEYS.items():
+        for source, payloads in (("committed", committed), ("fresh", fresh)):
+            name = f"{source}:{payload_key}.{section}:row_keys"
+            sec = payloads.get(payload_key, {}).get(section)
+            if not isinstance(sec, dict) or not sec:
+                rows.append({"check": name, "status": "missing"})
+                continue
+            bad = {
+                size: sorted(set(keys) - set(row))
+                for size, row in sec.items()
+                if not isinstance(row, dict) or set(keys) - set(row)
+            }
+            row = {"check": name, "status": "ok" if not bad else "fail",
+                   "rows": sorted(sec)}
+            if bad:
+                row["missing_keys"] = bad
+            rows.append(row)
+    return rows
+
+
+def check_scale(committed_scale: dict, fresh_scale: dict) -> list:
+    """Scaling-curve gate (benchmarks/scale_bench.py, DESIGN.md §10).
+
+    Gates the fitted per-axis log-log SLOPES absolutely (no host
+    normalization — see SCALE_SLOPE_LIMITS) on both the committed full
+    payload and the fresh smoke grid, so a regression in asymptotic
+    behavior fails even when a fast gate host hides it in the point
+    estimates. The 1M x 256 headline is handled like the fleet 1.8x
+    target: its presence and geometry are required (missing fails), but a
+    measuring host below the ~10ms absolute bar reports ``below_target``
+    — visible, non-fatal — because the bar is hardware-bound while the
+    slopes are not."""
+    rows = []
+    for source, payload in (("committed", committed_scale),
+                            ("fresh_smoke", fresh_scale)):
+        slopes = payload.get("slopes")
+        if not slopes:
+            rows.append({"check": f"{source}:scale_slopes", "status": "missing"})
+            continue
+        for name, (key, limit) in SCALE_SLOPE_LIMITS.items():
+            axis = name.split("_")[0]
+            fitted = slopes.get(axis, {}).get(key)
+            rows.append({
+                "check": f"{source}:scale_slope_{name}",
+                "status": ("missing" if fitted is None
+                           else ("ok" if fitted <= limit else "fail")),
+                "fitted": fitted,
+                "limit": limit,
+            })
+        head = payload.get("headline") or {}
+        geom_ok = (head.get("pages") == 1048576 and head.get("tenants") == 256
+                   and isinstance(head.get("epoch_us"), (int, float)))
+        rows.append({
+            "check": f"{source}:scale_headline_1m_x256_recorded",
+            "status": "ok" if geom_ok else "missing",
+            "epoch_us": head.get("epoch_us"),
+        })
+        if geom_ok:
+            rows.append({
+                "check": f"{source}:scale_headline_meets_10ms",
+                "status": ("ok" if head.get("meets_target")
+                           else "below_target"),
+                "epoch_us": head.get("epoch_us"),
+                "target_us": head.get("target_us"),
+            })
+    churn = fresh_scale.get("churn") or {}
+    rows.append({
+        "check": "fresh_smoke:scale_churn_completed",
+        "status": "ok" if churn.get("phases", 0) >= 3 else "fail",
+        "scenario": churn.get("scenario"),
+        "wall_s": churn.get("wall_s"),
+    })
+    return rows
+
+
 def check_sentinel_band(fresh_policy: dict, tol: float) -> list:
     """Sentinel-off overhead band (DESIGN.md §7), fresh-only: the
     production policy program compiles the invariant sentinel gated by a
@@ -435,6 +556,7 @@ def main(argv=None) -> int:
         autotune_bench,
         dynamic_workload,
         microbench,
+        scale_bench,
         serving_colocation,
     )
 
@@ -452,6 +574,8 @@ def main(argv=None) -> int:
         },
         "serving": serving_colocation.serving_bench(smoke=True),
         "autotune": autotune_bench.autotune_bench(smoke=True),
+        # smoke slope grid + ONE fresh 1M x 256 headline epoch on this host
+        "scale": scale_bench.scale_bench(smoke=True),
     }
 
     diff = {
@@ -466,7 +590,9 @@ def main(argv=None) -> int:
         + check_fleet(committed["fleet"], fresh["fleet"])
         + check_serving(committed["serving"], fresh["serving"])
         + check_autotune(committed["autotune"], fresh["autotune"])
-        + check_sentinel_band(fresh["policy"], args.sentinel_tolerance),
+        + check_sentinel_band(fresh["policy"], args.sentinel_tolerance)
+        + check_scale(committed["scale"], fresh["scale"])
+        + check_row_schema(committed, fresh),
     }
     # a metric or file absent on either side means the gate is no longer
     # measuring what it claims to — that must fail loudly, not pass

@@ -26,6 +26,18 @@ from repro.kernels.paged_attention import paged_attention
 # BENCH_policy.json tracks the counting-rank engine against across PRs.
 SEED_POLICY_EPOCH_64K_US = 78321.0
 
+
+def seed_policy_epoch_us(n_pages: int) -> float:
+    """Seed-engine reference cost extrapolated to ``n_pages``.
+
+    The seed commit was only measured at 64k pages; its lexsort-rank epoch
+    was SUPERLINEAR in P (global sort dominated), so a linear-in-pages
+    extrapolation is a conservative UNDERESTIMATE of what the seed would
+    cost at larger sizes — every ``speedup_vs_seed`` beyond 64k is a floor,
+    never inflated by the model.
+    """
+    return SEED_POLICY_EPOCH_64K_US * (n_pages / 65536.0)
+
 _POLICY_BENCH_CACHE = None
 _FLEET_BENCH_CACHE = None
 
@@ -135,11 +147,16 @@ def policy_bench() -> dict:
         "seed_reference": {
             "micro_policy_epoch_64k_pages_us": SEED_POLICY_EPOCH_64K_US,
             "commit": "c35e7fc (lexsort ranks, W=4096 victim window)",
+            # speedup_vs_seed beyond 64k divides by this linear-in-pages
+            # extrapolation (see seed_policy_epoch_us: the seed engine was
+            # superlinear, so the reported speedups are floors)
+            "extrapolation": "linear_in_pages",
         },
         "policy_epoch": {},
         "policy_epoch_queue": {},
         "policy_epoch_sentinel": {},
         "run_epochs_k16": {},
+        "live_bytes": {},
     }
     for P in (65536, 262144):
         pages, tenants = _policy_state(rng, P, T)
@@ -151,10 +168,14 @@ def policy_bench() -> dict:
         n_rep = 10 if P <= 65536 else 5
         epoch_us = _time(lambda: policy.policy_epoch(
             pages, tenants, sampled, params, max_tenants=T, plan_size=R), n=n_rep)
-        entry = {"us": epoch_us, "epochs_per_sec": 1e6 / epoch_us}
-        if P == 65536:
-            entry["speedup_vs_seed"] = SEED_POLICY_EPOCH_64K_US / epoch_us
-        out["policy_epoch"][str(P)] = entry
+        # every size carries speedup_vs_seed (the 256k row used to omit it,
+        # which the perf gate's schema check now rejects); beyond 64k the
+        # seed cost is the conservative linear extrapolation
+        out["policy_epoch"][str(P)] = {
+            "us": epoch_us,
+            "epochs_per_sec": 1e6 / epoch_us,
+            "speedup_vs_seed": seed_policy_epoch_us(P) / epoch_us,
+        }
 
         # queue-mode (bounded data plane) overhead over the instant tick at
         # BOTH engine scales, on manager-grade states (owner segments
@@ -192,6 +213,24 @@ def policy_bench() -> dict:
             "queue_size": 2 * R,
             "bandwidth": R // 2,
         }
+
+        # live-bytes audit (packed-layout satellite): array bytes of the
+        # solo instant/queue states and of a 4-machine stacked fleet state
+        # — measured off the real pytrees (types.state_nbytes), so the i16
+        # owner / i8 queue-heat packing shows up as data, not assertion
+        from repro.core.fleet import FleetManager
+        from repro.core.types import state_nbytes
+
+        fleet4 = FleetManager(
+            _fleet_managers(4, P, T, R), devices=1)
+        out["live_bytes"][str(P)] = {
+            "solo_instant": state_nbytes(istate),
+            "solo_queue": state_nbytes(qstate),
+            "fleet4_stacked": fleet4.live_bytes(),
+            "fleet_machines": 4,
+            "bytes_per_page_solo": state_nbytes(istate) / P,
+        }
+        del fleet4
 
         if P == 65536:
             # Sentinel overhead band (DESIGN.md §7). Three programs on the
@@ -367,8 +406,17 @@ def run() -> Rows:
     )
     rows.add(
         "micro_policy_epoch_256k_pages", pb["policy_epoch"]["262144"]["us"],
-        f"pages=262144;tenants={T};budget={R}",
+        f"pages=262144;tenants={T};budget={R};"
+        f"speedup_vs_seed={pb['policy_epoch']['262144']['speedup_vs_seed']:.2f}",
     )
+    for p_key, label in (("65536", "64k"), ("262144", "256k")):
+        lb = pb["live_bytes"][p_key]
+        rows.add(
+            f"micro_policy_live_bytes_{label}", 0.0,
+            f"solo_instant={lb['solo_instant']};solo_queue={lb['solo_queue']};"
+            f"fleet4_stacked={lb['fleet4_stacked']};"
+            f"bytes_per_page={lb['bytes_per_page_solo']:.2f}",
+        )
     for p_key, label in (("65536", "64k"), ("262144", "256k")):
         q = pb["policy_epoch_queue"][p_key]
         rows.add(

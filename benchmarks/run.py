@@ -25,7 +25,9 @@ and migrated bytes under maxmem vs static vs fixed-partition placement,
 plus the gated LS-p99 claim row) and ``BENCH_autotune.json`` (committed
 tuned policy profiles replayed against the paper defaults per scenario
 family, the online SkewChange recovery race, and the autotuner search
-canary) so the perf trajectory is tracked across PRs. All payloads carry
+canary) and ``BENCH_scale.json`` (the pages x tenants x machines
+scaling sweep with fitted per-axis slopes and the 1M x 256 headline
+epoch) so the perf trajectory is tracked across PRs. All payloads carry
 a ``platform`` stamp for cross-host normalization in the perf gate.
 """
 import json
@@ -38,6 +40,17 @@ def write_policy_json(path: str = "BENCH_policy.json") -> None:
 
     with open(path, "w") as f:
         json.dump(microbench.policy_bench(), f, indent=2)
+    print(f"wrote {path}")
+
+
+def write_scale_json(path: str = "BENCH_scale.json", smoke: bool = False) -> None:
+    """Scaling-curve payload: pages x tenants x machines sweeps with fitted
+    per-axis log-log slopes, the 1M x 256 headline epoch, and the stacked
+    fleet live-bytes (benchmarks/scale_bench.py, DESIGN.md §10)."""
+    from benchmarks import scale_bench
+
+    with open(path, "w") as f:
+        json.dump(scale_bench.scale_bench(smoke=smoke), f, indent=2)
     print(f"wrote {path}")
 
 
@@ -154,6 +167,11 @@ def main() -> None:
     except Exception as e:
         failures += 1
         print(f"section_autotune_json_FAILED,0,{e!r}")
+    try:
+        write_scale_json()
+    except Exception as e:
+        failures += 1
+        print(f"section_scale_json_FAILED,0,{e!r}")
     if failures:
         sys.exit(1)
 

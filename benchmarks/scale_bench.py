@@ -1,0 +1,358 @@
+"""Scaling-curve benchmark: pages x tenants x machines (ROADMAP item 4).
+
+Sweeps the fused policy tick and the vmapped fleet along three independent
+axes and fits a log-log slope per axis, writing ``BENCH_scale.json``:
+
+  * ``pages_axis``    — solo ``epoch_step`` + fused-scan per-epoch cost at
+    fixed tenant count while pages grow 64k -> 256k -> 1M. The slope is the
+    asymptotic-behavior observable the perf gate bounds: a point estimate
+    can hide a superlinear term behind a fast host, a slope cannot.
+  * ``tenants_axis``  — the same tick while tenants grow 16 -> 64 -> 256 at
+    fixed pages (the [T, C] cutoff tables and per-tenant reductions).
+  * ``machines_axis`` — ``FleetManager.run_epochs`` per-machine-epoch cost
+    while the vmapped machine axis grows (ideal slope ~0 on one device:
+    batching amortizes dispatch; the XLA program is linear work) plus the
+    stacked fleet state's live bytes per K.
+  * ``churn``         — a manager-grade ``scale_colocation`` scenario run
+    (core/scenario.py) with batch arrive/depart waves, timing the
+    control-plane path that exercises the incremental ``OwnerSegments``
+    splice at scale.
+  * ``headline``      — the 1M-page x 256-tenant solo epoch, measured
+    honestly against the ~10ms ROADMAP target: this host reports the
+    value and whether it clears the bar; the GATE binds the slopes (which
+    are host-robust dimensionless quantities) and treats the absolute
+    target like the fleet 1.8x row — visible, non-fatal when the
+    measuring host is hardware-bound.
+
+Timing is min-of-reps (the Rows/vectorization_bench convention) on states
+built directly at the policy layer — owner-sorted segments attached, Poisson
+pending backlog — i.e. the same state shape every production tick sees.
+
+    PYTHONPATH=src:. python benchmarks/scale_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, platform_metadata
+from repro.core import policy
+from repro.core.types import (
+    OwnerSegments,
+    PolicyParams,
+    PolicyState,
+    TIER_FAST,
+    TIER_SLOW,
+    state_nbytes,
+)
+
+_SCALE_BENCH_CACHE: dict = {}
+
+# full-run axes (the committed BENCH_scale.json payload)
+PAGES_AXIS = (65536, 262144, 1048576)
+PAGES_AXIS_T = 256
+TENANTS_AXIS = (16, 64, 256)
+TENANTS_AXIS_P = 262144
+MACHINES_AXIS = (1, 4, 16, 64)
+MACHINES_AXIS_P = 65536
+
+# smoke axes: same code path, sizes chosen so the CI scale job fits its
+# wall-clock budget (one 1M-point headline epoch + a small slope grid)
+SMOKE_PAGES_AXIS = (16384, 65536, 262144)
+SMOKE_PAGES_AXIS_T = 16
+SMOKE_TENANTS_AXIS = (8, 32, 128)
+SMOKE_TENANTS_AXIS_P = 65536
+SMOKE_MACHINES_AXIS = (1, 4)
+SMOKE_MACHINES_AXIS_P = 4096
+
+
+def _time_min(fn, n=3, warmup=1) -> float:
+    """Min-of-reps device timing in us (first call pays compilation)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def make_scale_state(P: int, T: int, seed: int = 0) -> PolicyState:
+    """A production-shaped solo policy state at geometry (P, T): every
+    page owned, ~25% fast-resident, owner segments attached (every
+    manager-grade state carries them) and a Poisson pending backlog."""
+    rng = np.random.default_rng(seed)
+    st = PolicyState.create(P, T)
+    pages = st.pages._replace(
+        owner=jnp.asarray(rng.integers(0, T, P), st.pages.owner.dtype),
+        tier=jnp.asarray(
+            np.where(rng.random(P) < 0.25, TIER_FAST, TIER_SLOW), jnp.int8),
+    )
+    tenants = st.tenants._replace(
+        active=jnp.ones((T,), bool),
+        t_miss=jnp.asarray(rng.uniform(0.05, 1.0, T), jnp.float32),
+        arrival=jnp.arange(T, dtype=jnp.int32),
+    )
+    segs = OwnerSegments.build(np.asarray(pages.owner), T)
+    pending = jnp.asarray(rng.poisson(200, P), jnp.uint32)
+    return st._replace(pages=pages, tenants=tenants, pending=pending, segs=segs)
+
+
+def _scale_params(P: int, R: int) -> PolicyParams:
+    return PolicyParams(
+        fast_capacity=jnp.int32(P // 4), migration_budget=jnp.int32(R),
+        sample_period=jnp.int32(100),
+    )
+
+
+def _point(P: int, T: int, reps: int, scan_k: int = 4) -> dict:
+    """One (pages, tenants) grid point: solo epoch + fused-scan per-epoch
+    cost + state bytes."""
+    R = 2048
+    st = make_scale_state(P, T)
+    params = _scale_params(P, R)
+    kw = dict(max_tenants=T, plan_size=R)
+
+    def one_epoch():
+        s2, _plan, _stats = policy.epoch_step(st, params, **kw)
+        return s2.pages.tier
+
+    def scan():
+        s2 = policy.multi_epoch(
+            st, params, k=scan_k, **kw, collect_plans=False, trim_stats=True)[0]
+        return s2.pages.tier
+
+    epoch_us = _time_min(one_epoch, n=reps)
+    scan_us = _time_min(scan, n=max(reps // 2, 1))
+    return {
+        "pages": P,
+        "tenants": T,
+        "epoch_us": epoch_us,
+        "scan_epoch_us": scan_us / scan_k,
+        "scan_k": scan_k,
+        "state_bytes": state_nbytes(st),
+    }
+
+
+def fit_slope(sizes, costs) -> float:
+    """Least-squares slope of log2(cost) vs log2(size) — 1.0 = linear
+    scaling, > 1 superlinear. Dimensionless and host-robust: a uniformly
+    faster host moves every point, not the slope."""
+    xs = np.log2(np.asarray(sizes, dtype=np.float64))
+    ys = np.log2(np.asarray(costs, dtype=np.float64))
+    xs = xs - xs.mean()
+    return float((xs * (ys - ys.mean())).sum() / (xs * xs).sum())
+
+
+def _machines_point(K: int, P: int, T: int, n_epochs: int, reps: int) -> dict:
+    from benchmarks.microbench import _fleet_managers
+    from repro.core.fleet import FleetManager
+
+    R = max(P // 32, 8)
+    rng = np.random.default_rng(0)
+    counts = rng.poisson(200, (K, P)).astype(np.int64)
+    fleet = FleetManager(_fleet_managers(K, P, T, R), devices=1)
+    live = fleet.live_bytes()
+
+    def run():
+        fleet.run_epochs(n_epochs, counts=counts, trim_stats=True)
+        fleet.stacked_placement()
+
+    best = float("inf")
+    for i in range(reps + 1):
+        t0 = time.perf_counter()
+        run()
+        if i > 0:  # first rep pays compilation
+            best = min(best, time.perf_counter() - t0)
+    total_us = best * 1e6
+    return {
+        "machines": K,
+        "pages": P,
+        "tenants": T,
+        "n_epochs": n_epochs,
+        "total_us": total_us,
+        "per_machine_epoch_us": total_us / (K * n_epochs),
+        "fleet_live_bytes": live,
+        "live_bytes_per_machine": live / K,
+    }
+
+
+def _churn_leg(P: int, T: int, n_epochs: int) -> dict:
+    """Manager-grade scenario run with batch tenant churn: the
+    control-plane wall time (allocate/free/unregister waves through the
+    incremental OwnerSegments splice) plus completion evidence."""
+    from repro.core.manager import CentralManager
+    from repro.core.scenario import scale_colocation
+    from repro.core.simulator import OPTANE, ColocationSim
+
+    sc = scale_colocation(P, T, n_epochs)
+    mgr = CentralManager(
+        num_pages=P, fast_capacity=P // 4, migration_budget=max(P // 32, 8),
+        max_tenants=T, sample_period=100, seed=0,
+    )
+    sim = ColocationSim(mgr, OPTANE, seed=1, policy_chunk=4)
+    t0 = time.perf_counter()
+    res = sim.run_scenario(sc)
+    wall_s = time.perf_counter() - t0
+    return {
+        "scenario": sc.name,
+        "pages": P,
+        "tenants": T,
+        "n_epochs": n_epochs,
+        "wall_s": wall_s,
+        "phases": len(res.phases),
+        "steady_state_agg_throughput": res.steady_state.agg_throughput,
+    }
+
+
+def scale_bench(smoke: bool = False) -> dict:
+    """The BENCH_scale.json payload (cached per process per mode)."""
+    if smoke in _SCALE_BENCH_CACHE:
+        return _SCALE_BENCH_CACHE[smoke]
+    if smoke:
+        pages_axis, pages_t = SMOKE_PAGES_AXIS, SMOKE_PAGES_AXIS_T
+        tenants_axis, tenants_p = SMOKE_TENANTS_AXIS, SMOKE_TENANTS_AXIS_P
+        machines_axis, machines_p = SMOKE_MACHINES_AXIS, SMOKE_MACHINES_AXIS_P
+        reps, churn_geom = 2, (16384, 8, 8)
+    else:
+        pages_axis, pages_t = PAGES_AXIS, PAGES_AXIS_T
+        tenants_axis, tenants_p = TENANTS_AXIS, TENANTS_AXIS_P
+        machines_axis, machines_p = MACHINES_AXIS, MACHINES_AXIS_P
+        reps, churn_geom = 3, (65536, 16, 16)
+
+    out: dict = {
+        "platform": platform_metadata(),
+        "smoke": smoke,
+        "config": {
+            "pages_axis": list(pages_axis), "pages_axis_tenants": pages_t,
+            "tenants_axis": list(tenants_axis), "tenants_axis_pages": tenants_p,
+            "machines_axis": list(machines_axis),
+            "machines_axis_pages": machines_p,
+        },
+        "pages_axis": {},
+        "tenants_axis": {},
+        "machines_axis": {},
+    }
+    for P in pages_axis:
+        out["pages_axis"][str(P)] = _point(P, pages_t, reps)
+    for T in tenants_axis:
+        out["tenants_axis"][str(T)] = _point(tenants_p, T, reps)
+    for K in machines_axis:
+        out["machines_axis"][str(K)] = _machines_point(
+            K, machines_p, 16, n_epochs=4, reps=max(reps - 1, 1))
+    out["churn"] = _churn_leg(*churn_geom)
+
+    out["slopes"] = {
+        "pages": {
+            "fitted": fit_slope(
+                pages_axis,
+                [out["pages_axis"][str(P)]["epoch_us"] for P in pages_axis]),
+            "scan_fitted": fit_slope(
+                pages_axis,
+                [out["pages_axis"][str(P)]["scan_epoch_us"] for P in pages_axis]),
+            "ideal": 1.0,
+        },
+        "tenants": {
+            "fitted": fit_slope(
+                tenants_axis,
+                [out["tenants_axis"][str(T)]["epoch_us"] for T in tenants_axis]),
+            "ideal": 0.0,  # P-dominated tick: T terms should stay minor
+        },
+        "machines": {
+            "fitted": fit_slope(
+                machines_axis,
+                [out["machines_axis"][str(K)]["per_machine_epoch_us"]
+                 for K in machines_axis]),
+            "ideal": 0.0,  # per-machine cost flat under the vmapped scan
+        },
+    }
+
+    # the headline geometry: full mode measures it as the last pages-axis
+    # point; smoke mode (the CI scale job) runs ONE extra epoch at 1M x 256
+    # so the gate always sees a fresh headline measurement on its host
+    if smoke:
+        head = _point(1048576, 256, reps=1, scan_k=2)
+    else:
+        head = out["pages_axis"][str(1048576)]
+    out["headline"] = {
+        "pages": head["pages"],
+        "tenants": head["tenants"],
+        "epoch_us": head["epoch_us"],
+        "scan_epoch_us": head["scan_epoch_us"],
+        "target_us": 10000.0,
+        "meets_target": head["epoch_us"] <= 10000.0,
+        "note": (
+            "single-core XLA:CPU CI host; the Gaussian sampler alone costs "
+            "more than the 10ms target at 1M pages, so the gate binds the "
+            "host-robust per-axis slopes and reports the absolute target "
+            "like the fleet 1.8x row (visible, non-fatal when hardware-bound)"
+        ),
+    }
+    _SCALE_BENCH_CACHE[smoke] = out
+    return out
+
+
+def run(smoke: bool = False) -> Rows:
+    rows = Rows()
+    sb = scale_bench(smoke=smoke)
+    for P, d in sb["pages_axis"].items():
+        rows.add(
+            f"scale_pages_{int(P) // 1024}k_epoch", d["epoch_us"],
+            f"tenants={d['tenants']};scan_epoch_us={d['scan_epoch_us']:.0f};"
+            f"state_bytes={d['state_bytes']}",
+        )
+    for T, d in sb["tenants_axis"].items():
+        rows.add(
+            f"scale_tenants_{T}_epoch", d["epoch_us"],
+            f"pages={d['pages']};scan_epoch_us={d['scan_epoch_us']:.0f}",
+        )
+    for K, d in sb["machines_axis"].items():
+        rows.add(
+            f"scale_machines_{K}_per_machine_epoch", d["per_machine_epoch_us"],
+            f"pages={d['pages']};fleet_live_bytes={d['fleet_live_bytes']}",
+        )
+    ch = sb["churn"]
+    rows.add(
+        "scale_churn_scenario", ch["wall_s"] * 1e6,
+        f"{ch['scenario']};epochs={ch['n_epochs']};phases={ch['phases']}",
+    )
+    s = sb["slopes"]
+    rows.add(
+        "scale_slopes", 0.0,
+        f"pages={s['pages']['fitted']:.3f};"
+        f"pages_scan={s['pages']['scan_fitted']:.3f};"
+        f"tenants={s['tenants']['fitted']:.3f};"
+        f"machines={s['machines']['fitted']:.3f}",
+    )
+    h = sb["headline"]
+    rows.add(
+        "scale_headline_1m_x256_epoch", h["epoch_us"],
+        f"target_us={h['target_us']:.0f};meets_target={h['meets_target']}",
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-budget axes (small slope grid + one 1M epoch)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the payload JSON to PATH")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    rows.print()
+    if args.json:
+        import json
+
+        with open(args.json, "w") as f:
+            json.dump(scale_bench(smoke=args.smoke), f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.tiling import tiled_cumsum
 from repro.core.types import OwnerSegments, PageState, TenantState
 
 
@@ -30,11 +31,12 @@ def seg_sums(values_sorted: jax.Array, start: jax.Array) -> jax.Array:
 
     ``values_sorted`` is any [P] array already gathered into owner-sorted
     order (``x[segs.order]``); ``start`` is ``OwnerSegments.start``. ONE
-    global cumsum plus two [T+1] gathers replaces a [T, P] one-hot
-    reduction or a P-element scatter-add — bit-identical for integer
-    dtypes (same addends, associative exact arithmetic).
+    global cumsum (tiled past 64k elements, core/tiling.py) plus two [T+1]
+    gathers replaces a [T, P] one-hot reduction or a P-element scatter-add
+    — bit-identical for integer dtypes (same addends, associative exact
+    arithmetic).
     """
-    cum = jnp.cumsum(values_sorted)
+    cum = tiled_cumsum(values_sorted)
     cum0 = jnp.concatenate([jnp.zeros((1,), cum.dtype), cum])
     return cum0[start[1:]] - cum0[start[:-1]]
 
@@ -144,7 +146,11 @@ def count_histogram(
     bucket axis then give exact victim *ranks* without any sort (DESIGN.md §2).
     """
     key = jnp.minimum(values.astype(jnp.int32), num_buckets - 1)
-    flat = jnp.where(mask, owner * num_buckets + key, max_tenants * num_buckets)
+    # owner may be the packed i16 leaf: the flat key needs i32 range
+    flat = jnp.where(
+        mask, owner.astype(jnp.int32) * num_buckets + key,
+        max_tenants * num_buckets,
+    )
     hist = jnp.zeros((max_tenants * num_buckets + 1,), jnp.int32).at[flat].add(
         1, mode="drop"
     )

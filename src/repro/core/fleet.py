@@ -60,7 +60,13 @@ from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import policy
 from repro.core.manager import CentralManager, MultiEpochResult
-from repro.core.types import EpochStats, MigrationPlan, OwnerSegments, PolicyState
+from repro.core.types import (
+    EpochStats,
+    MigrationPlan,
+    OwnerSegments,
+    PolicyState,
+    state_nbytes,
+)
 
 
 def fleet_multi_epoch(
@@ -790,6 +796,15 @@ class FleetManager:
         ).result()
 
     # ----------------------------------------------------------- telemetry
+    def live_bytes(self) -> int:
+        """Array bytes of the stacked fleet state (padded machine rows
+        included — padding occupies real device memory). The scale bench
+        records this per geometry: every per-page leaf scales as K x P, so
+        the packed i16 owner / i8 queue-heat layouts shrink exactly the
+        term that dominates at a million pages."""
+        self._assemble()
+        return state_nbytes(self._fstate)
+
     def stacked_placement(self) -> Tuple[np.ndarray, np.ndarray]:
         """(tier[K, P], owner[K, P]) for every machine in ONE batched
         device->host transfer, seeding each manager's telemetry snapshot

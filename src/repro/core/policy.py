@@ -41,6 +41,7 @@ from repro.core.faults import (
     SENTINEL_QUEUE,
 )
 from repro.core.sampler import sample_accesses
+from repro.core.tiling import tiled_cumsum
 from repro.core.types import (
     DIR_DEMOTE,
     DIR_PROMOTE,
@@ -233,9 +234,9 @@ def _occ_segments(member_p, member_d, owner, segs: OwnerSegments):
         occ_d = jnp.where(member_d & (occ_d == 0), 1 << 16, occ_d)
         return occ_p, occ_d
     zero = jnp.zeros((1,), jnp.int32)
-    cum_p = jnp.cumsum(member_p[order].astype(jnp.int32))
+    cum_p = tiled_cumsum(member_p[order].astype(jnp.int32))
     cum0_p = jnp.concatenate([zero, cum_p])
-    cum_d = jnp.cumsum(member_d[order].astype(jnp.int32))
+    cum_d = tiled_cumsum(member_d[order].astype(jnp.int32))
     cum0_d = jnp.concatenate([zero, cum_d])
     off = start[owner_s]
     return (cum_p - cum0_p[off])[inv], (cum_d - cum0_d[off])[inv]
@@ -347,6 +348,10 @@ def _epoch_core(
     # ---- 1. per-tenant fast/slow sample counts (tier *before* migration) ----
     is_fast = pages.tier == TIER_FAST
     is_slow = pages.tier == TIER_SLOW
+    # owner is stored i16 (packed layouts, types.py); every slot-arithmetic
+    # consumer below (flat histogram keys, T + owner offsets) needs i32
+    # range, so upcast ONCE here — one fused elementwise pass
+    owner32 = pages.owner.astype(jnp.int32)
     if segs is not None:
         # one [2T+1] scatter-add replaces the two global segment cumsums
         # plus their sorted-order gathers (measurably faster under both
@@ -358,8 +363,8 @@ def _epoch_core(
         T2 = max_tenants
         own_ok = pages.owner >= 0
         idx = jnp.where(
-            own_ok & is_fast, pages.owner,
-            jnp.where(own_ok, T2 + pages.owner, 2 * T2),
+            own_ok & is_fast, owner32,
+            jnp.where(own_ok, T2 + owner32, 2 * T2),
         )
         tbl = jnp.zeros((2 * T2 + 1,), jnp.uint32).at[idx].add(
             sampled.astype(jnp.uint32), mode="drop"
@@ -384,7 +389,7 @@ def _epoch_core(
     # rebalance pair counts, victim cutoffs — reads off these two tables and
     # their prefix sums.
     is_owned = pages.owner >= 0
-    owner = jnp.maximum(pages.owner, 0)
+    owner = jnp.maximum(owner32, 0)
     slow_cand = is_owned & is_slow
     fast_cand = is_owned & is_fast
     if exclude is not None:
@@ -399,8 +404,10 @@ def _epoch_core(
     hist2 = jnp.zeros((2 * T * C + 1,), jnp.int32).at[flat].add(1, mode="drop")
     hist_slow = hist2[: T * C].reshape(T, C)
     hist_fast = hist2[T * C : 2 * T * C].reshape(T, C)
-    cum_slow = jnp.cumsum(hist_slow, axis=1)  # [T,C] candidates with count <= c
-    cum_fast = jnp.cumsum(hist_fast, axis=1)
+    # tiled past 64k-element rows — at [256, 4096] the row scans alone cost
+    # ~20 ms untiled (core/tiling.py; bit-identical integer addition)
+    cum_slow = tiled_cumsum(hist_slow, axis=1)  # [T,C] candidates with count <= c
+    cum_fast = tiled_cumsum(hist_fast, axis=1)
     n_slow_cand = cum_slow[:, -1]  # == per-tenant slow-page holdings
     n_fast_cand = cum_fast[:, -1]  # == per-tenant fast-page holdings
     if exclude is None:
@@ -471,8 +478,8 @@ def _epoch_core(
         # + masked identity, no P-element scatter (XLA:CPU scatters are
         # element-serial; binary-searching plan_size ranks is ~20x cheaper)
         j = jnp.arange(plan_size, dtype=jnp.int32)
-        cum_p = jnp.cumsum(promote_mask.astype(jnp.int32))
-        cum_d = jnp.cumsum(demote_mask.astype(jnp.int32))
+        cum_p = tiled_cumsum(promote_mask.astype(jnp.int32))
+        cum_d = tiled_cumsum(demote_mask.astype(jnp.int32))
         idx_p = jnp.searchsorted(cum_p, j + 1, side="left").astype(jnp.int32)
         idx_d = jnp.searchsorted(cum_d, j + 1, side="left").astype(jnp.int32)
         plan = MigrationPlan(
@@ -556,7 +563,7 @@ def _compact(mask, out_len: int, arrays, pads):
     shared by every array, then the j-th kept entry is found by binary
     search and gathered — searchsorted + gathers are orders of magnitude
     cheaper than element-serial scatters on XLA:CPU."""
-    cum = jnp.cumsum(mask.astype(jnp.int32))
+    cum = tiled_cumsum(mask.astype(jnp.int32))
     j = jnp.arange(out_len, dtype=jnp.int32)
     idx = jnp.searchsorted(cum, j + 1, side="left").astype(jnp.int32)
     idx = jnp.minimum(idx, mask.shape[0] - 1)
@@ -630,7 +637,9 @@ def _queue_tick(
             jnp.where(v, jnp.int8(direction), jnp.int8(0)),
             jnp.full((S,), epoch, jnp.int32),
             jnp.full((S,), epoch + lat, jnp.int32),
-            jnp.where(v, heat_bin[pid], 0),
+            # bins are < 2^7 by construction (types.py): store i8 to match
+            # the packed queue leaf
+            jnp.where(v, heat_bin[pid], 0).astype(jnp.int8),
         )
 
     nd, npr = _new(plan.demote, DIR_DEMOTE), _new(plan.promote, DIR_PROMOTE)
@@ -659,14 +668,14 @@ def _queue_tick(
     ).astype(jnp.int32)
     is_d = elig & (c_dir == DIR_DEMOTE)
     is_p = elig & (c_dir == DIR_PROMOTE)
-    drain_d = is_d & (jnp.cumsum(is_d) <= bw)
+    drain_d = is_d & (tiled_cumsum(is_d.astype(jnp.int32)) <= bw)
     n_d = drain_d.sum()
     fast_occ = (pages.tier == TIER_FAST).sum()
     # drained promotions respect the allocation reserve too: a promotion
     # selected before an allocation burst must not retake the headroom the
     # burst just consumed (it stays queued until room reappears)
     room = params.fast_capacity - params.alloc_headroom - (fast_occ - n_d)
-    drain_p = is_p & (jnp.cumsum(is_p) <= jnp.minimum(bw - n_d, room))
+    drain_p = is_p & (tiled_cumsum(is_p.astype(jnp.int32)) <= jnp.minimum(bw - n_d, room))
     n_p = drain_p.sum()
 
     # commit-on-completion: tier flips only for the drained entries

@@ -438,6 +438,59 @@ class Scenario:
         return spans
 
 
+def scale_colocation(
+    n_pages: int,
+    n_tenants: int,
+    n_epochs: int,
+    churn: float = 0.25,
+) -> Scenario:
+    """Geometry-parameterized colocation scenario for the scaling sweep.
+
+    Unlike the hand-tuned figure scenarios, this builder takes the
+    (pages, tenants) geometry as free axes so the scale bench and the
+    churn tests can script a manager-grade run at ANY grid point. Core
+    tenants (all but a ``churn`` fraction) arrive at epoch 0; the churn
+    cohort arrives in a batch at n_epochs/4 and departs at 3·n_epochs/4 —
+    two mass register/free/unregister waves that exercise the incremental
+    ``OwnerSegments`` splice with many tenants mutating at once.
+
+    Footprints total 3/4 of ``n_pages`` at peak concurrency, leaving
+    allocation headroom; odd-index tenants are latency-sensitive (skewed
+    hot set, reachable t_miss), even-index are best-effort uniform — so
+    the reallocation loop has real FMMR gradients to act on at every T.
+    """
+    assert n_tenants >= 2, "scale scenario needs at least two tenants"
+    assert n_epochs >= 4, "scale scenario needs at least four epochs"
+    assert 0.0 <= churn < 1.0, f"churn fraction must be in [0, 1), got {churn}"
+    n_churn = int(round(churn * n_tenants))
+    n_core = n_tenants - n_churn
+    fp = (3 * n_pages) // (4 * n_tenants)
+    assert fp >= 8, (
+        f"geometry too thin: {n_pages} pages / {n_tenants} tenants "
+        f"leaves {fp} pages per tenant (need >= 8)"
+    )
+
+    def _spec(i: int) -> WorkloadSpec:
+        if i % 2 == 1:  # latency-sensitive: skewed, reachable target
+            return WorkloadSpec(f"t{i:03d}", n_pages=fp, t_miss=0.3,
+                                threads=2, sets=((0.2, 0.8),))
+        return WorkloadSpec(f"t{i:03d}", n_pages=fp, t_miss=1.0, threads=2)
+
+    arrive_at = max(1, n_epochs // 4)
+    depart_at = max(arrive_at + 1, (3 * n_epochs) // 4)
+    events: List[ScenarioEvent] = [Arrive(0, _spec(i)) for i in range(n_core)]
+    for j in range(n_churn):
+        i = n_core + j
+        events.append(Arrive(arrive_at, _spec(i)))
+        events.append(Depart(depart_at, f"t{i:03d}"))
+    return Scenario(
+        name=f"scale_{n_pages // 1024}k_x{n_tenants}",
+        n_epochs=n_epochs,
+        events=tuple(events),
+        description="geometry-parameterized colocation with batch tenant churn",
+    )
+
+
 # ------------------------------------------------------------------ result
 @dataclass
 class PhaseStats:

@@ -1,0 +1,66 @@
+"""Tiled (blocked) integer reductions for million-page geometries.
+
+XLA:CPU lowers a long single-axis ``cumsum`` to a reduce-window /
+associative-scan program whose cost grows far worse than linearly with the
+scanned length under the pre-thunk runtime the CI host pins: a 1M-element
+int32 cumsum measures ~115 ms on one core while the same values summed in
+2k-element blocks (block-local cumsum + carry of block totals) take ~8 ms.
+The fused tick performs a handful of P-length and [T, C]-row cumsums per
+epoch, so at 1M pages the scans ARE the scaling wall (DESIGN.md §10).
+
+``tiled_cumsum`` reshapes the scanned axis into ``[n_blocks, block]``,
+cumsums within blocks, prefix-sums the per-block totals (recursively, so
+arbitrarily long axes stay in the fast regime), and adds the exclusive
+block offsets back. For integer dtypes addition is exact and associative,
+so the result is BIT-IDENTICAL to ``jnp.cumsum`` — the same guarantee the
+owner-segment reductions rely on (DESIGN.md §5) — and the golden traces
+cannot observe the tiling. Float inputs fall back to ``jnp.cumsum``
+(float addition does not reassociate losslessly).
+
+Trace selection is a static-shape heuristic: axes at or below
+``CUMSUM_TILE_THRESHOLD`` elements keep today's single-scan program, so
+small geometries (every committed golden runs at <= 64k pages) trace to
+exactly the HLO they traced to before this module existed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Scanned axes at or below this length keep the plain jnp.cumsum program.
+# 65536 keeps every existing golden/bench geometry (4k..64k pages) on the
+# untiled trace; the first tiled size is 128k. Above the threshold the
+# plain scan is already several times slower than the blocked form.
+CUMSUM_TILE_THRESHOLD = 65536
+
+# Block length for the within-block cumsum. Swept at 1M elements on the CI
+# host: 256 -> 9.5 ms, 1024 -> 8.0 ms, 4096 -> 9.2 ms; 1024 also keeps the
+# per-block working set (two blocks of i32) inside L1.
+CUMSUM_BLOCK = 1024
+
+
+def tiled_cumsum(x, axis: int = -1):
+    """``jnp.cumsum(x, axis)`` — bit-identical for integer dtypes — tiled
+    into :data:`CUMSUM_BLOCK` chunks when the scanned axis is longer than
+    :data:`CUMSUM_TILE_THRESHOLD` (a trace-time shape test; short axes
+    trace to the plain scan, unchanged from the pre-tiling engine)."""
+    ax = axis % x.ndim
+    n = x.shape[ax]
+    if n <= CUMSUM_TILE_THRESHOLD or not jnp.issubdtype(x.dtype, jnp.integer):
+        return jnp.cumsum(x, axis=ax)
+    moved = ax != x.ndim - 1
+    if moved:
+        x = jnp.moveaxis(x, ax, -1)
+    pad = (-n) % CUMSUM_BLOCK
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths)  # zero pad: exact under integer addition
+    nb = (n + pad) // CUMSUM_BLOCK
+    blocks = x.reshape(*x.shape[:-1], nb, CUMSUM_BLOCK)
+    within = jnp.cumsum(blocks, axis=-1)
+    totals = within[..., -1]
+    offsets = tiled_cumsum(totals, axis=-1) - totals  # exclusive carry
+    out = (within + offsets[..., None]).reshape(*x.shape[:-1], nb * CUMSUM_BLOCK)
+    out = out[..., :n]
+    if moved:
+        out = jnp.moveaxis(out, -1, ax)
+    return out

@@ -25,6 +25,13 @@ DIR_DEMOTE = -1
 # PolicyParams.migration_bandwidth sentinel: drain the whole queue per epoch.
 BANDWIDTH_UNLIMITED = -1
 
+# Widest tenant slot index an int16 ``PageState.owner`` can carry (packed
+# state layouts, DESIGN.md §10). Enforced at state-construction time; every
+# compute site that does slot *arithmetic* (e.g. ``owner * C + key`` flat
+# histogram keys) upcasts to int32 first, so the narrow width is purely a
+# storage/bandwidth contract.
+MAX_TENANT_SLOTS = 32767
+
 
 class PolicyParams(NamedTuple):
     """Knobs of the paper's policy (§3.1/§3.2) in page units."""
@@ -117,9 +124,28 @@ class TenantState(NamedTuple):
 
 
 class PageState(NamedTuple):
-    """Per-page metadata. Arrays of length num_pages."""
+    """Per-page metadata. Arrays of length num_pages.
 
-    owner: jax.Array  # i32[P] tenant slot, -1 if unallocated
+    Dtype-width audit (packed state layouts, DESIGN.md §10) — the [P]
+    leaves dominate state bytes, upload cost, and the memory-bound passes
+    of the fused tick, so each field carries the narrowest width its value
+    range admits:
+
+    * ``owner`` i16: tenant slots are bounded by :data:`MAX_TENANT_SLOTS`
+      (asserted at construction). Index gathers take any int width; the
+      flat-key arithmetic sites upcast to i32 locally.
+    * ``tier`` i8: three-valued.
+    * ``count`` u32 — NOT narrowable: counts accumulate raw sampled
+      accesses between cooling events, and cooling only halves a tenant's
+      pages when one of them crosses ``2^(num_bins-1)`` *via a touch* —
+      exact-sampling replays fold entire backlogs in at once, so a single
+      epoch can legitimately add far more than 2^16 to one page.
+    * ``last_cool`` i32 — pairs with ``TenantState.cool_epoch`` (i32,
+      monotone over the run); a narrower stamp would wrap on long sweeps
+      and silently un-cool a stale page.
+    """
+
+    owner: jax.Array  # i16[P] tenant slot, -1 if unallocated
     tier: jax.Array  # i8[P]
     count: jax.Array  # u32[P] accumulated (lazily cooled) sample count
     last_cool: jax.Array  # i32[P] owner cool_epoch at last count update
@@ -128,7 +154,7 @@ class PageState(NamedTuple):
     def create(cls, num_pages: int) -> "PageState":
         P = num_pages
         return cls(
-            owner=jnp.full((P,), -1, jnp.int32),
+            owner=jnp.full((P,), -1, jnp.int16),
             tier=jnp.full((P,), TIER_NONE, jnp.int8),
             count=jnp.zeros((P,), jnp.uint32),
             last_cool=jnp.zeros((P,), jnp.int32),
@@ -159,17 +185,104 @@ class OwnerSegments(NamedTuple):
         """Host-side rebuild from an owner array (numpy or device)."""
         import numpy as np
 
-        own = np.asarray(owner)
-        key = np.where(own >= 0, own, max_tenants)
-        order = np.argsort(key, kind="stable").astype(np.int32)
-        inv = np.empty_like(order)
-        inv[order] = np.arange(order.shape[0], dtype=np.int32)
-        counts = np.bincount(key, minlength=max_tenants + 1)
-        start = np.zeros((max_tenants + 1,), np.int32)
-        np.cumsum(counts[:max_tenants], out=start[1:])
+        order, inv, start = segments_build_host(np.asarray(owner), max_tenants)
         return cls(
             order=jnp.asarray(order), inv=jnp.asarray(inv), start=jnp.asarray(start)
         )
+
+
+def segments_build_host(owner, max_tenants: int):
+    """From-scratch ``(order, inv, start)`` host arrays for an owner array
+    — ONE stable argsort; the reference the incremental patcher must match
+    bit-for-bit."""
+    import numpy as np
+
+    own = np.asarray(owner)
+    key = np.where(own >= 0, own, max_tenants)
+    order = np.argsort(key, kind="stable").astype(np.int32)
+    inv = np.empty_like(order)
+    inv[order] = np.arange(order.shape[0], dtype=np.int32)
+    counts = np.bincount(key, minlength=max_tenants + 1)
+    start = np.zeros((max_tenants + 1,), np.int32)
+    np.cumsum(counts[:max_tenants], out=start[1:])
+    return order, inv, start
+
+
+def segments_update_host(order, inv, start, prev_owner, new_owner, changed, max_tenants):
+    """Patch ``(order, inv, start)`` for the pages in ``changed`` whose
+    owner moved from ``prev_owner`` to ``new_owner`` — the incremental
+    alternative to :func:`segments_build_host` the manager uses on
+    register/allocate/free/unregister churn (DESIGN.md §10).
+
+    The permutation is uniquely determined by the stable (key, id) sort
+    order and ids are unique, so delete-then-merge reproduces the full
+    rebuild BIT-IDENTICALLY: changed entries are deleted from their old
+    sorted positions (known in O(1) each via ``inv``), re-keyed, sorted
+    among themselves (d log d for d changes), and merged back at positions
+    found by binary search on the composite (key, id) rank. Sequential
+    O(P) memmoves + O(d log P) searches replace the full O(P log P)
+    random-access argsort.
+
+    ``changed`` must contain each mutated page id exactly once with
+    ``prev_owner[p] != new_owner[p]``; ``inv``/``order``/``start`` must
+    describe ``prev_owner``.
+    """
+    import numpy as np
+
+    P = order.shape[0]
+    T = max_tenants
+    changed = np.asarray(changed, np.int64)
+    old_k = np.where(prev_owner[changed] >= 0, prev_owner[changed], T).astype(np.int64)
+    new_k = np.where(new_owner[changed] >= 0, new_owner[changed], T).astype(np.int64)
+
+    # Every changed page is removed once and inserted once, and both its
+    # segments lie inside [first affected segment, last affected segment] —
+    # so sorted positions OUTSIDE that segment-aligned window carry zero net
+    # shift and the splice (delete + merge + inverse-permutation scatter)
+    # only has to touch the window. bounds[t] is the first sorted index of
+    # segment t (t == T is the unowned tail), bounds[T+1] == P.
+    bounds = np.concatenate([start.astype(np.int64), [np.int64(P)]])
+    k_lo = int(min(old_k.min(), new_k.min()))
+    k_hi = int(max(old_k.max(), new_k.max()))
+    lo = int(bounds[k_lo])
+    hi = int(bounds[k_hi + 1])
+
+    win = order[lo:hi]
+    rm_local = np.sort(inv[changed]) - lo
+    kept_win = np.delete(win, rm_local)
+    # kept segment starts, window-relative: old starts shifted left by the
+    # removals in earlier window segments
+    rem_counts = np.bincount(old_k - k_lo, minlength=k_hi - k_lo + 1)
+    wb = bounds[k_lo : k_hi + 2] - lo
+    kept_wb = wb - np.concatenate([[0], np.cumsum(rem_counts)])
+
+    # Merge positions WITHOUT materializing an O(P) composite key: within a
+    # segment `kept_win` is id-ascending, so group the (re-keyed, id-sorted)
+    # changed entries by destination segment — at most min(d, T+1) groups —
+    # and binary-search each group's ids inside that one segment slice.
+    ins_sort = np.argsort(new_k * np.int64(P) + changed, kind="stable")
+    changed_sorted = changed[ins_sort].astype(np.int32)
+    keys_sorted = new_k[ins_sort]
+    pos = np.empty(changed_sorted.shape[0], np.int64)
+    seg_ids, run_starts = np.unique(keys_sorted, return_index=True)
+    run_ends = np.append(run_starts[1:], keys_sorted.shape[0])
+    for k, rlo, rhi in zip(seg_ids, run_starts, run_ends):
+        kw = int(k) - k_lo
+        seg = kept_win[kept_wb[kw] : kept_wb[kw + 1]]
+        pos[rlo:rhi] = kept_wb[kw] + np.searchsorted(seg, changed_sorted[rlo:rhi])
+    new_win = np.insert(kept_win, pos, changed_sorted)
+
+    new_order = order.copy()
+    new_order[lo:hi] = new_win
+    new_inv = inv.copy()
+    new_inv[new_win] = np.arange(lo, hi, dtype=np.int32)
+
+    counts = np.concatenate([np.diff(start), [np.int32(P) - start[T]]]).astype(np.int64)
+    np.add.at(counts, new_k, 1)
+    np.add.at(counts, old_k, -1)
+    new_start = np.zeros((T + 1,), np.int32)
+    new_start[1:] = np.cumsum(counts[:T]).astype(np.int32)
+    return new_order, new_inv, new_start
 
 
 class MigrationQueue(NamedTuple):
@@ -182,11 +295,15 @@ class MigrationQueue(NamedTuple):
     (commit-on-completion, like the paper's asynchronous DMA migrations).
     """
 
-    page: jax.Array  # i32[Q] page id, -1 = empty slot
+    page: jax.Array  # i32[Q] page id, -1 = empty slot (pools exceed 2^15 pages)
     direction: jax.Array  # i8[Q] DIR_PROMOTE / DIR_DEMOTE / DIR_NONE
     enqueue_epoch: jax.Array  # i32[Q] epoch the entry was admitted
     complete_epoch: jax.Array  # i32[Q] first epoch the entry may commit
-    heat: jax.Array  # i32[Q] hotness bin at enqueue (thrashing guard)
+    # Heat bins are ``bin_of`` values, bounded by num_bins - 1 <= 31 (bins
+    # derive from u32 counts), so one byte holds the thrashing-guard
+    # snapshot; epochs stay i32 (monotone queue clock, wraps on long runs
+    # otherwise).
+    heat: jax.Array  # i8[Q] hotness bin at enqueue (thrashing guard)
 
     @classmethod
     def create(cls, size: int) -> "MigrationQueue":
@@ -195,7 +312,7 @@ class MigrationQueue(NamedTuple):
             direction=jnp.zeros((size,), jnp.int8),
             enqueue_epoch=jnp.zeros((size,), jnp.int32),
             complete_epoch=jnp.zeros((size,), jnp.int32),
-            heat=jnp.zeros((size,), jnp.int32),
+            heat=jnp.zeros((size,), jnp.int8),
         )
 
     @property
@@ -257,6 +374,13 @@ class PolicyState(NamedTuple):
     def create(
         cls, num_pages: int, max_tenants: int, seed: int = 0, queue_size: int = 0
     ) -> "PolicyState":
+        # pending stays u32: it accumulates UNSAMPLED access reports across
+        # arbitrarily many control-plane calls between epochs — no policy
+        # invariant bounds it below 2^16.
+        assert max_tenants <= MAX_TENANT_SLOTS, (
+            f"max_tenants {max_tenants} exceeds the int16 owner width "
+            f"({MAX_TENANT_SLOTS}); widen PageState.owner to grow further"
+        )
         return cls(
             pages=PageState.create(num_pages),
             tenants=TenantState.create(max_tenants),
@@ -305,3 +429,22 @@ class EpochStats(NamedTuple):
     # when green, and identically zero when params.sentinel == 0. None when
     # the checks were compiled out (compile_sentinel=False).
     sentinel: Optional[jax.Array] = None
+
+
+def state_nbytes(tree) -> int:
+    """Total array bytes of a pytree of device (or host) arrays.
+
+    The packed-layout audit observable: ``PageState.owner`` at i16 and
+    ``MigrationQueue.heat`` at i8 shrink this directly, and a stacked
+    fleet state multiplies every per-page leaf by the machine axis — so
+    the scale bench records it per (pages, tenants, machines) geometry.
+    Python scalars in the tree count as zero (they occupy no array
+    storage).
+    """
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is None:
+            continue
+        total += int(jnp.size(leaf)) * jnp.dtype(dtype).itemsize
+    return total
