@@ -33,6 +33,13 @@ the current checkout, then compares against the committed
     with every referenced tuned profile still present under
     ``src/repro/configs/tuned/``; the fresh smoke leg re-runs the search
     canary and the smoke-profile replays (see :func:`check_autotune`);
+  * the committed adversarial payload (``BENCH_adversarial.json``) must
+    carry PASSING storm claims — guarded MaxMem recovering its
+    enqueue/drain balance in strictly fewer epochs than default on every
+    storm family, steady-state aggregate within tolerance, cancel ratio
+    bounded — and the fresh smoke storm grid re-runs all five legs per
+    family with invariants checked, re-verifying the same claims plus the
+    guards-off <= 3% wall band (see :func:`check_adversarial`);
   * the invariant sentinel with its traced flag OFF must cost within
     ``PERF_GATE_SENTINEL_TOL`` (default 3%) of a program with the sentinel
     compiled out — fresh-only, same-host (see :func:`check_sentinel_band`),
@@ -70,6 +77,7 @@ BENCH_FILES = {
     "serving": "BENCH_serving.json",
     "autotune": "BENCH_autotune.json",
     "scale": "BENCH_scale.json",
+    "adversarial": "BENCH_adversarial.json",
 }
 
 # Per-axis fitted log-log slope ceilings for the scaling payload
@@ -496,6 +504,62 @@ def check_scale(committed_scale: dict, fresh_scale: dict) -> list:
     return rows
 
 
+def check_adversarial(committed_adv: dict, fresh_adv: dict) -> list:
+    """Adversarial storm claim rows (DESIGN.md §11).
+
+    Committed payload: all three storm claims must PASS — guarded MaxMem
+    recovers its enqueue/drain balance in strictly fewer epochs than
+    default on EVERY storm family (the drop-requeue storm subsides
+    instead of saturating), guarded steady-state aggregate within the
+    recorded tolerance of default, and the cancelled/drained ratio
+    bounded on both legs (no livelock). The guards-off overhead row is
+    judged FRESH-only (wall-clock bands don't transfer across hosts; the
+    committed value is recorded for provenance, not gated).
+
+    Fresh smoke: the full storm grid re-runs on the gate host — every
+    family on all five legs with conservation invariants checked after
+    every event — and the same claims are re-verified, deterministic at
+    smoke scale, plus the fresh guards-off <= 3% band."""
+    rows = []
+    claims = committed_adv.get("claims")
+    for key in ("recovery_strict_every_family", "steady_state_within_tol",
+                "cancel_ratio_bounded"):
+        ok = (claims or {}).get(key)
+        rows.append({
+            "check": f"committed:adversarial_{key}",
+            "status": ("missing" if ok is None else ("ok" if ok else "fail")),
+        })
+    fams = committed_adv.get("families")
+    rows.append({
+        "check": "committed:adversarial_worst_recovery",
+        "status": "ok" if fams else "missing",
+        "worst_recovery": {
+            f: {
+                "default": d["policies"]["maxmem"].get("worst_churn_recovery"),
+                "guarded": d["policies"]["maxmem_guarded"].get(
+                    "worst_churn_recovery"),
+            }
+            for f, d in (fams or {}).items()
+        } or None,
+    })
+    fresh_claims = fresh_adv.get("claims", {})
+    for key in ("recovery_strict_every_family", "steady_state_within_tol",
+                "cancel_ratio_bounded", "guards_off_overhead_ok"):
+        ok = fresh_claims.get(key)
+        rows.append({
+            "check": f"fresh_smoke:adversarial_{key}",
+            "status": ("missing" if ok is None else ("ok" if ok else "fail")),
+        })
+    rows.append({
+        "check": "fresh_smoke:adversarial_guards_off_band",
+        "status": "ok" if fresh_adv.get("guards_off_overhead", {}).get("ok")
+        else "fail",
+        "ratio": fresh_adv.get("guards_off_overhead", {}).get("ratio"),
+        "band": fresh_adv.get("guards_off_overhead", {}).get("band"),
+    })
+    return rows
+
+
 def check_sentinel_band(fresh_policy: dict, tol: float) -> list:
     """Sentinel-off overhead band (DESIGN.md §7), fresh-only: the
     production policy program compiles the invariant sentinel gated by a
@@ -553,6 +617,7 @@ def main(argv=None) -> int:
     committed = {k: v or {} for k, v in committed.items()}
 
     from benchmarks import (
+        adversarial_bench,
         autotune_bench,
         dynamic_workload,
         microbench,
@@ -576,6 +641,9 @@ def main(argv=None) -> int:
         "autotune": autotune_bench.autotune_bench(smoke=True),
         # smoke slope grid + ONE fresh 1M x 256 headline epoch on this host
         "scale": scale_bench.scale_bench(smoke=True),
+        # the storm grid: all five legs per family, invariants on every
+        # event, claims re-verified at smoke scale
+        "adversarial": adversarial_bench.adversarial_bench(smoke=True),
     }
 
     diff = {
@@ -592,6 +660,7 @@ def main(argv=None) -> int:
         + check_autotune(committed["autotune"], fresh["autotune"])
         + check_sentinel_band(fresh["policy"], args.sentinel_tolerance)
         + check_scale(committed["scale"], fresh["scale"])
+        + check_adversarial(committed["adversarial"], fresh["adversarial"])
         + check_row_schema(committed, fresh),
     }
     # a metric or file absent on either side means the gate is no longer

@@ -94,7 +94,8 @@ class _BaselineBase:
         take = free[:n_pages]
         fast_used = int((self.pages.tier == TIER_FAST).sum())
         room = max(self._fast_room(h, fast_used), 0)
-        n_fast = min(room, n_pages)
+        # the quota may over-commit; the physical fast tier cannot
+        n_fast = min(room, max(self.fast_capacity - fast_used, 0), n_pages)
         self.pages.tier[take[:n_fast]] = TIER_FAST
         self.pages.tier[take[n_fast:]] = TIER_SLOW
         self.pages.owner[take] = h
@@ -228,6 +229,10 @@ class HeMemStatic(_BaselineBase):
         tier = self.pages.tier
         promoted = demoted = 0
         budget = self.migration_budget
+        # static partitions may over-commit (sum of quotas > fast_capacity);
+        # the physical fast tier is still finite, so promotions are globally
+        # clamped to the actual free fast slots as well as the quota
+        fast_free = self.fast_capacity - int((tier == TIER_FAST).sum())
         # per-tenant work is O(tenant pages) on the cached grouping — the
         # only O(P) passes this epoch are the cooling update above
         for h in list(self._ewma):
@@ -247,11 +252,13 @@ class HeMemStatic(_BaselineBase):
                 tier[evict] = TIER_SLOW
                 demoted += len(evict)
                 budget -= len(evict)
+                fast_free += len(evict)
                 room = quota - (n_fast - len(evict))
-            promo = hot_slow[: max(min(room, budget, len(hot_slow)), 0)]
+            promo = hot_slow[: max(min(room, budget, fast_free, len(hot_slow)), 0)]
             tier[promo] = TIER_FAST
             promoted += len(promo)
             budget -= len(promo)
+            fast_free -= len(promo)
             if budget <= 0:
                 break
         return self._Result(promoted, demoted)

@@ -49,15 +49,22 @@ def reallocate(
     budget: jax.Array,  # i32[] R: pages of reallocation bandwidth this epoch
     fair_mode: bool = False,
     hysteresis=0.0,
+    need_band=None,
+    donor_band=None,
 ) -> Realloc:
     act = tenants.active
     a, t = tenants.a_miss, tenants.t_miss
     R = budget.astype(jnp.float32)
     band = jnp.asarray(hysteresis, jnp.float32)
+    # Asymmetric trigger bands (PolicyParams.promote_band/demote_band): the
+    # needer and donor thresholds may carry their own hysteresis. ``None``
+    # falls back to the symmetric ``hysteresis`` band (the original engine).
+    nb = band if need_band is None else jnp.asarray(need_band, jnp.float32)
+    db = band if donor_band is None else jnp.asarray(donor_band, jnp.float32)
 
-    need_mask = act & (a > t * (1.0 + band))
+    need_mask = act & (a > t * (1.0 + nb))
     # donors: below target AND holding fast memory. a==0 handled separately.
-    donor_mask = act & (a < t * (1.0 - band)) & (fast_pages > 0)
+    donor_mask = act & (a < t * (1.0 - db)) & (fast_pages > 0)
     zero_donor = donor_mask & (a <= _EPS)
 
     # --- takes ---------------------------------------------------------------

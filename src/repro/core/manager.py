@@ -28,7 +28,7 @@ rare and inherently serial.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +85,20 @@ class EpochResult:
         q = self.stats.queue
         return 0 if q is None else int(q.depth)
 
+    @property
+    def queue_flow(self) -> Tuple[int, int, int]:
+        """(enqueued, drained, cancelled) this epoch — the storm-health
+        observables (scenario ``ResponsivenessStats``); zeros without a
+        queue."""
+        q = self.stats.queue
+        if q is None:
+            return (0, 0, 0)
+        return (
+            int(q.enqueued),
+            int(q.drained_promote) + int(q.drained_demote),
+            int(q.cancelled),
+        )
+
 
 @dataclasses.dataclass
 class MultiEpochResult:
@@ -127,6 +141,24 @@ class MultiEpochResult:
             return np.zeros(len(self), np.int64)
         return np.asarray(q.depth, np.int64)
 
+    @property
+    def queue_flow_per_epoch(self) -> np.ndarray:
+        """i64[k, 3] (enqueued, drained, cancelled) per epoch; zeros
+        without a queue (storm-health telemetry, scenario
+        ``ResponsivenessStats``)."""
+        q = self.stats.queue
+        if q is None:
+            return np.zeros((len(self), 3), np.int64)
+        return np.stack(
+            [
+                np.asarray(q.enqueued, np.int64),
+                np.asarray(q.drained_promote, np.int64)
+                + np.asarray(q.drained_demote, np.int64),
+                np.asarray(q.cancelled, np.int64),
+            ],
+            axis=1,
+        )
+
 
 class CentralManager:
     def __init__(
@@ -148,6 +180,10 @@ class CentralManager:
         data_plane_elems: Optional[int] = None,
         sentinel: bool = False,
         alloc_headroom: int = 0,
+        promote_band: float = -1.0,
+        demote_band: float = -1.0,
+        promote_admission: Optional[int] = None,
+        demote_cooldown: int = 0,
     ):
         """``queue_size > 0`` enables the asynchronous migration data plane
         (DESIGN.md §4): selections are queued and committed by a bounded
@@ -165,12 +201,26 @@ class CentralManager:
         retraces. ``alloc_headroom`` reserves that many fast pages the
         policy never promotes into, so first-touch allocations of new pages
         can land fast (TPP-style allocation reserve, DESIGN.md §8); also
-        traced."""
+        traced.
+
+        Storm guards (DESIGN.md §11, all default-off and traced):
+        ``promote_band``/``demote_band`` give the FMMR needer/donor
+        triggers separate hysteresis (negative = inherit the symmetric
+        ``hysteresis``); ``promote_admission`` caps new enqueues per
+        direction per epoch, tightening under cancel pressure
+        (None = unlimited);
+        ``demote_cooldown`` bars a reheat-cancelled demotion's page from
+        re-selection for that many epochs."""
         assert fast_capacity <= num_pages
         if migration_bandwidth is not None and queue_size == 0:
             raise ValueError(
                 "finite migration_bandwidth requires the queue data plane: "
                 "pass queue_size > 0"
+            )
+        if (promote_admission is not None or demote_cooldown) and queue_size == 0:
+            raise ValueError(
+                "promote_admission / demote_cooldown act on the migration "
+                "queue: pass queue_size > 0"
             )
         self.num_pages = num_pages
         self.max_tenants = max_tenants
@@ -196,6 +246,12 @@ class CentralManager:
             migration_latency=jnp.int32(migration_latency),
             sentinel=jnp.int32(1 if sentinel else 0),
             alloc_headroom=jnp.int32(alloc_headroom),
+            promote_band=jnp.float32(promote_band),
+            demote_band=jnp.float32(demote_band),
+            promote_admission=jnp.int32(
+                -1 if promote_admission is None else promote_admission
+            ),
+            demote_cooldown=jnp.int32(demote_cooldown),
         )
         self.plan_size = int(migration_budget)
         self.queue_size = int(queue_size)
@@ -464,18 +520,22 @@ class CentralManager:
         queue = self._state.queue
         if queue is not None and queue.size:
             qp = np.asarray(queue.page)
+            qd = np.asarray(queue.direction)
             stale = (qp >= 0) & np.isin(qp, ids)
             if stale.any():
+                # only REAL migrations count as cancelled here: a stale
+                # cooldown tombstone (direction 0) was already counted when
+                # its demotion was cancelled, and is simply scrubbed
+                self.queue_cancelled += int((stale & (qd != 0)).sum())
                 qp = qp.copy()
                 qp[stale] = -1
-                qd = np.asarray(queue.direction).copy()
+                qd = qd.copy()
                 qd[stale] = 0
                 self._state = self._state._replace(
                     queue=queue._replace(
                         page=jnp.asarray(qp), direction=jnp.asarray(qd)
                     )
                 )
-                self.queue_cancelled += int(stale.sum())
         if self.pool is not None:
             self.pool.on_free(ids)
 
@@ -685,11 +745,16 @@ class CentralManager:
             raise ValueError(f"unknown poison kind: {kind!r}")
 
     def queue_depth(self) -> int:
-        """In-flight migrations right now (0 when the queue is off)."""
+        """In-flight migrations right now (0 when the queue is off).
+        Counts REAL migrations only — cooldown tombstones (direction 0,
+        ``demote_cooldown``) occupy slots without pending work and sit
+        outside the conservation identity."""
         queue = self._state.queue
         if queue is None or not queue.size:
             return 0
-        return int((np.asarray(queue.page) >= 0).sum())
+        return int(
+            ((np.asarray(queue.page) >= 0) & (np.asarray(queue.direction) != 0)).sum()
+        )
 
     def queue_counters(self) -> Dict[str, int]:
         """Cumulative data-plane counters; conservation must always hold:

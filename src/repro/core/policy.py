@@ -44,6 +44,7 @@ from repro.core.sampler import sample_accesses
 from repro.core.tiling import tiled_cumsum
 from repro.core.types import (
     DIR_DEMOTE,
+    DIR_NONE,
     DIR_PROMOTE,
     TIER_FAST,
     TIER_NONE,
@@ -430,9 +431,18 @@ def _epoch_core(
         params.fast_capacity - params.alloc_headroom - fast_hold.sum(), 0
     )
     realloc_budget = params.migration_budget // 2
+    # asymmetric hysteresis guards: negative band = inherit the symmetric
+    # ``hysteresis`` value, which keeps the default program bit-identical
+    band_need = jnp.where(
+        params.promote_band >= 0, params.promote_band, params.hysteresis
+    )
+    band_donor = jnp.where(
+        params.demote_band >= 0, params.demote_band, params.hysteresis
+    )
     ra = fmmr.reallocate(
         tenants, fast_hold, free_fast, realloc_budget,
         fair_mode=params.fair_mode, hysteresis=params.hysteresis,
+        need_band=band_need, donor_band=band_donor,
     )
     tenants = tenants._replace(flagged=ra.flagged)
     # the R/2 reallocation budget counts BOTH promotions and the demotions
@@ -571,6 +581,15 @@ def _compact(mask, out_len: int, arrays, pads):
     return [jnp.where(keep, a[idx], pad) for a, pad in zip(arrays, pads)]
 
 
+def _real_depth(queue: MigrationQueue) -> jax.Array:
+    """i32[] count of REAL in-flight migrations: occupied slots whose
+    direction is +-1. Cooldown tombstones (direction DIR_NONE) hold their
+    page in the exclusion mask but carry no pending migration, so every
+    depth consumer of the conservation identity must skip them.
+    ``MigrationQueue.depth`` remains the physical slot-occupancy count."""
+    return ((queue.page >= 0) & (queue.direction != DIR_NONE)).sum()
+
+
 def _inflight_mask(state: PolicyState) -> Optional[jax.Array]:
     """bool[P] pages with a queued migration (None when the queue is off)."""
     queue = state.queue
@@ -604,7 +623,12 @@ def _queue_tick(
         room; at most ``migration_bandwidth`` total commits per epoch;
       * overflow — entries that neither drain nor fit the fixed queue are
         dropped newest-first (the policy re-selects them next epoch since
-        the tiers did not change).
+        the tiers did not change);
+      * storm guards (DESIGN.md §11, all default-off) —
+        ``params.promote_admission`` caps new enqueues per direction per
+        tick and tightens under cancel pressure; ``params.demote_cooldown``
+        turns reheat-cancelled demotions into exclusion tombstones so
+        their pages cannot ping-pong straight back into the queue.
 
     With ``bandwidth=BANDWIDTH_UNLIMITED`` and ``latency=0`` every entry
     drains in its enqueue epoch: placements are identical to instant apply
@@ -618,16 +642,74 @@ def _queue_tick(
     heat_bin = bins.bin_of(bins.effective_count(pages, tenants), params.num_bins)
 
     # ---- thrashing / ownership guard on the in-flight entries --------------
-    valid = queue.page >= 0
+    # Slots split into REAL migrations (direction +-1) and TOMBSTONES
+    # (direction DIR_NONE): under ``demote_cooldown`` a reheat-cancelled
+    # demotion parks its page in the queue instead of vacating, so the
+    # in-flight exclusion keeps barring it from re-selection for
+    # ``cooldown`` epochs — the select -> cancel -> re-select ping-pong the
+    # thrash guard otherwise burns enqueue bandwidth on. Tombstones never
+    # drain, never count toward depth/conservation, and expire when the
+    # epoch reaches the expiry stored in ``complete_epoch``. With
+    # cooldown == 0 no tombstone is ever created and the tick is
+    # bit-identical to the pre-guard engine.
+    occupied = queue.page >= 0
+    real = occupied & (queue.direction != DIR_NONE)
+    tomb = occupied & (queue.direction == DIR_NONE)
     qp = jnp.maximum(queue.page, 0)
     owned = pages.owner[qp] >= 0
-    reheat = valid & (queue.direction == DIR_DEMOTE) & (heat_bin[qp] > queue.heat)
-    cancel = valid & (~owned | reheat)
-    keep = valid & ~cancel
+    reheat = real & (queue.direction == DIR_DEMOTE) & (heat_bin[qp] > queue.heat)
+    cancel = real & (~owned | reheat)
+    cooldown = jnp.maximum(params.demote_cooldown, 0)
+    entomb = cancel & reheat & owned & (cooldown > 0)
+    tomb_live = tomb & owned & (epoch < queue.complete_epoch)
+    keep = (real & ~cancel) | entomb | tomb_live
     n_cancel = cancel.sum()
 
     # ---- enqueue: kept entries first (FIFO), then new demotes, promotes ----
     lat = jnp.maximum(params.migration_latency, 0)
+
+    # Same-tick dedupe (queue-conservation fix): a page already carried by
+    # a kept entry — live or tombstone — must never gain a second entry in
+    # the same tick. Manager paths pre-exclude in-flight pages from
+    # selection, but a free -> allocate -> re-select sequence inside one
+    # epoch (or a direct policy caller without the exclusion mask) could
+    # otherwise enqueue the page twice, double-counting it in
+    # ``enqueued == drained + cancelled + dropped + depth``.
+    in_q = (
+        jnp.zeros((P,), bool)
+        .at[jnp.where(keep, queue.page, P)]
+        .set(True, mode="drop")
+    )
+
+    def _dedupe(ids):
+        return jnp.where(in_q[jnp.maximum(ids, 0)], -1, ids)
+
+    d_ids = _dedupe(plan.demote)
+    p_ids = _dedupe(plan.promote)
+
+    # ---- queue admission control (params.promote_admission) ----------------
+    # Cap NEW enqueues per direction at ``clamp`` per tick, tightening to
+    # clamp/2 (clamp/4) when this tick's cancels reach half (all) of the
+    # pre-tick depth — a storm that cancels faster than it drains gets its
+    # inflow throttled instead of livelocking the queue. The cap is
+    # per-direction because a drop-requeue cycle feeds on either side: an
+    # oversubscribed selector floods the queue with promotions after a
+    # phase flip and with rebalance demotions under steady contention; both
+    # overflow the same FIFO and burn the same enqueue work. A rejected
+    # selection never enqueues and is NOT counted: the tiers did not
+    # change, so the policy simply re-selects it next epoch.
+    clamp = params.promote_admission
+    depth_pre = real.sum()
+    sev = jnp.clip((2 * n_cancel) // jnp.maximum(depth_pre, 1), 0, 2)
+    eff = jnp.where(
+        clamp < 0,
+        jnp.int32(jnp.iinfo(jnp.int32).max),
+        jnp.maximum(jnp.maximum(clamp, 0) >> sev, 1),
+    )
+    pv = p_ids >= 0
+    p_ids = jnp.where(pv & (tiled_cumsum(pv.astype(jnp.int32)) <= eff), p_ids, -1)
+    dv = d_ids >= 0
+    d_ids = jnp.where(dv & (tiled_cumsum(dv.astype(jnp.int32)) <= eff), d_ids, -1)
 
     def _new(ids, direction):
         v = ids >= 0
@@ -642,13 +724,17 @@ def _queue_tick(
             jnp.where(v, heat_bin[pid], 0).astype(jnp.int8),
         )
 
-    nd, npr = _new(plan.demote, DIR_DEMOTE), _new(plan.promote, DIR_PROMOTE)
+    nd, npr = _new(d_ids, DIR_DEMOTE), _new(p_ids, DIR_PROMOTE)
+    # entombed slots flip to DIR_NONE and carry their expiry epoch in
+    # ``complete_epoch``; ordinary kept entries pass through unchanged
+    k_dir = jnp.where(entomb, jnp.int8(DIR_NONE), queue.direction)
+    k_cmp = jnp.where(entomb, epoch + cooldown, queue.complete_epoch)
     w_page = jnp.concatenate([jnp.where(keep, queue.page, -1), nd[0], npr[0]])
-    w_dir = jnp.concatenate([queue.direction, nd[1], npr[1]])
+    w_dir = jnp.concatenate([k_dir, nd[1], npr[1]])
     w_enq = jnp.concatenate([queue.enqueue_epoch, nd[2], npr[2]])
-    w_cmp = jnp.concatenate([queue.complete_epoch, nd[3], npr[3]])
+    w_cmp = jnp.concatenate([k_cmp, nd[3], npr[3]])
     w_heat = jnp.concatenate([queue.heat, nd[4], npr[4]])
-    n_new = (plan.promote >= 0).sum() + (plan.demote >= 0).sum()
+    n_new = (p_ids >= 0).sum() + (d_ids >= 0).sum()
 
     # The workspace is already in FIFO order: the surviving queue prefix is
     # front-compacted from the previous tick and new entries append after
@@ -697,8 +783,13 @@ def _queue_tick(
         page=q_page, direction=q_dir, enqueue_epoch=q_enq,
         complete_epoch=q_cmp, heat=q_heat,
     )
+    # depth counts REAL migrations only: tombstones occupy slots but carry
+    # no pending work, so the conservation identity stays exact under
+    # cooldown (the cancel was already counted when the tombstone formed).
+    # Overflow drops can only hit new entries — the kept prefix fits the
+    # fixed queue by construction — so ``dropped`` is real-only too.
     qstats = QueueStats(
-        depth=(q_page >= 0).sum(),
+        depth=((q_page >= 0) & (q_dir != DIR_NONE)).sum(),
         enqueued=n_new,
         drained_promote=n_p,
         drained_demote=n_d,
@@ -791,7 +882,7 @@ def _epoch_step_impl(
     sampled = sample_accesses(sub, state.pending, params.sample_period, exact=exact_sampling)
     depth_before = None
     if state.queue is not None and state.queue.size > 0:
-        depth_before = state.queue.depth
+        depth_before = _real_depth(state.queue)
     pages, tenants, pm, dm, plan, stats = _epoch_core(
         state.pages, state.tenants, sampled, params, max_tenants, plan_size,
         count_clamp, collect_plan=True, exclude=_inflight_mask(state),
@@ -927,7 +1018,7 @@ def _multi_epoch_impl(
         sampled = sample_accesses(
             sub, pending, params.sample_period, exact=exact_sampling, z=z
         )
-        depth_before = st.queue.depth if queue_mode else None
+        depth_before = _real_depth(st.queue) if queue_mode else None
         pages, tenants, pm, dm, plan, stats = _epoch_core(
             st.pages, st.tenants, sampled, params, max_tenants, plan_size,
             count_clamp, collect_plan=collect_plans or queue_mode,

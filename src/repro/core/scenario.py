@@ -386,13 +386,61 @@ ScenarioEvent = Union[Arrive, Depart, ResizeWorkingSet, ShiftWorkingSet,
                       DataPlaneError, TelemetryCorrupt]
 
 
+def _check_window(kind: str, start: int, end: int, period: int) -> None:
+    """Construction-time guards shared by the schedule generators: a
+    degenerate window or period silently yields an empty/endless schedule
+    downstream, so it fails HERE with a clear message (PR 6 validation
+    contract)."""
+    if not (np.isfinite(period) and int(period) > 0):
+        raise ValueError(f"{kind} period must be a positive int, got {period!r}")
+    if not (np.isfinite(start) and int(start) >= 0):
+        raise ValueError(f"{kind} start must be >= 0, got {start!r}")
+    if not (np.isfinite(end) and int(end) > int(start)):
+        raise ValueError(
+            f"{kind} window is empty: end ({end!r}) must be > start ({start!r})"
+        )
+
+
 def pingpong_schedule(name: str, start: int, end: int, period: int) -> Tuple[PingPongShift, ...]:
     """A ping-pong thrash schedule: flip ``name``'s working set every
     ``period`` epochs in ``[start, end)`` — each flip returns the hot set to
     pages the policy may still be draining, so queued demotions keep
     re-heating (the thrashing-guard regime)."""
-    assert period > 0
+    _check_window("pingpong_schedule", start, end, period)
     return tuple(PingPongShift(e, name) for e in range(start, end, period))
+
+
+def diurnal_schedule(
+    name: str,
+    start: int,
+    end: int,
+    period: int,
+    lo: float = 0.2,
+    hi: float = 0.9,
+    set_index: int = 0,
+) -> Tuple[SkewChange, ...]:
+    """Diurnal traffic generator: oscillate ``name``'s hot-set access share
+    sinusoidally between ``lo`` and ``hi`` with the given ``period``
+    (sampled every quarter period) — the day/night load swing that slowly
+    invalidates a learned heat map instead of snapping it (contrast
+    :func:`pingpong_schedule`)."""
+    _check_window("diurnal_schedule", start, end, period)
+    for label, v in (("lo", lo), ("hi", hi)):
+        if not (np.isfinite(v) and 0.0 <= v <= 1.0):
+            raise ValueError(
+                f"diurnal_schedule {label} must be finite in [0, 1], got {v!r}"
+            )
+    if lo > hi:
+        raise ValueError(f"diurnal_schedule needs lo <= hi, got {lo!r} > {hi!r}")
+    mid, amp = (hi + lo) / 2.0, (hi - lo) / 2.0
+    step = max(int(period) // 4, 1)
+    return tuple(
+        SkewChange(
+            e, name, set_index,
+            float(mid + amp * np.sin(2.0 * np.pi * (e - start) / period)),
+        )
+        for e in range(start, end, step)
+    )
 
 
 # ---------------------------------------------------------------- scenario
@@ -491,6 +539,224 @@ def scale_colocation(
     )
 
 
+# ------------------------------------------------- adversarial storm suite
+#
+# Jenga-class storms (PAPERS.md): schedules engineered to provoke
+# promotion/demotion storms rather than model a realistic mix. Each
+# builder composes the validated event vocabulary above, lives in core so
+# the tuner family and the differential tests need only ``src`` on the
+# path (the skewshift precedent), and uses the repo-wide geometry
+# convention fast = P/8 unless told otherwise.
+
+def _storm_geometry(n_pages: int, n_epochs: int, fast_capacity: Optional[int]) -> int:
+    if n_epochs < 8:
+        raise ValueError(f"storm scenarios need n_epochs >= 8, got {n_epochs}")
+    fast = n_pages // 8 if fast_capacity is None else int(fast_capacity)
+    if fast < 16:
+        raise ValueError(
+            f"storm geometry too thin: fast tier of {fast} pages (need >= 16)"
+        )
+    return fast
+
+
+def boundary_straddle_scenario(
+    n_pages: int,
+    n_epochs: int,
+    fast_capacity: Optional[int] = None,
+    epsilon: float = 0.08,
+    period: Optional[int] = None,
+) -> Scenario:
+    """Working set sized at ``fast_capacity ± epsilon``: the ``edge``
+    tenant's hot set oscillates between just-fits and just-overflows, so
+    every flip re-decides which boundary pages deserve the fast tier —
+    the canonical promotion/demotion storm (Jenga §1)."""
+    fast = _storm_geometry(n_pages, n_epochs, fast_capacity)
+    if not (np.isfinite(epsilon) and 0.0 < epsilon < 0.5):
+        raise ValueError(
+            f"boundary_straddle epsilon must be finite in (0, 0.5), got {epsilon!r}"
+        )
+    footprint = 2 * fast
+    lo_frac = (1.0 - epsilon) / 2.0  # hot pages = fast * (1 - epsilon)
+    hi_frac = (1.0 + epsilon) / 2.0  # hot pages = fast * (1 + epsilon)
+    per = max(2, n_epochs // 8) if period is None else period
+    _check_window("boundary_straddle", n_epochs // 4, (3 * n_epochs) // 4, per)
+    flips = tuple(
+        ResizeWorkingSet(e, "edge", 0, hi_frac if i % 2 == 0 else lo_frac)
+        for i, e in enumerate(range(n_epochs // 4, (3 * n_epochs) // 4, per))
+    )
+    return Scenario(
+        name=f"storm_boundary_{n_pages // 1024}k",
+        n_epochs=n_epochs,
+        events=(
+            Arrive(0, WorkloadSpec(
+                "edge", footprint, t_miss=0.3, threads=4,
+                sets=((lo_frac, 0.9),),
+            )),
+            Arrive(0, WorkloadSpec(
+                "kvs", n_pages // 8, t_miss=0.3, threads=4,
+                sets=((0.2, 0.85),),
+            )),
+            Arrive(0, WorkloadSpec("gups", n_pages // 4, threads=6)),
+            *flips,
+        ),
+        description="hot set straddles fast capacity (fast*(1 +- epsilon))",
+    )
+
+
+def correlated_flips_scenario(
+    n_pages: int,
+    n_epochs: int,
+    fast_capacity: Optional[int] = None,
+    n_flippers: int = 3,
+    period: Optional[int] = None,
+) -> Scenario:
+    """Correlated multi-tenant phase flips: every flipper ping-pongs its
+    working set at the SAME epochs, so the migration queue absorbs all
+    tenants' stale-heat churn at once instead of amortizing it."""
+    _storm_geometry(n_pages, n_epochs, fast_capacity)
+    if n_flippers < 2:
+        raise ValueError(f"correlated_flips needs >= 2 flippers, got {n_flippers}")
+    per = max(2, n_epochs // 8) if period is None else period
+    fp = (3 * n_pages) // (8 * n_flippers)
+    flips: List[ScenarioEvent] = []
+    arrivals: List[ScenarioEvent] = []
+    for i in range(n_flippers):
+        nm = f"flip{i}"
+        arrivals.append(Arrive(0, WorkloadSpec(
+            nm, fp, t_miss=0.3, threads=4, sets=((0.25, 0.85),),
+        )))
+        flips.extend(pingpong_schedule(nm, n_epochs // 4, (3 * n_epochs) // 4, per))
+    return Scenario(
+        name=f"storm_correlated_{n_pages // 1024}k",
+        n_epochs=n_epochs,
+        events=(
+            *arrivals,
+            Arrive(0, WorkloadSpec("gups", n_pages // 4, threads=6)),
+            *flips,
+        ),
+        description=f"{n_flippers} tenants ping-pong in lockstep",
+    )
+
+
+def burst_arrivals_scenario(
+    n_pages: int,
+    n_epochs: int,
+    fast_capacity: Optional[int] = None,
+    burst: int = 3,
+) -> Scenario:
+    """Open-loop burst arrivals: cohorts of tenants register and allocate
+    in one epoch regardless of system state (open-loop: the schedule never
+    waits for the queue to drain), each cohort departing as the next
+    lands — allocation-reserve pressure plus mass ownership churn."""
+    _storm_geometry(n_pages, n_epochs, fast_capacity)
+    if burst < 1:
+        raise ValueError(f"burst_arrivals burst must be >= 1, got {burst}")
+    fp = n_pages // 16
+    b1, b2, b3 = n_epochs // 4, n_epochs // 2, (3 * n_epochs) // 4
+    events: List[ScenarioEvent] = [
+        Arrive(0, WorkloadSpec(
+            "kvs", n_pages // 4, t_miss=0.3, threads=4, sets=((0.2, 0.85),),
+        )),
+        Arrive(0, WorkloadSpec("gups", n_pages // 8, threads=6)),
+    ]
+    for j in range(burst):
+        events.append(Arrive(b1, WorkloadSpec(f"burst0_{j}", fp, threads=2)))
+    for j in range(burst):  # cohort 0 leaves exactly as cohort 1 lands
+        events.append(Depart(b2, f"burst0_{j}"))
+        events.append(Arrive(b2, WorkloadSpec(f"burst1_{j}", fp, threads=2)))
+    for j in range(burst):
+        events.append(Depart(b3, f"burst1_{j}"))
+    return Scenario(
+        name=f"storm_burst_{n_pages // 1024}k",
+        n_epochs=n_epochs,
+        events=tuple(events),
+        description=f"open-loop arrival bursts of {burst} tenants",
+    )
+
+
+def diurnal_scenario(
+    n_pages: int,
+    n_epochs: int,
+    fast_capacity: Optional[int] = None,
+    lo: float = 0.3,
+    hi: float = 0.95,
+) -> Scenario:
+    """Diurnal load swing: the ``web`` tenant's hot-set share follows a
+    sine between ``lo`` and ``hi`` (:func:`diurnal_schedule`) while a
+    batch tenant soaks the slack — the slow phase change that rewards a
+    policy for NOT chasing every sample."""
+    _storm_geometry(n_pages, n_epochs, fast_capacity)
+    swings = diurnal_schedule(
+        "web", 1, n_epochs, max(n_epochs // 2, 4), lo=lo, hi=hi
+    )
+    return Scenario(
+        name=f"storm_diurnal_{n_pages // 1024}k",
+        n_epochs=n_epochs,
+        events=(
+            Arrive(0, WorkloadSpec(
+                "web", (3 * n_pages) // 8, t_miss=0.3, threads=4,
+                sets=((0.15, lo),),
+            )),
+            Arrive(0, WorkloadSpec("gups", n_pages // 4, threads=6)),
+            *swings,
+        ),
+        description="sinusoidal hot-share swing (day/night traffic)",
+    )
+
+
+STORM_FAMILIES = ("boundary", "correlated", "burst", "diurnal")
+
+_STORM_MAKERS = {
+    "boundary": boundary_straddle_scenario,
+    "correlated": correlated_flips_scenario,
+    "burst": burst_arrivals_scenario,
+    "diurnal": diurnal_scenario,
+}
+
+
+def storm_scenario(family: str, n_pages: int, n_epochs: int, **kw) -> Scenario:
+    """Build one storm family by name (``STORM_FAMILIES``)."""
+    if family not in _STORM_MAKERS:
+        raise KeyError(
+            f"unknown storm family {family!r}; choose from {STORM_FAMILIES}"
+        )
+    return _STORM_MAKERS[family](n_pages, n_epochs, **kw)
+
+
+def adversarial_scenario(
+    n_pages: int,
+    n_epochs: int,
+    fast_capacity: Optional[int] = None,
+    epsilon: float = 0.08,
+) -> Scenario:
+    """The composite storm the ``adversarial`` tuner family trains on: a
+    boundary-straddling working set whose resize flips are phase-locked
+    with a ping-pong flipper — boundary pressure and correlated stale heat
+    hitting the queue in the same epochs."""
+    base = boundary_straddle_scenario(
+        n_pages, n_epochs, fast_capacity=fast_capacity, epsilon=epsilon
+    )
+    per = max(2, n_epochs // 8)
+    flip_spec = Arrive(0, WorkloadSpec(
+        "flip", n_pages // 8, t_miss=0.3, threads=4, sets=((0.25, 0.85),),
+    ))
+    # replace the plain kvs tenant with the flipper, keeping total footprint
+    events = tuple(
+        ev for ev in base.events
+        if not (isinstance(ev, Arrive) and ev.spec.name == "kvs")
+    )
+    return Scenario(
+        name=f"storm_{n_pages // 1024}k",
+        n_epochs=n_epochs,
+        events=(
+            flip_spec,
+            *events,
+            *pingpong_schedule("flip", n_epochs // 4, (3 * n_epochs) // 4, per),
+        ),
+        description="boundary straddle + phase-locked ping-pong composite",
+    )
+
+
 # ------------------------------------------------------------------ result
 @dataclass
 class PhaseStats:
@@ -567,6 +833,185 @@ def _phase_stats(history: List[EpochRecord], start: int, end: int, label: str) -
     )
 
 
+# --------------------------------------------------------- responsiveness
+def recovery_epochs(
+    history,
+    event_epoch: int,
+    frac: float = 0.95,
+    baseline_window: int = 8,
+    tenant: Optional[str] = None,
+) -> Tuple[int, float]:
+    """Jenga-style responsiveness: epochs after ``event_epoch`` until
+    throughput regains ``frac`` of its pre-event mean, measured from the
+    event to the END of the post-event dip (with chunked records the first
+    post-event epochs can still carry pre-shift telemetry, so the dip is
+    located first; no dip at all counts as instant recovery).
+
+    ``tenant`` selects one tenant's throughput as the observable — the
+    right probe for a working-set shift, because the aggregate MASKS the
+    dip (a missing LS tenant frees bandwidth and the batch tenants speed
+    up). ``None`` scores the aggregate. Returns (epochs, baseline).
+
+    This is the PR 8 online-tuner metric promoted into the scenario
+    engine; ``repro.launch.hillclimb`` re-exports it."""
+    if tenant is None:
+        agg = np.array([sum(r.throughput.values()) for r in history], float)
+    else:
+        agg = np.array([r.throughput.get(tenant, 0.0) for r in history], float)
+    lo = max(0, event_epoch - baseline_window)
+    base = float(agg[lo:event_epoch].mean()) if event_epoch > lo else float(agg.mean())
+    after = agg[event_epoch:]
+    target = frac * base
+    below = after < target
+    if not below.any():
+        return 0, base
+    dip = int(np.argmax(below))
+    hit = after[dip:] >= target
+    if not hit.any():
+        return len(after), base
+    return dip + int(np.argmax(hit)), base
+
+
+def churn_recovery_epochs(history, event_epoch: int) -> int:
+    """Queue-axis twin of :func:`recovery_epochs`: epochs after
+    ``event_epoch`` until the migration queue's enqueue/drain balance
+    first goes non-positive — the epoch the control plane stops selecting
+    more work than the data plane commits, i.e. the queue storm the event
+    kicked off has subsided. A policy whose balance never recovers (it
+    keeps overflowing the FIFO with selections that are dropped and
+    re-selected every epoch) scores the whole remaining window — the
+    saturated worst case the adversarial bench gates against.
+
+    Throughput masks this failure mode entirely: two managers with
+    identical committed migrations (identical throughput timelines) can
+    differ 10x in enqueue work, and only the flow counters
+    (``EpochRecord.queue_enqueued``/``queue_drained``) expose it."""
+    for i in range(event_epoch, len(history)):
+        if history[i].queue_enqueued - history[i].queue_drained <= 0:
+            return i - event_epoch
+    return len(history) - event_epoch
+
+
+@dataclass
+class ResponsivenessStats(PhaseStats):
+    """:class:`PhaseStats` plus the adversarial-dynamics observables
+    (DESIGN.md §11): per-event epochs-to-recover on each affected tenant's
+    own throughput, and the phase's storm-health counters.
+
+    ``pingpong_rate`` is cancelled/enqueued — the fraction of enqueue work
+    burned on migrations that were later cancelled; every thrash-guard
+    reheat cancel is one leg of a promote <-> demote ping-pong on that
+    page, so a rate near 1 means the queue is churning, not migrating.
+    ``cancel_ratio`` (cancelled/drained) is the livelock indicator the
+    adversarial bench gates on."""
+
+    recovery: Dict[str, int] = field(default_factory=dict)
+    enqueued: int = 0
+    drained: int = 0
+    cancelled: int = 0
+    cancel_ratio: float = 0.0
+    pingpong_rate: float = 0.0
+
+    def to_jsonable(self) -> dict:
+        d = super().to_jsonable()
+        d.update(
+            recovery_epochs=self.recovery,
+            queue_enqueued=self.enqueued,
+            queue_drained=self.drained,
+            queue_cancelled=self.cancelled,
+            cancel_ratio=self.cancel_ratio,
+            pingpong_rate=self.pingpong_rate,
+        )
+        return d
+
+
+def _affected_tenants(evs) -> List[str]:
+    """Tenants whose own throughput the recovery probe should watch. An
+    arriving tenant has no pre-event baseline and a departing one no
+    post-event signal, so both are skipped; machine-/bandwidth-level
+    events affect everyone and fall back to the aggregate probe."""
+    names = set()
+    for ev in evs:
+        if isinstance(ev, (Arrive, Depart)):
+            continue
+        nm = getattr(ev, "name", None)
+        if nm is not None:
+            names.add(nm)
+    return sorted(names)
+
+
+def responsiveness_phases(
+    result: ScenarioResult,
+    frac: float = 0.95,
+    baseline_window: int = 8,
+) -> List["ResponsivenessStats"]:
+    """Recompute ``result``'s phases as :class:`ResponsivenessStats`.
+
+    Each phase opened by events gets per-affected-tenant epochs-to-recover
+    (measured over the remaining history, not just the phase — a dip may
+    outlive its phase); phases whose events name no tenant use the
+    aggregate probe under the key ``"*"``. Storm-health counters sum the
+    per-epoch queue flow the simulator records."""
+    history = result.history
+    out: List[ResponsivenessStats] = []
+    for ps in result.phases:
+        recs = history[ps.start:ps.end]
+        enq = sum(r.queue_enqueued for r in recs)
+        drn = sum(r.queue_drained for r in recs)
+        can = sum(r.queue_cancelled for r in recs)
+        recovery: Dict[str, int] = {}
+        evs = result.scenario.events_at(ps.start)
+        if evs and ps.start > 0:  # epoch-0 events have no baseline window
+            names = _affected_tenants(evs)
+            if names:
+                for nm in names:
+                    ep, _base = recovery_epochs(
+                        history, ps.start, frac=frac,
+                        baseline_window=baseline_window, tenant=nm,
+                    )
+                    recovery[nm] = ep
+            else:
+                ep, _base = recovery_epochs(
+                    history, ps.start, frac=frac, baseline_window=baseline_window
+                )
+                recovery["*"] = ep
+        out.append(ResponsivenessStats(
+            **vars(ps),
+            recovery=recovery,
+            enqueued=enq,
+            drained=drn,
+            cancelled=can,
+            cancel_ratio=float(can) / max(drn, 1),
+            pingpong_rate=float(can) / max(enq, 1),
+        ))
+    return out
+
+
+def storm_health(result: ScenarioResult, frac: float = 0.95) -> dict:
+    """Scenario-level storm summary the adversarial bench gates on:
+    worst per-event recovery, whole-run cancel/drain ratio and ping-pong
+    rate, plus the per-phase breakdown."""
+    phases = responsiveness_phases(result, frac=frac)
+    enq = sum(p.enqueued for p in phases)
+    drn = sum(p.drained for p in phases)
+    can = sum(p.cancelled for p in phases)
+    worst = max(
+        (max(p.recovery.values()) for p in phases if p.recovery), default=0
+    )
+    return {
+        "worst_recovery_epochs": int(worst),
+        "recovery_epochs": {
+            f"{p.start}:{p.label}": p.recovery for p in phases if p.recovery
+        },
+        "enqueued": int(enq),
+        "drained": int(drn),
+        "cancelled": int(can),
+        "cancel_ratio": float(can) / max(drn, 1),
+        "pingpong_rate": float(can) / max(enq, 1),
+        "phases": [p.to_jsonable() for p in phases],
+    }
+
+
 # ---------------------------------------------------------------- executor
 def _collect_phases(sim: ColocationSim, scenario: Scenario, base: int) -> ScenarioResult:
     history = sim.history[base : base + scenario.n_epochs]
@@ -630,6 +1075,12 @@ class SweepPoint:
     num_bins: Optional[int] = None
     alloc_headroom: Optional[int] = None
     fast_capacity: Optional[int] = None  # tier size is traced too (≤ num_pages)
+    # storm guards (DESIGN.md §11) — default-off traced knobs; admission
+    # and cooldown act on the queue tick, so they need queue_size > 0
+    promote_band: Optional[float] = None
+    demote_band: Optional[float] = None
+    promote_admission: Optional[int] = None
+    demote_cooldown: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -780,7 +1231,11 @@ def run_sweep(
         )
         if p.migration_bandwidth is not None:
             mgr_kw["migration_bandwidth"] = p.migration_bandwidth
-        for knob in ("ewma_lambda", "hysteresis", "num_bins", "alloc_headroom"):
+        for knob in (
+            "ewma_lambda", "hysteresis", "num_bins", "alloc_headroom",
+            "promote_band", "demote_band", "promote_admission",
+            "demote_cooldown",
+        ):
             v = getattr(p, knob)
             if v is not None:
                 mgr_kw[knob] = v

@@ -167,6 +167,13 @@ class EpochRecord:
     stalled: bool
     migration_bytes: float = 0.0  # committed bytes charged to the slow tier
     queue_depth: int = 0  # in-flight migrations after the epoch
+    # storm-health flow (queue-mode backends; zeros otherwise): entries
+    # enqueued / drained / cancelled during the epoch. Phase-level
+    # cancel/drain ratios and ping-pong rates (ResponsivenessStats) sum
+    # these per-epoch deltas.
+    queue_enqueued: int = 0
+    queue_drained: int = 0
+    queue_cancelled: int = 0
 
 
 class ColocationSim:
@@ -335,7 +342,7 @@ class ColocationSim:
 
     def _record(
         self, names, miss, tput, measured, fast_pages, mig_frac, fast_op, slow_op,
-        migrated, stalled, queue_depth=0,
+        migrated, stalled, queue_depth=0, queue_flow=(0, 0, 0),
     ) -> EpochRecord:
         """Assemble the per-epoch telemetry dicts from the tenant-axis arrays."""
         quant = {}
@@ -357,6 +364,9 @@ class ColocationSim:
             stalled=stalled,
             migration_bytes=float(migrated) * self.machine.page_bytes,
             queue_depth=int(queue_depth),
+            queue_enqueued=int(queue_flow[0]),
+            queue_drained=int(queue_flow[1]),
+            queue_cancelled=int(queue_flow[2]),
         )
         self.history.append(rec)
         return rec
@@ -387,6 +397,7 @@ class ColocationSim:
         stalled = self._stall_epochs >= 1.0
         migrated = 0
         queue_depth = 0
+        queue_flow = (0, 0, 0)
         if stalled:
             self._stall_epochs -= 1.0
             # the policy thread is frozen but queued migrations are still
@@ -403,6 +414,7 @@ class ColocationSim:
                 else int(result.plan.num_promote) + int(result.plan.num_demote)
             )
             queue_depth = getattr(result, "queue_depth", 0)
+            queue_flow = getattr(result, "queue_flow", (0, 0, 0))
             mig_bytes = migrated * m.page_bytes
             mig_time = mig_bytes / (m.migration_GBps * 1e9)
             # a backend whose drain is ALREADY paced by a finite bandwidth
@@ -428,7 +440,7 @@ class ColocationSim:
         fast_pages = (page_mask & (owner >= 0)[None, :] & (tier == TIER_FAST)[None, :]).sum(axis=1)
         return self._record(
             names, miss, tput, measured, fast_pages, mig_frac, fast_op, slow_op,
-            migrated, stalled, queue_depth=queue_depth,
+            migrated, stalled, queue_depth=queue_depth, queue_flow=queue_flow,
         )
 
     def _chunk_prepare(self, arrays=None, tier=None):
@@ -478,6 +490,11 @@ class ColocationSim:
             )[:, handles]
         migrated = res.migrated_per_epoch
         depth = res.queue_depth_per_epoch
+        flows = (
+            res.queue_flow_per_epoch
+            if hasattr(res, "queue_flow_per_epoch")
+            else np.zeros((k, 3), np.int64)
+        )
         measured_k = np.asarray(res.stats.fmmr_ewma)[:, handles]
         if tier_end is None:
             tier_end = np.asarray(self.backend.tiers())
@@ -491,6 +508,7 @@ class ColocationSim:
             self._record(
                 names, miss, threads / lat, measured_k[i], fastp[i], mig_frac,
                 fast_op, slow_op, migrated[i], stalled=False, queue_depth=depth[i],
+                queue_flow=flows[i],
             )
         return self.history[-k:]
 

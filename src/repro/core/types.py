@@ -68,6 +68,30 @@ class PolicyParams(NamedTuple):
     # (free -> allocate) keeps regenerating the reserve. Traced: the
     # serving benchmark legs flip it without retracing.
     alloc_headroom: jnp.int32 = 0
+    # Adversarial-dynamics guards (DESIGN.md §11) — every knob defaults OFF
+    # and is traced, so guarded and unguarded runs share one compiled
+    # program and the default program is bit-identical to the pre-guard
+    # engine.
+    # Asymmetric FMMR hysteresis: separate trigger bands for needers
+    # (promotion pressure) and donors (demotion pressure). A tenant only
+    # becomes a needer above ``t * (1 + promote_band)`` and a donor below
+    # ``t * (1 - demote_band)``. Negative = inherit the symmetric
+    # ``hysteresis`` band.
+    promote_band: jnp.float32 = -1.0
+    demote_band: jnp.float32 = -1.0
+    # Promotion admission control: cap on NEW promotion enqueues per queue
+    # tick. The effective cap tightens (halves, then quarters) as the
+    # tick's cancel count rises against the pre-tick queue depth — graceful
+    # degradation under promotion/demotion storms instead of queue
+    # livelock. Negative = unlimited (bit-identical to no admission).
+    promote_admission: jnp.int32 = -1
+    # Queue-aware victim cooldown: epochs a reheat-cancelled demotion's
+    # page stays barred from re-selection. The cancelled entry leaves a
+    # tombstone (direction DIR_NONE) in the queue, which keeps the page in
+    # the in-flight exclusion mask until the tombstone expires — breaking
+    # the select -> cancel -> re-select ping-pong that burns enqueue
+    # bandwidth. 0 = off (cancelled entries vacate immediately).
+    demote_cooldown: jnp.int32 = 0
 
     @classmethod
     def from_profile(cls, name: str, **overrides) -> "PolicyParams":

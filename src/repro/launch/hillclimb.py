@@ -62,6 +62,8 @@ from repro.core.scenario import (
     ShiftWorkingSet,
     SkewChange,
     SweepPoint,
+    adversarial_scenario,
+    recovery_epochs,
     run_sweep,
 )
 from repro.core.simulator import WorkloadSpec
@@ -193,39 +195,11 @@ def scalarize(
     return float(gain - p99_weight * pen)
 
 
-def recovery_epochs(
-    history: Sequence,
-    event_epoch: int,
-    frac: float = 0.95,
-    baseline_window: int = 8,
-    tenant: Optional[str] = None,
-) -> Tuple[int, float]:
-    """Jenga-style responsiveness: epochs after ``event_epoch`` until
-    throughput regains ``frac`` of its pre-event mean, measured from the
-    event to the END of the post-event dip (with chunked records the first
-    post-event epochs can still carry pre-shift telemetry, so the dip is
-    located first; no dip at all counts as instant recovery).
-
-    ``tenant`` selects one tenant's throughput as the observable — the
-    right probe for a working-set shift, because the aggregate MASKS the
-    dip (a missing LS tenant frees bandwidth and the batch tenants speed
-    up). ``None`` scores the aggregate. Returns (epochs, baseline)."""
-    if tenant is None:
-        agg = np.array([sum(r.throughput.values()) for r in history], float)
-    else:
-        agg = np.array([r.throughput.get(tenant, 0.0) for r in history], float)
-    lo = max(0, event_epoch - baseline_window)
-    base = float(agg[lo:event_epoch].mean()) if event_epoch > lo else float(agg.mean())
-    after = agg[event_epoch:]
-    target = frac * base
-    below = after < target
-    if not below.any():
-        return 0, base
-    dip = int(np.argmax(below))
-    hit = after[dip:] >= target
-    if not hit.any():
-        return len(after), base
-    return dip + int(np.argmax(hit)), base
+# recovery_epochs (the Jenga-style responsiveness metric this tuner scores
+# online candidates on) moved to ``repro.core.scenario`` in the adversarial
+# hardening pass; it is re-imported above so every existing call site —
+# benchmarks, tests, the online tuner — keeps working unchanged.
+assert recovery_epochs is not None  # re-exported from repro.core.scenario
 
 
 # ------------------------------------------------------- scenario families
@@ -260,9 +234,9 @@ def skewshift_scenario(n_pages: int, n_epochs: int, shift_epoch: Optional[int] =
 
 
 # family -> needs the bounded data plane (queue-mode shapes)
-FAMILY_BOUNDED = {"thrash": True}
+FAMILY_BOUNDED = {"thrash": True, "adversarial": True}
 FAMILY_MAX_TENANTS = {"sweep": 16}
-FAMILIES = ("colocation", "thrash", "skewshift", "faults", "sweep")
+FAMILIES = ("colocation", "thrash", "skewshift", "faults", "sweep", "adversarial")
 
 
 def family_geometry(
@@ -295,6 +269,12 @@ def family_geometry(
 def family_scenario(family: str, geom: TunerGeometry) -> Scenario:
     if family == "skewshift":
         return skewshift_scenario(geom.n_pages, geom.n_epochs)
+    if family == "adversarial":
+        # composite storm (core/scenario.py): boundary straddle phase-locked
+        # with a ping-pong flipper — src-only path, like skewshift
+        return adversarial_scenario(
+            geom.n_pages, geom.n_epochs, fast_capacity=geom.fast
+        )
     try:
         from benchmarks import dynamic_workload as dw
     except ImportError as e:  # pragma: no cover - depends on caller's path

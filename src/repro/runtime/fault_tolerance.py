@@ -180,7 +180,7 @@ class DispatchSupervisor:
 
 
 _BIGINT_KEY = "$bigint"
-_PARAM_FLOAT_FIELDS = ("ewma_lambda", "hysteresis")
+_PARAM_FLOAT_FIELDS = ("ewma_lambda", "hysteresis", "promote_band", "demote_band")
 
 
 def _sanitize_meta(obj):

@@ -119,7 +119,8 @@ def test_resume_state_mismatch_rejected(tmp_path):
 def test_profiles_committed():
     # the bench references these names; deleting one must be loud (the perf
     # gate checks the same invariant against BENCH_autotune.json)
-    assert {"colocation_4k", "thrash_4k", "skewshift_4k"} <= set(profile_names())
+    assert {"colocation_4k", "thrash_4k", "skewshift_4k",
+            "storm_64k"} <= set(profile_names())
 
 
 @pytest.mark.parametrize("name", profile_names())
@@ -137,7 +138,9 @@ def test_profile_roundtrip_one_epoch(name):
     # the profile rebuilds a working manager at its tuned geometry...
     mgr = CentralManager(**manager_kwargs(name))
     for f in ("migration_budget", "sample_period", "ewma_lambda",
-              "hysteresis", "num_bins", "alloc_headroom"):
+              "hysteresis", "num_bins", "alloc_headroom",
+              "promote_band", "demote_band", "promote_admission",
+              "demote_cooldown"):
         assert float(getattr(mgr.params, f)) == pytest.approx(
             float(prof["params"][f]), abs=0), f
     # ...that survives one real epoch

@@ -23,6 +23,8 @@ from repro.core import policy
 from repro.core.manager import CentralManager
 from repro.core.types import (
     DIR_DEMOTE,
+    DIR_NONE,
+    DIR_PROMOTE,
     TIER_FAST,
     MigrationQueue,
     PolicyParams,
@@ -33,12 +35,13 @@ from repro.core.types import (
 P, T, FAST, BUDGET = 128, 3, 32, 16
 
 
-def _mgr(queue_size=0, bandwidth=None, latency=0, data_plane_elems=None, seed=3):
+def _mgr(queue_size=0, bandwidth=None, latency=0, data_plane_elems=None, seed=3,
+         **kw):
     return CentralManager(
         num_pages=P, fast_capacity=FAST, migration_budget=BUDGET,
         max_tenants=T, sample_period=1, exact_sampling=True, seed=seed,
         queue_size=queue_size, migration_bandwidth=bandwidth,
-        migration_latency=latency, data_plane_elems=data_plane_elems,
+        migration_latency=latency, data_plane_elems=data_plane_elems, **kw,
     )
 
 
@@ -206,6 +209,225 @@ class TestConservation:
         m.run_epochs(12, counts=_counts(rng))
         c = m.queue_counters()
         assert c["enqueued"] == c["drained"] + c["cancelled"] + c["dropped"] + c["depth"]
+
+
+def _queue_dirs(m):
+    """(real demote pages, real promote pages, tombstone pages) sets."""
+    q = m._state.queue
+    page, d = np.asarray(q.page), np.asarray(q.direction)
+    occ = page >= 0
+    return (
+        set(page[occ & (d == DIR_DEMOTE)].tolist()),
+        set(page[occ & (d == DIR_PROMOTE)].tolist()),
+        set(page[occ & (d == DIR_NONE)].tolist()),
+    )
+
+
+class TestStormGuards:
+    """The DESIGN.md §11 policy-hardening knobs. Every guard defaults OFF
+    and the off-state is bit-identical to the ungarded engine (locked here
+    and by the golden traces); on-states are behavioral contracts."""
+
+    def test_guards_require_queue(self):
+        """Admission / cooldown act on the migration queue: configuring them
+        on an instant-apply manager must fail loudly, not silently no-op."""
+        with pytest.raises(ValueError, match="queue_size"):
+            _mgr(queue_size=0, promote_admission=2)
+        with pytest.raises(ValueError, match="queue_size"):
+            _mgr(queue_size=0, demote_cooldown=2)
+        _mgr(queue_size=0, promote_band=0.1, demote_band=0.1)  # bands: fine
+
+    def test_explicit_sentinels_bit_identical_to_defaults(self):
+        """Passing the documented off-values explicitly is the same machine
+        as not passing the knobs at all — every state leaf, every epoch."""
+        rng = np.random.default_rng(21)
+        a = _mgr(queue_size=24, bandwidth=2, latency=1)
+        b = _mgr(queue_size=24, bandwidth=2, latency=1,
+                 promote_band=-1.0, demote_band=-1.0,
+                 promote_admission=None, demote_cooldown=0)
+        _populate(a), _populate(b)
+        for e in range(12):
+            c = _counts(rng)
+            a.record_access(c), b.record_access(c)
+            a.run_epoch(), b.run_epoch()
+            for x, y in zip(jax.tree.leaves(a._state), jax.tree.leaves(b._state)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y), str(e))
+        assert a.queue_counters() == b.queue_counters()
+
+    def test_promote_admission_caps_new_enqueues_per_epoch(self):
+        """With the clamp on, at most ``promote_admission`` NEW promotion
+        entries appear per epoch; the unclamped twin admits more."""
+        rng = np.random.default_rng(22)
+        adm = 2
+        a = _mgr(queue_size=64, bandwidth=2, promote_admission=adm, seed=5)
+        b = _mgr(queue_size=64, bandwidth=2, seed=5)
+        _populate(a), _populate(b)
+        burst_seen = False
+        prev_a, prev_b = set(), set()
+        for e in range(8):
+            # rotating wide hot set: keeps promotion pressure above the clamp
+            c = np.zeros(P, np.int64)
+            hot = rng.choice(P, 48, replace=False)
+            c[hot] = rng.integers(100, 500, 48)
+            a.record_access(c), b.record_access(c)
+            a.run_epoch(), b.run_epoch()
+            prom_a, prom_b = _queue_dirs(a)[1], _queue_dirs(b)[1]
+            assert len(prom_a - prev_a) <= adm, e
+            burst_seen |= len(prom_b - prev_b) > adm
+            prev_a, prev_b = prom_a, prom_b
+            # rejected selections are not half-admitted anywhere
+            ca = a.queue_counters()
+            assert ca["enqueued"] == (
+                ca["drained"] + ca["cancelled"] + ca["dropped"] + ca["depth"]
+            ), e
+        assert burst_seen, "clamp never bound: workload too tame"
+
+    def test_demote_cooldown_tombstones_bar_reselection(self):
+        """A reheat-cancelled demotion leaves a tombstone: the cancel is
+        counted once, the page is barred from re-selection while the
+        tombstone lives, and the slot is reclaimed at expiry."""
+        cooldown = 3
+        m = _mgr(queue_size=64, bandwidth=0, demote_cooldown=cooldown)
+        h0, p0 = _populate(m)[0]
+        cold_fast = [int(p) for p in p0 if m.tier_of([p])[0] == TIER_FAST][:4]
+        hot = [int(p) for p in p0 if int(p) not in cold_fast]
+        c = np.zeros(P, np.int64)
+        c[hot] = 50
+        m.record_access(c)
+        m.run_epoch()
+        queued_dem = _queue_dirs(m)[0]
+        assert queued_dem & set(cold_fast), "expected queued demotions"
+        # reheat the queued pages -> cancel + entomb instead of plain drop
+        c2 = np.zeros(P, np.int64)
+        c2[sorted(queued_dem)] = 500
+        m.record_access(c2)
+        r = m.run_epoch()
+        assert int(r.stats.queue.cancelled) > 0
+        dem, _, tombs = _queue_dirs(m)
+        assert queued_dem <= tombs, "cancelled demotions must become tombstones"
+        assert not (dem & queued_dem)
+        # tombstones are not pending work: the real depth excludes them
+        assert m.queue_depth() == len(dem) + len(_queue_dirs(m)[1])
+        # go cold again: while the tombstone lives the page must NOT be
+        # re-selected for demotion (this is the anti-ping-pong bar)
+        for e in range(cooldown - 1):
+            m.record_access(c)  # original heat: queued_dem pages cold again
+            m.run_epoch()
+            dem, _, tombs = _queue_dirs(m)
+            assert not (dem & queued_dem), (e, dem, queued_dem)
+        # after expiry the slots are reclaimed and the pages are selectable
+        reappeared = False
+        for e in range(6):
+            m.record_access(c)
+            m.run_epoch()
+            dem, _, tombs = _queue_dirs(m)
+            assert not (tombs & queued_dem) or e == 0
+            reappeared |= bool(dem & queued_dem)
+        assert reappeared, "page never selectable again after cooldown"
+        cc = m.queue_counters()
+        assert cc["enqueued"] == (
+            cc["drained"] + cc["cancelled"] + cc["dropped"] + cc["depth"]
+        )
+
+    def test_hysteresis_bands_gate_reallocation_triggers(self):
+        """The asymmetric bands move the needer/donor trigger thresholds:
+        a tenant 10% over target is a needer under the default band but not
+        under ``need_band=0.2``; a tenant 10% under target donates under the
+        default band but not under ``donor_band=0.2``."""
+        from repro.core import fmmr
+        from repro.core.types import TenantState
+
+        ts = TenantState.create(2)._replace(
+            active=jnp.asarray([True, True]),
+            t_miss=jnp.asarray([0.2, 0.2], jnp.float32),
+            # tenant 0: a=0.22 (10% over target); tenant 1: a=0.18 (10% under)
+            a_miss=jnp.asarray([0.22, 0.18], jnp.float32),
+            arrival=jnp.asarray([0, 1], jnp.int32),
+        )
+        fast = jnp.asarray([8, 24], jnp.int32)
+
+        def go(**kw):
+            return fmmr.reallocate(ts, fast, jnp.int32(0), jnp.int32(8), **kw)
+
+        base = go(hysteresis=0.0)
+        assert int(base.give[0]) > 0, "10%-over tenant must be served by default"
+        assert int(base.take[1]) > 0, "10%-under tenant must donate by default"
+        banded = go(hysteresis=0.0, need_band=0.2, donor_band=0.2)
+        assert int(banded.give[0]) == 0, "need_band=0.2 must absorb a 10% excursion"
+        assert int(banded.take[1]) == 0, "donor_band=0.2 must absorb a 10% dip"
+        # asymmetry: each band gates only its own side. With the donor side
+        # gated the needer is still recognized — unservable, so flagged.
+        only_donor = go(hysteresis=0.0, need_band=0.0, donor_band=0.2)
+        assert int(only_donor.take[1]) == 0
+        assert bool(only_donor.flagged[0])
+        only_need = go(hysteresis=0.0, need_band=0.2, donor_band=0.0)
+        assert int(only_need.give[0]) == 0
+        # None falls back to the symmetric hysteresis (the original engine)
+        sym = go(hysteresis=0.2)
+        assert int(sym.give[0]) == 0 and int(sym.take[1]) == 0
+
+
+class TestStormConservation:
+    """The cancel-requeue accounting lock: a storm of tenant churn plus
+    heat flips over a tiny queue/bandwidth must keep the conservation
+    identity exact, never hold two live entries for one page, and never
+    trip the in-trace sentinel — guards off AND on."""
+
+    GUARDED = dict(promote_admission=3, demote_cooldown=4,
+                   promote_band=0.15, demote_band=0.02)
+
+    def _storm(self, seed, **guard_kw):
+        rng = np.random.default_rng(seed)
+        m = CentralManager(
+            num_pages=P, fast_capacity=FAST, migration_budget=BUDGET,
+            max_tenants=4, sample_period=1, exact_sampling=True, seed=seed,
+            queue_size=8, migration_bandwidth=2, migration_latency=1,
+            sentinel=True, **guard_kw,
+        )
+        tenants = {}
+        for i in range(3):
+            h = m.register(0.3)
+            tenants[h] = m.allocate(h, 30)
+        for step in range(40):
+            op = rng.integers(0, 4)
+            if op == 0 and len(tenants) > 1:
+                h = list(tenants)[rng.integers(len(tenants))]
+                m.free(h, tenants.pop(h))
+                m.unregister(h)
+            elif op == 1 and len(tenants) < 4:
+                h = m.register(0.3)
+                tenants[h] = m.allocate(h, int(rng.integers(5, 35)))
+            counts = np.zeros(P, np.uint32)
+            hot = rng.integers(0, P, size=40)
+            counts[hot] = rng.integers(50, 500, size=40)
+            m.record_access(counts)
+            res = m.run_epoch()
+            c = m.queue_counters()
+            assert c["enqueued"] == (
+                c["drained"] + c["cancelled"] + c["dropped"] + c["depth"]
+            ), (step, c)
+            qp = np.asarray(m._state.queue.page)
+            occ = qp[qp >= 0]
+            assert len(occ) == len(set(occ.tolist())), (step, occ)
+            assert int(np.asarray(res.stats.sentinel)) == 0, step
+        return m.queue_counters()
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_churn_storm_guards_off(self, seed):
+        c = self._storm(seed)
+        assert c["cancelled"] > 0, "storm too tame: no cancels exercised"
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_churn_storm_guards_on(self, seed):
+        self._storm(seed, **self.GUARDED)
+
+    def test_guards_reduce_queue_churn(self):
+        """The point of the guards: strictly less enqueue traffic on the
+        same storm (fewer cancel-requeue cycles), without starving drains."""
+        base = self._storm(2)
+        guarded = self._storm(2, **self.GUARDED)
+        assert guarded["enqueued"] < base["enqueued"], (base, guarded)
+        assert guarded["drained"] > 0
 
 
 class TestScanParity:

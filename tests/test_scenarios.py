@@ -32,6 +32,7 @@ import golden_regen
 from repro.core.baselines import AutoNUMALike, HeMemStatic, TwoLM
 from repro.core.manager import CentralManager
 from repro.core.scenario import (
+    STORM_FAMILIES,
     Arrive,
     Depart,
     PingPongShift,
@@ -41,8 +42,15 @@ from repro.core.scenario import (
     SetMigrationBandwidth,
     ShiftWorkingSet,
     SkewChange,
+    adversarial_scenario,
+    churn_recovery_epochs,
+    diurnal_schedule,
     pingpong_schedule,
+    recovery_epochs,
+    responsiveness_phases,
     run_scenario,
+    storm_health,
+    storm_scenario,
 )
 from repro.core.simulator import OPTANE, ColocationSim, WorkloadSpec
 from repro.core.types import TIER_FAST, TIER_NONE, TIER_SLOW
@@ -391,6 +399,195 @@ class TestBoundedDataPlaneScenario:
         SetMigrationBandwidth(0, 4).apply(sim)
         assert not hasattr(b, "migration_budget")
         sim.run_epoch()  # still runs
+
+
+class TestStormScenarios:
+    """The adversarial storm suite (DESIGN.md §11) through the differential
+    invariant harness: every family, every policy, invariants after every
+    event and epoch — plus construction-time validation of the builders."""
+
+    N_EPOCHS = 24
+
+    @pytest.mark.parametrize("family", STORM_FAMILIES)
+    def test_storm_family_all_policies_invariants(self, family):
+        sc = storm_scenario(family, P, self.N_EPOCHS)
+        for name, make in _backends().items():
+            backend = make()
+            sim = ColocationSim(backend, OPTANE, seed=17)
+            res = run_scenario(sim, sc, on_event=check_invariants)
+            check_invariants(sim)
+            budget = _migration_budget(backend)
+            if budget is not None:
+                assert all(r.migrated_pages <= budget for r in res.history), name
+
+    def test_composite_storm_guarded_bounded_manager(self):
+        """The adversarial composite on the queue-mode manager with every
+        guard ON: invariants hold after each epoch and the queue keeps
+        conserving under hysteresis + admission + cooldown."""
+        sc = adversarial_scenario(P, self.N_EPOCHS, fast_capacity=FAST)
+        mgr = CentralManager(
+            num_pages=P, fast_capacity=FAST, migration_budget=BUDGET,
+            max_tenants=8, sample_period=10,
+            queue_size=2 * BUDGET, migration_bandwidth=BUDGET // 4,
+            migration_latency=1,
+            promote_band=0.12, demote_band=0.04,
+            promote_admission=BUDGET // 4, demote_cooldown=3,
+        )
+        sim = ColocationSim(mgr, OPTANE, seed=19)
+        for epoch in range(sc.n_epochs):
+            for ev in sc.events_at(epoch):
+                ev.apply(sim)
+                check_invariants(sim, ev)
+            sim.run_epoch()
+            check_invariants(sim)
+        assert mgr.queue_counters()["enqueued"] > 0
+
+    def test_storm_builders_validate_at_construction(self):
+        """Degenerate storm parameters fail loudly at build time (the PR 6
+        validation contract), not as silent NaN/empty schedules."""
+        with pytest.raises(KeyError, match="unknown storm family"):
+            storm_scenario("quake", P, 24)
+        with pytest.raises(ValueError, match="n_epochs"):
+            storm_scenario("boundary", P, 4)
+        with pytest.raises(ValueError, match="too thin"):
+            storm_scenario("boundary", 64, 24)
+        for eps in (0.0, 0.5, -0.1, float("nan")):
+            with pytest.raises(ValueError, match="epsilon"):
+                storm_scenario("boundary", P, 24, epsilon=eps)
+        with pytest.raises(ValueError, match="flippers"):
+            storm_scenario("correlated", P, 24, n_flippers=1)
+        with pytest.raises(ValueError, match="burst"):
+            storm_scenario("burst", P, 24, burst=0)
+        for period in (0, -3):
+            with pytest.raises(ValueError, match="period"):
+                pingpong_schedule("t", 4, 12, period)
+            with pytest.raises(ValueError, match="period"):
+                diurnal_schedule("t", 4, 12, period)
+        with pytest.raises(ValueError, match="window is empty"):
+            pingpong_schedule("t", 12, 12, 2)
+        with pytest.raises(ValueError, match="window is empty"):
+            diurnal_schedule("t", 12, 4, 2)
+        for lo, hi in ((-0.1, 0.9), (0.2, 1.5), (float("nan"), 0.9)):
+            with pytest.raises(ValueError, match="diurnal"):
+                diurnal_schedule("t", 0, 12, 4, lo=lo, hi=hi)
+        with pytest.raises(ValueError, match="lo <= hi"):
+            diurnal_schedule("t", 0, 12, 4, lo=0.9, hi=0.2)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_randomized_storm_parameters(self, seed):
+        """Randomized storm shapes (family, flip period, epsilon, burst
+        width) through every policy with invariants at every event."""
+        rng = np.random.default_rng(seed)
+        family = STORM_FAMILIES[int(rng.integers(len(STORM_FAMILIES)))]
+        kw = {}
+        if family == "boundary":
+            kw = dict(epsilon=float(rng.uniform(0.02, 0.4)),
+                      period=int(rng.integers(2, 6)))
+        elif family == "correlated":
+            kw = dict(n_flippers=int(rng.integers(2, 5)),
+                      period=int(rng.integers(2, 6)))
+        elif family == "burst":
+            kw = dict(burst=int(rng.integers(1, 4)))
+        else:
+            kw = dict(lo=float(rng.uniform(0.1, 0.4)),
+                      hi=float(rng.uniform(0.5, 1.0)))
+        sc = storm_scenario(family, P, int(rng.integers(16, 33)), **kw)
+        for name, make in _backends().items():
+            sim = ColocationSim(make(), OPTANE, seed=seed)
+            run_scenario(sim, sc, on_event=check_invariants)
+            check_invariants(sim)
+
+
+class TestResponsiveness:
+    """ResponsivenessStats + storm_health: the recovery metric and the
+    storm-health counters the adversarial bench gates on."""
+
+    def _run_composite(self, **guard_kw):
+        sc = adversarial_scenario(P, 32, fast_capacity=FAST)
+        mgr = CentralManager(
+            num_pages=P, fast_capacity=FAST, migration_budget=BUDGET,
+            max_tenants=8, sample_period=1, exact_sampling=True,
+            queue_size=2 * BUDGET, migration_bandwidth=BUDGET // 4,
+            migration_latency=1, **guard_kw,
+        )
+        sim = ColocationSim(mgr, OPTANE, seed=23)
+        return mgr, run_scenario(sim, sc, on_event=check_invariants)
+
+    def test_phase_flow_counters_sum_to_manager_totals(self):
+        mgr, res = self._run_composite()
+        phases = responsiveness_phases(res)
+        assert [p.label for p in phases] == [p.label for p in res.phases]
+        c = mgr.queue_counters()
+        assert sum(p.enqueued for p in phases) == c["enqueued"]
+        assert sum(p.drained for p in phases) == c["drained"]
+        assert sum(p.cancelled for p in phases) == c["cancelled"]
+        assert c["enqueued"] > 0
+
+    def test_recovery_keys_name_affected_tenants(self):
+        _, res = self._run_composite()
+        phases = responsiveness_phases(res)
+        keyed = [p for p in phases if p.recovery]
+        assert keyed, "storm produced no recovery-scored phases"
+        for p in keyed:
+            assert set(p.recovery) <= {"edge", "flip", "*"}, p.recovery
+            assert all(v >= 0 for v in p.recovery.values())
+        # epoch-0 arrivals have no baseline: never scored
+        assert not phases[0].recovery
+
+    def test_storm_health_summary_is_jsonable_and_consistent(self):
+        _, res = self._run_composite()
+        h = storm_health(res)
+        json.dumps(h)  # must be committable as bench payload
+        worst = max(
+            (v for rec in h["recovery_epochs"].values() for v in rec.values()),
+            default=0,
+        )
+        assert h["worst_recovery_epochs"] == worst
+        assert h["cancel_ratio"] == pytest.approx(
+            h["cancelled"] / max(h["drained"], 1))
+        assert h["pingpong_rate"] == pytest.approx(
+            h["cancelled"] / max(h["enqueued"], 1))
+
+    def test_recovery_epochs_reexported_by_hillclimb(self):
+        """The PR 8 online-tuner metric moved here; the tuner re-exports it
+        so existing call sites keep working."""
+        from repro.launch.hillclimb import recovery_epochs as tuner_metric
+        assert tuner_metric is recovery_epochs
+
+    def test_churn_recovery_counts_epochs_to_balance(self):
+        """Queue-axis recovery: first epoch at/after the event whose
+        enqueue/drain balance is non-positive; never = whole window."""
+        from types import SimpleNamespace
+
+        def _h(flows):
+            return [SimpleNamespace(queue_enqueued=e, queue_drained=d)
+                    for e, d in flows]
+
+        # storm at epoch 2, balance closes at epoch 5
+        h = _h([(4, 4), (4, 4), (30, 4), (20, 4), (9, 4), (4, 4), (4, 4)])
+        assert churn_recovery_epochs(h, 2) == 3
+        # already balanced at the event: instant
+        assert churn_recovery_epochs(h, 5) == 0
+        # never balances: scores the remaining window
+        sat = _h([(30, 4)] * 8)
+        assert churn_recovery_epochs(sat, 3) == 5
+
+    def test_churn_recovery_on_live_storm(self):
+        """On the composite storm the flow records feed the metric directly:
+        a guarded manager's balance closes within the run, and the metric
+        agrees with a hand check of the recorded flow columns."""
+        _, res = self._run_composite(
+            promote_band=0.12, demote_band=0.04,
+            promote_admission=2, demote_cooldown=3,
+        )
+        starts = [s for s, _e, _l in res.scenario.phase_spans() if s > 0]
+        for s in starts:
+            rec = churn_recovery_epochs(res.history, s)
+            assert 0 <= rec <= len(res.history) - s
+            if rec < len(res.history) - s:
+                r = res.history[s + rec]
+                assert r.queue_enqueued - r.queue_drained <= 0
 
 
 # ------------------------------------------------------------ golden locks
